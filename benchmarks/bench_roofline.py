@@ -1,0 +1,42 @@
+"""§Roofline: render the dry-run results table (reads dryrun_results.json).
+
+The dry-run itself (launch/dryrun.py) is the producer; this benchmark formats
+the per-(arch × shape × mesh) three-term roofline and flags the dominant
+bottleneck. Run the dry-run first:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+        --out benchmarks/dryrun_results.json
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import CsvEmitter
+
+RESULTS = os.path.join(os.path.dirname(__file__), "dryrun_results.json")
+
+
+def main():
+    emit = CsvEmitter()
+    if not os.path.exists(RESULTS):
+        print("# roofline: dryrun_results.json missing — run the dry-run first")
+        return {}
+    with open(RESULTS) as fh:
+        rows = json.load(fh)
+    ok = [r for r in rows if r.get("status") == "ok"]
+    skipped = [r for r in rows if r.get("status") == "skipped"]
+    errors = [r for r in rows if r.get("status") == "error"]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        emit.add(name, r["step_time"] * 1e6,
+                 f"bottleneck={r['bottleneck']};mfu={100*r['mfu']:.1f}%;"
+                 f"useful={r['useful_ratio']:.2f}")
+    print(f"# roofline: ok={len(ok)} skipped={len(skipped)} errors={len(errors)}")
+    for r in errors:
+        print(f"# ERROR {r['arch']}/{r['shape']}/{r['mesh']}: {r.get('error','')[:120]}")
+    return {"ok": len(ok), "skipped": len(skipped), "errors": len(errors)}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""§Perf (paper side): per-step cost of the solver engines.
+
+Paper-faithful baseline (core.solver scan, one flip per XLA step) vs the
+beyond-paper fused Pallas sweep (interpret mode on CPU — wall numbers are the
+*relative* signal; the TPU roofline for the fused kernel is derived in
+EXPERIMENTS.md §Perf from its VMEM-resident design: per-step HBM traffic → 0
+for N ≤ ~2800, leaving the O(N) VPU/MXU work).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.snowball import default_solver
+from repro.core.solver import solve
+from repro.graphs import complete_bipolar
+from repro.graphs.maxcut import maxcut_to_ising
+from repro.kernels import fused_anneal
+
+from .common import CsvEmitter, time_call
+
+STEPS = 1024
+REPLICAS = 8
+
+
+def run(emit: CsvEmitter) -> dict:
+    out = {}
+    for n in (512, 2000):
+        inst = complete_bipolar(n, seed=n)
+        prob = maxcut_to_ising(inst)
+        steps = STEPS if n <= 1024 else 512
+        for mode in ("rsa", "rwa"):
+            cfg = default_solver(n, steps, mode=mode, num_replicas=REPLICAS)
+            res, secs = time_call(solve, prob, 0, cfg, repeats=2)
+            us = secs / steps * 1e6
+            best = float(np.min(np.asarray(res.best_energy)))
+            emit.add(f"solver/N{n}/{mode}/baseline", us, f"best_E={best:.0f}")
+            out[(n, mode, "baseline")] = us
+        cfg = default_solver(n, steps, mode="rwa", num_replicas=REPLICAS)
+        res, secs = time_call(fused_anneal, prob, 0, cfg, repeats=2)
+        us = secs / steps * 1e6
+        best = float(np.min(np.asarray(res.best_energy)))
+        emit.add(f"solver/N{n}/rwa/fused_interpret", us, f"best_E={best:.0f}")
+        out[(n, "rwa", "fused")] = us
+    return out
+
+
+def run_tempering_comparison(emit: CsvEmitter):
+    """Paper §IV-A: SA vs parallel tempering at equal step budget. PT's swap
+    acceptance is the paper's scaling concern — reported per size."""
+    import jax.numpy as jnp
+    from repro.core.tempering import TemperingConfig, solve_tempering
+
+    out = {}
+    for n in (128, 512):
+        inst = complete_bipolar(n, seed=n + 1)
+        prob = maxcut_to_ising(inst)
+        steps = 2000
+        sa_cfg = default_solver(n, steps, mode="rsa", num_replicas=8)
+        sa, sa_secs = time_call(solve, prob, 0, sa_cfg, repeats=1)
+        pt_cfg = TemperingConfig(num_steps=steps, t_min=0.05,
+                                 t_max=max(n ** 0.5, 4.0), num_replicas=8)
+        pt, pt_secs = time_call(solve_tempering, prob, 0, pt_cfg, repeats=1)
+        sa_best = float(jnp.min(sa.best_energy))
+        pt_best = float(jnp.min(pt.best_energy))
+        emit.add(f"tempering/N{n}/sa", sa_secs / steps * 1e6, f"best_E={sa_best:.0f}")
+        emit.add(f"tempering/N{n}/pt", pt_secs / steps * 1e6,
+                 f"best_E={pt_best:.0f};swap_acc={float(pt.swap_acceptance):.2f}")
+        out[n] = (sa_best, pt_best, float(pt.swap_acceptance))
+    return out
+
+
+def main():
+    emit = CsvEmitter()
+    out = run(emit)
+    out["tempering"] = run_tempering_comparison(emit)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Shared benchmark utilities: timing, baselines, CSV emission.
+
+Baselines implemented per the paper's comparisons:
+  * ``neal_like``  — classic random-scan simulated annealing (the D-Wave Neal
+    baseline of Table II/III is exactly this algorithm on CPU).
+  * ``sync_all``   — naive synchronous all-spin Glauber updates (§III-B): the
+    parallel-update scheme the paper shows oscillates / violates detailed
+    balance. Implemented to reproduce that failure mode.
+  * Snowball ``rsa`` / ``rwa`` — the paper's dual modes (core.solver).
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ising, rng
+from repro.core.pwl import exact_flip_probability
+from repro.core.schedules import Schedule
+
+
+def time_call(fn, *args, repeats: int = 3, **kw):
+    """(result, best_seconds). fn must block (we call block_until_ready)."""
+    result = None
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        result = fn(*args, **kw)
+        jax.tree.map(lambda x: x.block_until_ready()
+                     if hasattr(x, "block_until_ready") else x, result)
+        best = min(best, time.perf_counter() - t0)
+    return result, best
+
+
+@partial(jax.jit, static_argnames=("num_steps", "num_replicas", "schedule"))
+def sync_all_spin_anneal(problem: ising.IsingProblem, seed, num_steps: int,
+                         num_replicas: int, schedule: Schedule):
+    """Naive synchronous all-spin Glauber (paper §III-B / Eq. 4-5).
+
+    Every spin updates simultaneously from the same configuration — the
+    transition kernel that violates detailed balance and exhibits period-2
+    oscillation. Used as the convergence-failure baseline.
+    """
+    n = problem.num_spins
+    base = jax.random.fold_in(jax.random.key(0), jnp.asarray(seed, jnp.uint32))
+    keys = jax.vmap(lambda i: rng.stream(base, rng.Salt.REPLICA, i))(
+        jnp.arange(num_replicas))
+    spins0 = jax.vmap(lambda k: ising.random_spins(
+        rng.stream(k, rng.Salt.INIT), (n,)))(keys)
+
+    def step(carry, t):
+        spins, best_e, best_s = carry
+        temperature = schedule(t)
+        u = jax.vmap(lambda s: ising.local_fields(problem, s))(spins)
+        de = 2.0 * spins.astype(jnp.float32) * u
+        p = exact_flip_probability(de, temperature)
+        draw_keys = jax.vmap(lambda k: rng.stream(k, t, rng.Salt.ACCEPT))(keys)
+        us = jax.vmap(lambda k: rng.uniform01(k, (n,)))(draw_keys)
+        flip = us < p
+        spins = jnp.where(flip, -spins, spins).astype(spins.dtype)
+        e = jax.vmap(lambda s: ising.energy(problem, s))(spins)
+        better = e < best_e
+        best_e = jnp.where(better, e, best_e)
+        best_s = jnp.where(better[:, None], spins, best_s)
+        return (spins, best_e, best_s), e
+
+    e0 = jax.vmap(lambda s: ising.energy(problem, s))(spins0)
+    (spins, best_e, best_s), trace = jax.lax.scan(
+        step, (spins0, e0, spins0), jnp.arange(num_steps))
+    return best_e + problem.offset, best_s, trace + problem.offset
+
+
+class CsvEmitter:
+    """Accumulates ``name,us_per_call,derived`` rows (benchmark contract)."""
+
+    def __init__(self):
+        self.rows = []
+
+    def add(self, name: str, us_per_call: float, derived: str):
+        self.rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+    def header(self):
+        print("name,us_per_call,derived", flush=True)

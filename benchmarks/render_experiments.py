@@ -1,0 +1,51 @@
+"""Render EXPERIMENTS.md tables from benchmarks/dryrun_results.json.
+
+    PYTHONPATH=src python -m benchmarks.render_experiments [--mesh pod]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "dryrun_results.json")
+
+
+def render(mesh: str = "pod") -> str:
+    with open(RESULTS) as fh:
+        rows = json.load(fh)
+    out = []
+    out.append("| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+               "bottleneck | useful | roofline MFU | HBM/dev (GiB) | status |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    for r in sorted(rows, key=lambda r: (r["arch"], order.get(r["shape"], 9))):
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | — | "
+                       f"skip: {r['reason'][:48]} |")
+            continue
+        if r["status"] == "error":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | — | "
+                       f"ERROR |")
+            continue
+        m = r["memory_per_device"]
+        hbm = (m["arguments"] + m["outputs"] + m["temps"] - m["aliased"]) / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']*1e3:.2f} | "
+            f"{r['t_memory']*1e3:.2f} | {r['t_collective']*1e3:.2f} | "
+            f"{r['bottleneck']} | {r['useful_ratio']:.2f} | {100*r['mfu']:.1f}% | "
+            f"{hbm:.2f} | ok |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod", choices=("pod", "multipod"))
+    args = ap.parse_args()
+    print(render(args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (bench_fig14_incremental, bench_fig15_bitplane,
+                   bench_roofline, bench_solver_perf, bench_table2_gset,
+                   bench_table3_tts)
+
+    print("name,us_per_call,derived")
+    suites = [
+        ("table2_gset", bench_table2_gset.main),       # Table II quality
+        ("table3_tts", bench_table3_tts.main),         # Table III TTS(0.99)
+        ("fig14_incremental", bench_fig14_incremental.main),  # Fig 14
+        ("fig15_bitplane", bench_fig15_bitplane.main),        # Fig 15 + Fig 8
+        ("solver_perf", bench_solver_perf.main),       # §Perf solver engines
+        ("roofline", bench_roofline.main),             # §Roofline table
+    ]
+    for name, fn in suites:
+        t0 = time.time()
+        print(f"# ==== {name} ====", flush=True)
+        try:
+            fn()
+        except Exception as e:  # keep the harness running; report at the end
+            print(f"# SUITE-ERROR {name}: {type(e).__name__}: {e}", flush=True)
+        print(f"# ==== {name} done in {time.time()-t0:.1f}s ====", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""The paper's technique as a framework feature: Ising-based MoE expert
+placement (balanced graph partitioning, paper §II-A motivation).
+
+1. Run a short training burst of the granite-moe smoke model and collect
+   router co-activation statistics.
+2. Build the expert traffic matrix (bytes exchanged if co-activated experts
+   live on different devices).
+3. Solve the balanced partition with Snowball's dual-mode solver (recursive
+   bisection) and compare cross-device traffic vs the default round-robin
+   placement that EP sharding would use.
+
+    PYTHONPATH=src python examples/expert_placement.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import placement
+from repro.data import DataConfig, SyntheticLMData
+from repro.models import forward, init_params, model_specs
+
+
+def collect_router_stats(cfg, params, data, steps=4):
+    """Mean expert load + sampled co-activation from forward passes."""
+    probs = []
+    for step in range(steps):
+        batch = data.batch(step)
+        out = forward(cfg, params, tokens=batch["tokens"])
+        probs.append(np.asarray(out.expert_load))  # (n_moe_blocks, E)
+    return np.concatenate(probs, axis=0)
+
+
+def main():
+    cfg = get_config("granite-moe-1b-a400m", smoke=True)
+    params = init_params(model_specs(cfg), jax.random.key(0))
+    data = SyntheticLMData(cfg, DataConfig(seed=0, global_batch=4, seq_len=64))
+
+    loads = collect_router_stats(cfg, params, data)
+    # Traffic proxy: co-activation of experts weighted by their loads.
+    C = placement.expert_traffic_matrix(loads)
+    E = C.shape[0]
+    D = 4  # devices along the EP axis
+
+    round_robin = np.arange(E) % D
+    rr_cut = placement.cut_bytes(C, round_robin)
+    result = placement.place(C, num_devices=D, seed=0, steps=2000, replicas=8)
+
+    print(f"experts={E} devices={D}")
+    print(f"round-robin cross-device traffic : {rr_cut:10.4f}")
+    print(f"snowball placement traffic       : {result.cut_bytes:10.4f} "
+          f"({100 * (1 - result.cut_bytes / max(rr_cut, 1e-9)):.1f}% less)")
+    print(f"load imbalance                   : {result.imbalance*100:.1f}%")
+    print(f"assignment: {result.assignment.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Snowball core: the paper's contribution as composable JAX modules."""
+from .ising import (  # noqa: F401
+    IsingProblem, energy, local_fields, delta_energies,
+    incremental_field_update, random_spins, brute_force_ground_state,
+)
+from .bitplane import (  # noqa: F401
+    BitPlanes, encode_couplings, decode_couplings, pack_spins,
+    local_fields_from_planes,
+)
+from .mcmc import ChainState, MCMCConfig, init_chain, step, rsa_step, rwa_step  # noqa: F401
+from .pwl import (  # noqa: F401
+    make_pwl_sigmoid, make_flip_probability, exact_flip_probability,
+    pwl_flip_probability, pwl_error_bound,
+)
+from .schedules import Schedule, linear, geometric, cosine, constant  # noqa: F401
+from .solver import SolverConfig, SolveResult, solve, solve_many  # noqa: F401
+from . import tts  # noqa: F401
+from . import placement  # noqa: F401
+from .refine import greedy_descent  # noqa: F401
+from .tempering import TemperingConfig, solve_tempering  # noqa: F401

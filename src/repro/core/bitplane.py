@@ -1,0 +1,155 @@
+"""Signed bit-plane representation of the coupling matrix (paper §IV-B1).
+
+    J_ij = Σ_{b=0}^{B-1} 2^b (B_b⁺(i,j) − B_b⁻(i,j))            (Eq. 13)
+
+Planes are 1-bit and packed 32 couplers per ``uint32`` word (the FPGA packs 64;
+32 keeps ``lax.population_count`` on the widest native CPU/TPU integer lane).
+Precision grows memory *linearly* in B while the datapath stays 1-bit — the
+paper's third design consideration. The local-field initialization uses the
+Hamming-weight identities (Eq. 14–16):
+
+    m_P = popcount(P_word)        o_P = popcount(P_word & x_word)
+    Σ_{j∈word, B⁺=1} s_j = 2 o_P − m_P     (and analogously for B⁻)
+
+so ``u_i^(J) = Σ_b Σ_w 2^b [(2o_P − m_P) − (2o_N − m_N)]``.
+
+This module is the pure-jnp oracle; ``repro.kernels.bitplane_field`` is the
+Pallas/TPU kernel that tiles the same math through VMEM.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BitPlanes:
+    """Packed signed bit-planes of an integer coupling matrix.
+
+    ``pos``/``neg``: (B, N, W) uint32 with W = ceil(N / 32); bit ``j % 32`` of
+    word ``j // 32`` in row i of plane b holds B_b^±(i, j). J symmetric ⇒ the
+    row-major and column-major layouts of the paper coincide; ``planes.pos[b]``
+    serves both the streaming init (rows) and the incremental update (columns).
+    """
+
+    pos: jax.Array
+    neg: jax.Array
+    num_spins: int
+
+    def tree_flatten(self):
+        return (self.pos, self.neg), (self.num_spins,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(pos=children[0], neg=children[1], num_spins=aux[0])
+
+    @property
+    def num_planes(self) -> int:
+        return self.pos.shape[0]
+
+    @property
+    def num_words(self) -> int:
+        return self.pos.shape[-1]
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.pos.size + self.neg.size) * 4
+
+
+def _pack_bits(bits: np.ndarray) -> np.ndarray:
+    """Pack a (..., N) {0,1} array into (..., ceil(N/32)) uint32, LSB-first."""
+    n = bits.shape[-1]
+    pad = (-n) % WORD_BITS
+    if pad:
+        bits = np.concatenate([bits, np.zeros(bits.shape[:-1] + (pad,), bits.dtype)], axis=-1)
+    words = bits.reshape(bits.shape[:-1] + (-1, WORD_BITS)).astype(np.uint64)
+    shifts = (np.uint64(1) << np.arange(WORD_BITS, dtype=np.uint64))
+    return (words * shifts).sum(axis=-1).astype(np.uint32)
+
+
+def encode_couplings(J: np.ndarray, num_planes: int) -> BitPlanes:
+    """Sign-magnitude bit-plane encoding of an integer matrix (Eq. 13).
+
+    Requires |J_ij| < 2**num_planes; raises otherwise (the hardware would
+    saturate — we refuse instead so tests catch precision misconfiguration).
+    """
+    J = np.asarray(J)
+    Ji = np.rint(J).astype(np.int64)
+    if not np.array_equal(Ji, J):
+        raise ValueError("bit-plane encoding requires integer couplings (pre-scale first)")
+    limit = 1 << num_planes
+    if np.abs(Ji).max(initial=0) >= limit:
+        raise ValueError(f"|J|max={np.abs(Ji).max()} needs more than {num_planes} planes")
+    n = Ji.shape[0]
+    mag = np.abs(Ji)
+    sign_pos = Ji > 0
+    sign_neg = Ji < 0
+    pos_planes = []
+    neg_planes = []
+    for b in range(num_planes):
+        bit = ((mag >> b) & 1).astype(np.uint8)
+        pos_planes.append(_pack_bits(bit * sign_pos))
+        neg_planes.append(_pack_bits(bit * sign_neg))
+    return BitPlanes(
+        pos=jnp.asarray(np.stack(pos_planes)),
+        neg=jnp.asarray(np.stack(neg_planes)),
+        num_spins=n,
+    )
+
+
+def decode_couplings(planes: BitPlanes) -> np.ndarray:
+    """Inverse of :func:`encode_couplings` (exact; used by round-trip tests)."""
+    pos = np.asarray(planes.pos)
+    neg = np.asarray(planes.neg)
+    n = planes.num_spins
+    out = np.zeros((n, n), dtype=np.int64)
+    for b in range(planes.num_planes):
+        for arr, sgn in ((pos[b], 1), (neg[b], -1)):
+            bits = ((arr[..., :, None] >> np.arange(WORD_BITS, dtype=np.uint32)) & 1).astype(np.int64)
+            bits = bits.reshape(n, -1)[:, :n]
+            out += sgn * (1 << b) * bits
+    return out
+
+
+def pack_spins(spins: jax.Array) -> jax.Array:
+    """Encode ±1 spins as bits x_j=(s_j+1)/2 packed into uint32 words (§IV-B)."""
+    x = ((spins + 1) // 2).astype(jnp.uint32)
+    n = x.shape[-1]
+    pad = (-n) % WORD_BITS
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros(x.shape[:-1] + (pad,), jnp.uint32)], axis=-1)
+    words = x.reshape(x.shape[:-1] + (-1, WORD_BITS))
+    shifts = (jnp.uint32(1) << jnp.arange(WORD_BITS, dtype=jnp.uint32))
+    return (words * shifts).sum(axis=-1).astype(jnp.uint32)
+
+
+def local_fields_from_planes(planes: BitPlanes, spins: jax.Array) -> jax.Array:
+    """u_i^(J) from packed planes via Hamming-weight accumulation (Eq. 14–16).
+
+    ``spins``: (..., N) ±1. Returns (..., N) float32. Pure-jnp oracle for the
+    Pallas kernel; also the reference implementation for the popcount math.
+    """
+    xw = pack_spins(spins)  # (..., W)
+    popc = jax.lax.population_count
+    # (B, N, W) plane words against (..., 1, W) spin words.
+    xw_b = xw[..., None, :]
+
+    def per_plane(carry, bw):
+        pos_b, neg_b = bw  # (N, W) each
+        m_p = popc(pos_b).astype(jnp.int32).sum(-1)  # (N,)
+        m_n = popc(neg_b).astype(jnp.int32).sum(-1)
+        o_p = popc(pos_b & xw_b).astype(jnp.int32).sum(-1)  # (..., N)
+        o_n = popc(neg_b & xw_b).astype(jnp.int32).sum(-1)
+        contrib = (2 * o_p - m_p) - (2 * o_n - m_n)  # (..., N)
+        return carry, contrib
+
+    _, contribs = jax.lax.scan(per_plane, 0, (planes.pos, planes.neg))
+    weights = jnp.float32(2.0) ** jnp.arange(planes.num_planes, dtype=jnp.float32)
+    # contribs: (B, ..., N) -> weighted sum over planes.
+    return jnp.tensordot(weights, contribs.astype(jnp.float32), axes=(0, 0))

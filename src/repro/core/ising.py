@@ -1,0 +1,126 @@
+"""Ising problem definitions and Hamiltonian (paper §II-B).
+
+The Ising Hamiltonian over spins ``s ∈ {-1,+1}^N`` is
+
+    H(s) = -Σ_{i<j} J_ij s_i s_j - Σ_i h_i s_i
+         = -1/2 sᵀ J s - hᵀ s          (J symmetric, zero diagonal)
+
+The *local field* at spin i is ``u_i = h_i + Σ_{j≠i} J_ij s_j`` and the flip
+energy change is ``ΔE_i = H(s^(i→-i)) - H(s) = 2 s_i u_i`` (paper Eq. 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SPIN_DTYPE = jnp.int8
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class IsingProblem:
+    """An Ising instance: symmetric couplings ``J`` (zero diag) and fields ``h``.
+
+    ``J`` is stored dense (all-to-all coupled machine, paper §III-A); sparse
+    problem graphs simply have zero entries — no minor embedding is ever needed,
+    which is the paper's first design consideration.
+    """
+
+    couplings: jax.Array  # (N, N) float32, symmetric, zero diagonal
+    fields: jax.Array  # (N,) float32
+    offset: float = 0.0  # constant energy offset (e.g. from Max-Cut mapping)
+
+    def tree_flatten(self):
+        return (self.couplings, self.fields), (self.offset,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(couplings=children[0], fields=children[1], offset=aux[0])
+
+    @property
+    def num_spins(self) -> int:
+        return self.couplings.shape[-1]
+
+    @staticmethod
+    def validate(J: np.ndarray, h: np.ndarray) -> None:
+        if J.ndim != 2 or J.shape[0] != J.shape[1]:
+            raise ValueError(f"J must be square, got {J.shape}")
+        if h.shape != (J.shape[0],):
+            raise ValueError(f"h shape {h.shape} incompatible with J {J.shape}")
+        if not np.allclose(J, J.T):
+            raise ValueError("J must be symmetric")
+        if not np.allclose(np.diag(J), 0.0):
+            raise ValueError("J must have zero diagonal")
+
+    @classmethod
+    def create(cls, J, h=None, offset: float = 0.0, check: bool = True) -> "IsingProblem":
+        J = np.asarray(J, dtype=np.float32)
+        if h is None:
+            h = np.zeros(J.shape[0], dtype=np.float32)
+        h = np.asarray(h, dtype=np.float32)
+        if check:
+            cls.validate(J, h)
+        return cls(couplings=jnp.asarray(J), fields=jnp.asarray(h), offset=float(offset))
+
+
+def energy(problem: IsingProblem, spins: jax.Array) -> jax.Array:
+    """H(s); ``spins`` is (..., N) in {-1,+1}. Returns (...,)."""
+    s = spins.astype(jnp.float32)
+    Js = jnp.einsum("ij,...j->...i", problem.couplings, s)
+    pair = -0.5 * jnp.einsum("...i,...i->...", s, Js)
+    field = -jnp.einsum("i,...i->...", problem.fields, s)
+    return pair + field
+
+
+def local_fields(problem: IsingProblem, spins: jax.Array) -> jax.Array:
+    """u_i = h_i + Σ_j J_ij s_j, computed from scratch (paper Eq. 11)."""
+    s = spins.astype(jnp.float32)
+    return jnp.einsum("ij,...j->...i", problem.couplings, s) + problem.fields
+
+
+def delta_energies(problem: IsingProblem, spins: jax.Array, u: Optional[jax.Array] = None) -> jax.Array:
+    """ΔE_i = 2 s_i u_i for every candidate single-spin flip (paper Eq. 2)."""
+    if u is None:
+        u = local_fields(problem, spins)
+    return 2.0 * spins.astype(jnp.float32) * u
+
+
+def incremental_field_update(J: jax.Array, u: jax.Array, j: jax.Array, s_old_j: jax.Array) -> jax.Array:
+    """u'_i = u_i - 2 J_ij s_j_old after flipping spin j (paper Eq. 12/17).
+
+    Θ(N) instead of the Θ(N²) from-scratch recompute; J symmetric so the row
+    J[j] equals the column J[:, j] the hardware streams (DESIGN.md §2).
+    """
+    row = jnp.take(J, j, axis=0)  # (N,)
+    return u - 2.0 * row * s_old_j.astype(u.dtype)
+
+
+def random_spins(key: jax.Array, shape) -> jax.Array:
+    """Uniform random ±1 spin configuration."""
+    bits = jax.random.bernoulli(key, 0.5, shape)
+    return jnp.where(bits, 1, -1).astype(SPIN_DTYPE)
+
+
+@partial(jax.jit, static_argnames=("n",))
+def _brute_force_impl(J, h, n):
+    idx = jnp.arange(2**n)
+    bits = (idx[:, None] >> jnp.arange(n)[None, :]) & 1
+    spins = (2 * bits - 1).astype(jnp.float32)
+    Js = spins @ J
+    e = -0.5 * jnp.einsum("ki,ki->k", spins, Js) - spins @ h
+    k = jnp.argmin(e)
+    return e[k], spins[k].astype(SPIN_DTYPE), e
+
+
+def brute_force_ground_state(problem: IsingProblem):
+    """Exhaustive ground-state search (tests only; N ≤ ~20)."""
+    n = problem.num_spins
+    if n > 24:
+        raise ValueError("brute force limited to N<=24")
+    e, s, all_e = _brute_force_impl(problem.couplings, problem.fields, n)
+    return float(e) + problem.offset, np.asarray(s), np.asarray(all_e) + problem.offset

@@ -1,0 +1,149 @@
+"""Dual-mode MCMC spin selection with asynchronous single-spin updates (paper Alg. 1).
+
+Mode I  — **RSA** (random-scan): select a site uniformly (Eq. 22), accept the
+flip with the Glauber probability (Eq. 2/26). Satisfies detailed balance w.r.t.
+the Gibbs distribution π_T (paper Eq. 6–9).
+
+Mode II — **RWA** (roulette-wheel): evaluate all N candidate flip probabilities
+in parallel, select exactly one index with probability ``p_i / Σ_j p_j``
+(Eq. 10/29) and flip it *deterministically* (rejection-free). An optional
+*uniformized* variant performs a null transition with probability ``1 − W/W*``
+(W* = N), which restores invariance of the Gibbs distribution (paper §IV-B3c).
+If the aggregate weight W is numerically degenerate (≤ 0 or non-finite) the
+kernel falls back to a single random-scan update (Alg. 1 lines 10–14).
+
+Both modes flip at most one spin per step and propagate its effect to every
+local field immediately via the incremental rule ``u_i ← u_i − 2 J_ij s_j_old``
+(Eq. 27/31) — the asynchronous-update semantics of the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ising, rng
+from .pwl import FlipProbFn, exact_flip_probability
+
+
+class ChainState(NamedTuple):
+    """State of one Markov chain (one replica)."""
+
+    spins: jax.Array       # (N,) int8 ±1
+    fields: jax.Array      # (N,) f32 — full local field u_i = u_i^(J) + h_i
+    energy: jax.Array      # () f32 — H(s), tracked incrementally
+    best_energy: jax.Array # () f32
+    best_spins: jax.Array  # (N,) int8
+    num_flips: jax.Array   # () int32 — accepted flips (diagnostics)
+
+
+class StepInfo(NamedTuple):
+    site: jax.Array      # () int32 — selected spin
+    accepted: jax.Array  # () bool
+    temperature: jax.Array  # () f32
+
+
+@dataclasses.dataclass(frozen=True)
+class MCMCConfig:
+    """Static configuration of the dual-mode engine."""
+
+    mode: str = "rwa"              # "rsa" | "rwa"
+    uniformized: bool = False      # RWA only: uniformized CTMC variant
+    flip_prob: FlipProbFn = exact_flip_probability  # exact or PWL (paper LUT)
+
+    def __post_init__(self):
+        if self.mode not in ("rsa", "rwa"):
+            raise ValueError(f"mode must be 'rsa' or 'rwa', got {self.mode!r}")
+
+
+def init_chain(problem: ising.IsingProblem, spins: jax.Array) -> ChainState:
+    """Local-field initialization from scratch (Alg. 1 lines 2–3)."""
+    u = ising.local_fields(problem, spins)
+    e = ising.energy(problem, spins)
+    return ChainState(
+        spins=spins.astype(ising.SPIN_DTYPE),
+        fields=u.astype(jnp.float32),
+        energy=e.astype(jnp.float32),
+        best_energy=e.astype(jnp.float32),
+        best_spins=spins.astype(ising.SPIN_DTYPE),
+        num_flips=jnp.int32(0),
+    )
+
+
+def _apply_flip(problem: ising.IsingProblem, state: ChainState, j: jax.Array,
+                accept: jax.Array, delta_e: jax.Array) -> ChainState:
+    """Asynchronous single-spin update + incremental field maintenance."""
+    s_old_j = jnp.take(state.spins, j)  # pre-flip spin cache (Alg. 1 line 15/22)
+    acc_f = accept.astype(jnp.float32)
+    new_spins = state.spins.at[j].set(
+        jnp.where(accept, -s_old_j, s_old_j).astype(state.spins.dtype))
+    row = jnp.take(problem.couplings, j, axis=0)  # == column j (J symmetric)
+    new_fields = state.fields - (2.0 * acc_f * s_old_j.astype(jnp.float32)) * row
+    new_energy = state.energy + acc_f * delta_e
+    better = new_energy < state.best_energy
+    return ChainState(
+        spins=new_spins,
+        fields=new_fields,
+        energy=new_energy,
+        best_energy=jnp.where(better, new_energy, state.best_energy),
+        best_spins=jnp.where(better, new_spins, state.best_spins),
+        num_flips=state.num_flips + accept.astype(jnp.int32),
+    )
+
+
+def rsa_step(problem: ising.IsingProblem, state: ChainState, key: jax.Array,
+             temperature: jax.Array, config: MCMCConfig) -> tuple[ChainState, StepInfo]:
+    """Mode I: random-scan selection + stochastic Glauber accept (paper §IV-B3b)."""
+    n = problem.num_spins
+    j = rng.uniform_index(rng.stream(key, rng.Salt.SITE), n)
+    u_j = jnp.take(state.fields, j)
+    s_j = jnp.take(state.spins, j).astype(jnp.float32)
+    delta_e = 2.0 * s_j * u_j  # Eq. 24
+    p = config.flip_prob(delta_e, temperature)  # Eq. 25
+    accept = rng.uniform01(rng.stream(key, rng.Salt.ACCEPT)) < p  # Eq. 26
+    new_state = _apply_flip(problem, state, j, accept, delta_e)
+    return new_state, StepInfo(site=j, accepted=accept, temperature=jnp.float32(temperature))
+
+
+def rwa_step(problem: ising.IsingProblem, state: ChainState, key: jax.Array,
+             temperature: jax.Array, config: MCMCConfig) -> tuple[ChainState, StepInfo]:
+    """Mode II: roulette-wheel selection + deterministic flip (paper §IV-B3c)."""
+    n = problem.num_spins
+    delta_e_all = 2.0 * state.spins.astype(jnp.float32) * state.fields  # Alg. 1 line 7
+    p_all = config.flip_prob(delta_e_all, temperature)  # Alg. 1 line 8
+    total = jnp.sum(p_all)  # W, Eq. 28
+    degenerate = (total <= 0) | ~jnp.isfinite(total)  # Alg. 1 line 9
+
+    # Roulette wheel: r ∈ [0, W); first j with cumsum(p)[j] > r.
+    wheel = jnp.cumsum(p_all)
+    r = rng.uniform01(rng.stream(key, rng.Salt.ROULETTE)) * jnp.where(degenerate, 1.0, total)
+    j_rw = jnp.clip(jnp.searchsorted(wheel, r, side="right"), 0, n - 1).astype(jnp.int32)
+
+    if config.uniformized:
+        # Null transition with probability 1 − W/W*, W* = N (uniformized CTMC).
+        coin = rng.uniform01(rng.stream(key, rng.Salt.UNIFORMIZE)) * jnp.float32(n)
+        accept_rw = coin < total
+        # With uniformization, W = 0 ⇒ always a null transition.
+        j = j_rw
+        accept = jnp.where(degenerate, False, accept_rw)
+    else:
+        # Fallback: conventional random-scan single-site update (Alg. 1 lines 10–14).
+        j_fb = rng.uniform_index(rng.stream(key, rng.Salt.SITE), n)
+        p_fb = jnp.take(p_all, j_fb)
+        accept_fb = rng.uniform01(rng.stream(key, rng.Salt.ACCEPT)) < p_fb
+        j = jnp.where(degenerate, j_fb, j_rw)
+        accept = jnp.where(degenerate, accept_fb, True)
+
+    delta_e = jnp.take(delta_e_all, j)
+    new_state = _apply_flip(problem, state, j, accept, delta_e)
+    return new_state, StepInfo(site=j, accepted=accept, temperature=jnp.float32(temperature))
+
+
+def step(problem: ising.IsingProblem, state: ChainState, key: jax.Array,
+         temperature: jax.Array, config: MCMCConfig) -> tuple[ChainState, StepInfo]:
+    """One dual-mode Monte Carlo step (mode is static — one datapath, two schemes)."""
+    if config.mode == "rsa":
+        return rsa_step(problem, state, key, temperature, config)
+    return rwa_step(problem, state, key, temperature, config)

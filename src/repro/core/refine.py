@@ -1,0 +1,49 @@
+"""Greedy 1-opt post-processing (beyond-paper quality polish).
+
+After annealing, repeatedly flip the single spin with the most negative
+ΔE = 2 s_i u_i until no improving flip exists — a deterministic descent that
+costs Θ(N) per flip with the same incremental local-field update the paper's
+hardware uses (Eq. 12). Ising machines commonly attach such a local-search
+stage; it never hurts the cut and typically recovers the last fraction of a
+percent the stochastic schedule leaves on the table.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ising
+
+
+@partial(jax.jit, static_argnames=("max_flips",))
+def greedy_descent(problem: ising.IsingProblem, spins: jax.Array,
+                   max_flips: int = 512):
+    """spins: (..., N) ±1. Returns (refined spins, refined energy)."""
+
+    def one_chain(s):
+        u = ising.local_fields(problem, s)
+        e = ising.energy(problem, s)
+
+        def body(carry):
+            s, u, e, _, count = carry
+            de = 2.0 * s.astype(jnp.float32) * u
+            j = jnp.argmin(de)
+            improving = de[j] < -1e-6
+            s_old = s[j]
+            s = jnp.where(improving, s.at[j].set(-s_old), s)
+            row = jnp.take(problem.couplings, j, axis=0)
+            u = jnp.where(improving, u - 2.0 * row * s_old.astype(u.dtype), u)
+            e = jnp.where(improving, e + de[j], e)
+            return s, u, e, improving, count + 1
+
+        s, u, e, _, _ = jax.lax.while_loop(
+            lambda c: c[3] & (c[4] < max_flips), body,
+            (s, u, e, jnp.bool_(True), jnp.int32(0)))
+        return s, e
+
+    flat = spins.reshape(-1, spins.shape[-1])
+    s_out, e_out = jax.vmap(one_chain)(flat)
+    return (s_out.reshape(spins.shape),
+            e_out.reshape(spins.shape[:-1]) + problem.offset)

@@ -1,0 +1,61 @@
+"""Stateless counter-based RNG (paper §IV-B3d).
+
+Snowball's hardware draws every variate as a pure function of a global 64-bit
+seed and a small set of indices (annealing stage k, iteration t, salt r) —
+exactly the semantics of JAX's threefry counter RNG with ``fold_in``. Each
+logical stream (site-selection, accept/reject, roulette radius, replica id) has
+a fixed salt so independent numbers are produced in parallel with no shared
+state, mirroring the paper's argument (i) for statelessness.
+"""
+from __future__ import annotations
+
+from enum import IntEnum
+
+import jax
+import jax.numpy as jnp
+
+
+class Salt(IntEnum):
+    """Purpose-specific salts (paper: 'a purpose-specific salt r')."""
+
+    SITE = 0          # which spin index to visit (random-scan, Eq. 22)
+    ACCEPT = 1        # accept/reject uniform (Eq. 26)
+    ROULETTE = 2      # roulette radius r ∈ [0, W) (§IV-B3c)
+    UNIFORMIZE = 3    # null-transition coin of the uniformized chain
+    INIT = 4          # initial spin configuration
+    REPLICA = 5       # replica stream split
+    PROBLEM = 6       # problem/instance generation
+
+
+def base_key(seed: int) -> jax.Array:
+    """Global 64-bit seed supplied by the host."""
+    return jax.random.key(seed)
+
+
+def stream(key: jax.Array, *indices) -> jax.Array:
+    """Pure function (seed, i0, i1, ...) -> key. No RNG state is carried."""
+    for ix in indices:
+        key = jax.random.fold_in(key, jnp.asarray(ix, dtype=jnp.uint32))
+    return key
+
+
+def uniform_index(key: jax.Array, n: int) -> jax.Array:
+    """Uniform site index via the paper's fixed-point scaling (Eq. 22):
+    j = floor(u·N / 2³²) for a uniform 32-bit integer u. Computed with exact
+    nested floor-division in 32-bit lanes (x64 is disabled); valid for N ≤ 2¹⁶,
+    beyond which two independent draws are combined."""
+    if n <= (1 << 16):
+        u = jax.random.bits(key, (), jnp.uint32)
+        hi = u >> jnp.uint32(16)
+        lo = u & jnp.uint32(0xFFFF)
+        nn = jnp.uint32(n)
+        # floor(u·N/2³²) == floor((hi·N + floor(lo·N/2¹⁶)) / 2¹⁶); all ≤ 2³².
+        return ((hi * nn + ((lo * nn) >> jnp.uint32(16))) >> jnp.uint32(16)).astype(jnp.int32)
+    # Large N: fall back to JAX's unbiased bounded-int sampler.
+    return jax.random.randint(key, (), 0, n, dtype=jnp.int32)
+
+
+def uniform01(key: jax.Array, shape=()) -> jax.Array:
+    """Uniform real in [0, 1) from a 32-bit draw (Eq. 26 rescaling)."""
+    u = jax.random.bits(key, shape, jnp.uint32)
+    return u.astype(jnp.float32) * jnp.float32(2.0**-32)

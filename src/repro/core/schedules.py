@@ -1,0 +1,54 @@
+"""Programmable simulated-annealing temperature schedules (paper §II-C, Alg. 1, Fig. 15).
+
+The hardware preloads a schedule {T_k}; here the schedule is a pure function
+``T(t)`` evaluated inside the scanned MCMC step, so arbitrarily long runs cost
+O(1) memory. Linear (paper Fig. 4), geometric, cosine (paper Fig. 15a) and
+constant (fixed-temperature sampling, used by the stationarity tests) are provided.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+ScheduleFn = Callable[[jax.Array], jax.Array]  # step t in [0, K) -> temperature
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    kind: str  # "linear" | "geometric" | "cosine" | "constant"
+    t0: float  # initial temperature
+    t1: float  # final temperature
+    steps: int  # K
+
+    def __call__(self, t: jax.Array) -> jax.Array:
+        frac = jnp.minimum(jnp.asarray(t, jnp.float32) / max(self.steps - 1, 1), 1.0)
+        if self.kind == "linear":
+            return self.t0 + (self.t1 - self.t0) * frac
+        if self.kind == "geometric":
+            lo = max(self.t1, 1e-12)
+            ratio = lo / max(self.t0, 1e-12)
+            return jnp.float32(self.t0) * jnp.power(jnp.float32(ratio), frac)
+        if self.kind == "cosine":
+            return self.t1 + 0.5 * (self.t0 - self.t1) * (1.0 + jnp.cos(jnp.pi * frac) )
+        if self.kind == "constant":
+            return jnp.full_like(frac, self.t0)
+        raise ValueError(f"unknown schedule kind {self.kind!r}")
+
+
+def linear(t0: float, t1: float, steps: int) -> Schedule:
+    return Schedule("linear", t0, t1, steps)
+
+
+def geometric(t0: float, t1: float, steps: int) -> Schedule:
+    return Schedule("geometric", t0, t1, steps)
+
+
+def cosine(t0: float, t1: float, steps: int) -> Schedule:
+    return Schedule("cosine", t0, t1, steps)
+
+
+def constant(t: float, steps: int = 1) -> Schedule:
+    return Schedule("constant", t, t, steps)

@@ -1,0 +1,109 @@
+"""Annealed replica-ensemble solver driver (paper Alg. 1 + §V methodology).
+
+Runs R independent Markov chains ("replicas") of the dual-mode MCMC engine
+under a programmable annealing schedule. Replicas map onto the hardware's
+batch/`data` mesh axis (each Bernoulli trial of the TTS methodology, Eq. 32);
+a single chain is the paper's single FPGA kernel.
+
+Tracing is chunked (outer scan emits, inner loop runs ``trace_every`` steps
+silently) so million-step runs keep O(K / trace_every) trace memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ising, mcmc, rng
+from .pwl import make_flip_probability, make_pwl_sigmoid
+from .schedules import Schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    """Hashable (static) solver configuration."""
+
+    num_steps: int
+    schedule: Schedule
+    mode: str = "rwa"               # "rsa" | "rwa"
+    uniformized: bool = False
+    use_pwl: bool = True            # paper-faithful LUT logistic; False = exact sigmoid
+    pwl_segments: int = 64
+    pwl_zmax: float = 8.0
+    num_replicas: int = 8
+    trace_every: int = 0            # 0 disables the energy trace
+
+
+class SolveResult(NamedTuple):
+    best_energy: jax.Array     # (R,) incl. problem offset
+    best_spins: jax.Array      # (R, N)
+    final_energy: jax.Array    # (R,) incl. problem offset
+    num_flips: jax.Array       # (R,)
+    trace_energy: jax.Array    # (num_chunks, R) best-so-far at chunk ends, or (0, R)
+
+    @property
+    def ensemble_best(self) -> jax.Array:
+        return jnp.min(self.best_energy)
+
+
+def _mcmc_config(config: SolverConfig) -> mcmc.MCMCConfig:
+    if config.use_pwl:
+        fp = make_flip_probability(make_pwl_sigmoid(config.pwl_segments, config.pwl_zmax))
+    else:
+        fp = make_flip_probability(None)
+    return mcmc.MCMCConfig(mode=config.mode, uniformized=config.uniformized, flip_prob=fp)
+
+
+def _run(problem: ising.IsingProblem, seed: jax.Array, config: SolverConfig) -> SolveResult:
+    n = problem.num_spins
+    r = config.num_replicas
+    mc = _mcmc_config(config)
+    base = jax.random.fold_in(jax.random.key(0), seed)
+    replica_keys = jax.vmap(lambda i: rng.stream(base, rng.Salt.REPLICA, i))(jnp.arange(r))
+    init_spins = jax.vmap(lambda k: ising.random_spins(rng.stream(k, rng.Salt.INIT), (n,)))(replica_keys)
+    states = jax.vmap(lambda s: mcmc.init_chain(problem, s))(init_spins)
+
+    def one_step(states, t):
+        temperature = config.schedule(t)
+        step_keys = jax.vmap(lambda k: rng.stream(k, t))(replica_keys)
+        new_states, _ = jax.vmap(
+            lambda st, k: mcmc.step(problem, st, k, temperature, mc))(states, step_keys)
+        return new_states
+
+    if config.trace_every and config.trace_every > 0:
+        chunk = config.trace_every
+        num_chunks = max(config.num_steps // chunk, 1)
+
+        def chunk_body(carry, c):
+            states = carry
+            states = jax.lax.fori_loop(
+                0, chunk, lambda i, st: one_step(st, c * chunk + i), states)
+            return states, states.best_energy
+
+        states, trace = jax.lax.scan(chunk_body, states, jnp.arange(num_chunks))
+        trace = trace + problem.offset
+    else:
+        states = jax.lax.fori_loop(0, config.num_steps, lambda t, st: one_step(st, t), states)
+        trace = jnp.zeros((0, r), jnp.float32)
+
+    return SolveResult(
+        best_energy=states.best_energy + problem.offset,
+        best_spins=states.best_spins,
+        final_energy=states.energy + problem.offset,
+        num_flips=states.num_flips,
+        trace_energy=trace,
+    )
+
+
+@partial(jax.jit, static_argnames=("config",))
+def solve(problem: ising.IsingProblem, seed, config: SolverConfig) -> SolveResult:
+    """Jitted entry point. ``seed`` is a dynamic int32 (host 64-bit seed)."""
+    return _run(problem, jnp.asarray(seed, jnp.uint32), config)
+
+
+def solve_many(problem: ising.IsingProblem, seeds, config: SolverConfig) -> SolveResult:
+    """Independent runs (for TTS success-probability estimation)."""
+    return jax.vmap(lambda s: solve(problem, s, config))(jnp.asarray(seeds, jnp.uint32))

@@ -1,0 +1,117 @@
+"""Parallel tempering (replica-exchange MCMC) — the annealing alternative the
+paper discusses and deliberately avoids (§IV-A, [19], [34], [40]).
+
+Implemented as a baseline so the paper's design choice is measurable: R
+replicas at a geometric temperature ladder run the same dual-mode kernels;
+every ``swap_every`` steps adjacent-temperature pairs exchange configurations
+with the Metropolis swap probability
+
+    P_swap = min(1, exp((1/T_i − 1/T_j)(E_i − E_j))).
+
+The paper's argument — that maintaining swap acceptance needs many closely
+spaced replicas as the system grows — shows up directly in the benchmark's
+measured swap-acceptance column.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ising, mcmc, rng
+from .pwl import make_flip_probability, make_pwl_sigmoid
+from .solver import SolveResult
+
+
+@dataclasses.dataclass(frozen=True)
+class TemperingConfig:
+    num_steps: int
+    t_min: float
+    t_max: float
+    num_replicas: int = 8        # temperature-ladder rungs
+    swap_every: int = 10
+    mode: str = "rsa"            # kernel for within-chain moves
+    use_pwl: bool = True
+
+    @property
+    def ladder(self) -> np.ndarray:
+        return np.geomspace(self.t_max, self.t_min, self.num_replicas)
+
+
+class TemperingResult(NamedTuple):
+    best_energy: jax.Array       # (R,)
+    best_spins: jax.Array        # (R, N)
+    final_energy: jax.Array
+    swap_acceptance: jax.Array   # () mean accepted swap fraction
+    num_flips: jax.Array
+
+
+@partial(jax.jit, static_argnames=("config",))
+def solve_tempering(problem: ising.IsingProblem, seed,
+                    config: TemperingConfig) -> TemperingResult:
+    n = problem.num_spins
+    r = config.num_replicas
+    temps = jnp.asarray(config.ladder, jnp.float32)
+    fp = (make_flip_probability(make_pwl_sigmoid()) if config.use_pwl
+          else make_flip_probability(None))
+    mc = mcmc.MCMCConfig(mode=config.mode, flip_prob=fp)
+    base = jax.random.fold_in(jax.random.key(0), jnp.asarray(seed, jnp.uint32))
+    keys = jax.vmap(lambda i: rng.stream(base, rng.Salt.REPLICA, i))(jnp.arange(r))
+    spins0 = jax.vmap(lambda k: ising.random_spins(rng.stream(k, rng.Salt.INIT), (n,)))(keys)
+    states = jax.vmap(lambda s: mcmc.init_chain(problem, s))(spins0)
+
+    def chain_steps(states, t0):
+        def one(t, st):
+            sk = jax.vmap(lambda k: rng.stream(k, t))(keys)
+            new, _ = jax.vmap(lambda s, k, temp: mcmc.step(problem, s, k, temp, mc))(
+                st, sk, temps)
+            return new
+        return jax.lax.fori_loop(t0, t0 + config.swap_every, one, states)
+
+    def swap_phase(states, round_idx):
+        """Metropolis exchange of adjacent rungs (even pairs then odd pairs)."""
+        def try_pairs(states, parity, salt):
+            e = states.energy
+            beta = 1.0 / temps
+            # pair (i, i+1) for i ≡ parity (mod 2)
+            idx = jnp.arange(r - 1)
+            active = (idx % 2) == parity
+            delta = (beta[idx] - beta[idx + 1]) * (e[idx] - e[idx + 1])
+            key = rng.stream(base, rng.Salt.UNIFORMIZE, round_idx, salt)
+            u = rng.uniform01(key, (r - 1,))
+            accept = active & (u < jnp.minimum(jnp.exp(jnp.clip(delta, -80.0, 80.0)), 1.0))
+
+            # Build a permutation that swaps accepted pairs.
+            perm = jnp.arange(r)
+            lo = idx
+            hi = idx + 1
+            perm = perm.at[lo].set(jnp.where(accept, hi, perm[lo]))
+            perm = perm.at[hi].set(jnp.where(accept, lo, perm[hi]))
+            swapped = jax.tree.map(lambda x: x[perm], states)
+            return swapped, accept.sum(), active.sum()
+
+        states, acc_e, n_e = try_pairs(states, 0, 0)
+        states, acc_o, n_o = try_pairs(states, 1, 1)
+        return states, (acc_e + acc_o, n_e + n_o)
+
+    num_rounds = max(config.num_steps // config.swap_every, 1)
+
+    def round_body(carry, round_idx):
+        states, acc, tot = carry
+        states = chain_steps(states, round_idx * config.swap_every)
+        states, (a, t) = swap_phase(states, round_idx)
+        return (states, acc + a, tot + t), None
+
+    (states, acc, tot), _ = jax.lax.scan(
+        round_body, (states, jnp.int32(0), jnp.int32(0)), jnp.arange(num_rounds))
+    return TemperingResult(
+        best_energy=states.best_energy + problem.offset,
+        best_spins=states.best_spins,
+        final_energy=states.energy + problem.offset,
+        swap_acceptance=acc.astype(jnp.float32) / jnp.maximum(tot, 1),
+        num_flips=states.num_flips,
+    )

@@ -1,0 +1,1 @@
+from .compress import CompressionState, compressed_psum_grads, init_compression  # noqa: F401

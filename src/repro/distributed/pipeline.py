@@ -1,0 +1,69 @@
+"""GPipe-style pipeline parallelism over a mesh axis (optional PP support).
+
+``pipeline_apply`` runs a stage function over P pipeline stages (one per mesh
+shard along ``axis``) with M microbatches using the classic GPipe schedule:
+T = M + P − 1 ticks; activations hop stage→stage via ``ppermute``. Designed
+for the multi-pod mesh's ``pod`` axis when a model's per-pod footprint
+requires pipelining instead of wider FSDP (config option ``--pp pod``).
+
+The implementation is numerics-exact w.r.t. the sequential composition of the
+stages (test: tests/test_distributed.py::test_pipeline_matches_sequential).
+Bubble fraction is (P−1)/(M+P−1) — reported by ``bubble_fraction``.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def bubble_fraction(num_microbatches: int, num_stages: int) -> float:
+    return (num_stages - 1) / (num_microbatches + num_stages - 1)
+
+
+def pipeline_apply(stage_fn: Callable, stage_params, x_microbatches: jax.Array,
+                   axis: str) -> jax.Array:
+    """Run inside shard_map: every shard along ``axis`` holds ONE stage's params.
+
+    stage_fn(params, x) -> y, same shape as x (residual-stream stages).
+    x_microbatches: (M, mb, ...) — meaningful on stage 0 (replicated is fine).
+    Returns (M, mb, ...) — meaningful on the LAST stage.
+    """
+    p = jax.lax.axis_size(axis)
+    stage = jax.lax.axis_index(axis)
+    m = x_microbatches.shape[0]
+    ticks = m + p - 1
+    mb_shape = x_microbatches.shape[1:]
+    # Rotate-by-one permutation (stage i -> i+1).
+    fwd_perm = [(i, (i + 1) % p) for i in range(p)]
+
+    def tick(carry, t):
+        inbox, outputs = carry
+        # Stage 0 injects microbatch t (when available); others use the inbox.
+        mb_idx = jnp.clip(t, 0, m - 1)
+        fresh = jax.lax.dynamic_index_in_dim(x_microbatches, mb_idx, 0, keepdims=False)
+        x_in = jnp.where(stage == 0, fresh, inbox)
+        # A stage is active when its microbatch index u = t - stage ∈ [0, m).
+        u = t - stage
+        active = (u >= 0) & (u < m)
+        y = stage_fn(stage_params, x_in)
+        y = jnp.where(active, y, x_in)
+        # Last stage stores its result at slot u.
+        store_idx = jnp.clip(u, 0, m - 1)
+        should_store = active & (stage == p - 1)
+        current = jax.lax.dynamic_index_in_dim(outputs, store_idx, 0, keepdims=False)
+        stored = jnp.where(should_store, y, current)
+        outputs = jax.lax.dynamic_update_index_in_dim(outputs, stored, store_idx, 0)
+        # Ship activations forward for the next tick.
+        inbox = jax.lax.ppermute(y, axis, fwd_perm)
+        return (inbox, outputs), None
+
+    inbox0 = jnp.zeros(mb_shape, x_microbatches.dtype)
+    outputs0 = jnp.zeros((m,) + mb_shape, x_microbatches.dtype)
+    (_, outputs), _ = jax.lax.scan(tick, (inbox0, outputs0), jnp.arange(ticks))
+    # Broadcast final outputs from the last stage to all shards (so callers can
+    # keep a replicated view; a real loss would live on the last stage).
+    marker = (stage == p - 1).astype(outputs.dtype)
+    outputs = jax.lax.psum(outputs * marker, axis)
+    return outputs

@@ -1,0 +1,150 @@
+"""Distributed Snowball: replica ensembles sharded over the mesh via shard_map.
+
+Mapping (DESIGN.md §2): replicas (independent Markov chains = the TTS
+Bernoulli trials) shard over the flattened data axes (`pod` × `data`); the
+coupling matrix J is replicated (or bit-plane packed — 16× smaller — for very
+large N). Every ``exchange_every`` chunks, the globally best configuration is
+broadcast and the *worst* replicas restart from it with fresh noise — an
+elitist restart in the spirit of the paper's ensemble methodology (and unlike
+parallel tempering, it needs no temperature ladder; paper §IV-A discusses why
+PT is avoided).
+
+Fault-tolerance posture: replicas are independent — losing a host removes its
+replicas but never invalidates the ensemble; TTS statistics just lose trials.
+Elastic rescale = re-seeding replica ids (stateless RNG streams).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core import ising, rng
+from ..core.solver import SolveResult, SolverConfig, _mcmc_config
+from ..core import mcmc
+
+
+@dataclasses.dataclass(frozen=True)
+class DistSolverConfig:
+    base: SolverConfig
+    replicas_per_device: int = 1
+    exchange_every: int = 0      # chunks between best-exchange; 0 = never
+    restart_fraction: float = 0.25  # worst fraction restarted at exchange
+
+
+def _chunk_runner(problem, mc, schedule, chunk_steps):
+    """Run `chunk_steps` MCMC steps on a block of replicas (vmapped chains)."""
+
+    def run(states, replica_keys, chunk_idx):
+        def one_step(states, t):
+            temperature = schedule(t)
+            step_keys = jax.vmap(lambda k: rng.stream(k, t))(replica_keys)
+            new_states, _ = jax.vmap(
+                lambda st, k: mcmc.step(problem, st, k, temperature, mc))(states, step_keys)
+            return new_states
+
+        t0 = chunk_idx * chunk_steps
+        return jax.lax.fori_loop(t0, t0 + chunk_steps,
+                                 lambda t, st: one_step(st, t), states)
+
+    return run
+
+
+def solve_distributed(problem: ising.IsingProblem, seed, config: DistSolverConfig,
+                      mesh: Mesh) -> SolveResult:
+    """shard_map annealing over every mesh axis (replica-parallel)."""
+    axes = tuple(mesh.axis_names)
+    num_devices = 1
+    for a in axes:
+        num_devices *= mesh.shape[a]
+    r_local = config.replicas_per_device
+    r_total = r_local * num_devices
+    base_cfg = config.base
+    mc = _mcmc_config(base_cfg)
+    n = problem.num_spins
+    chunk = max(base_cfg.trace_every, 1) if base_cfg.trace_every else 64
+    num_chunks = max(base_cfg.num_steps // chunk, 1)
+    runner = _chunk_runner(problem, mc, base_cfg.schedule, chunk)
+
+    def local_solve(J, h, seed_arr):
+        # Flatten all mesh axes into one linear device index.
+        idx = jnp.int32(0)
+        for a in axes:
+            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        prob = ising.IsingProblem(couplings=J, fields=h, offset=0.0)
+        base = jax.random.fold_in(jax.random.key(0), seed_arr[0])
+        rep_ids = idx * r_local + jnp.arange(r_local)
+        keys = jax.vmap(lambda i: rng.stream(base, rng.Salt.REPLICA, i))(rep_ids)
+        spins0 = jax.vmap(lambda k: ising.random_spins(
+            rng.stream(k, rng.Salt.INIT), (n,)))(keys)
+        states = jax.vmap(lambda s: mcmc.init_chain(prob, s))(spins0)
+
+        def chunk_body(carry, c):
+            states = carry
+            states = runner(states, keys, c)
+            if config.exchange_every:
+                def exchange(states):
+                    # Global best config across ALL devices (psum-of-onehot trick).
+                    local_best = jnp.min(states.best_energy)
+                    global_best = local_best
+                    for a in axes:
+                        global_best = jax.lax.pmin(global_best, a)
+                    is_best = (states.best_energy == global_best)
+                    # Winner-take-all broadcast of the best spins.
+                    local_vote = jnp.where(jnp.any(is_best),
+                                           states.best_spins[jnp.argmax(is_best)],
+                                           jnp.zeros((n,), states.best_spins.dtype))
+                    count = jnp.any(is_best).astype(jnp.int32)
+                    total_vote = local_vote.astype(jnp.int32)
+                    total_count = count
+                    for a in axes:
+                        total_vote = jax.lax.psum(total_vote, a)
+                        total_count = jax.lax.psum(total_count, a)
+                    best_spins = jnp.sign(total_vote).astype(states.spins.dtype)
+                    # Ties can cancel the vote; fall back to local state then.
+                    usable = jnp.any(best_spins != 0) & (total_count > 0)
+                    # Restart the worst replicas from the broadcast best.
+                    order = jnp.argsort(states.energy)
+                    k_restart = max(int(r_local * config.restart_fraction), 1)
+                    worst = order[-k_restart:]
+                    def restart_one(states, j):
+                        spins = jnp.where(usable, best_spins, states.spins[j])
+                        st_j = mcmc.init_chain(prob, spins)
+                        improved = st_j.energy < states.best_energy[j]
+                        new_best_s = jnp.where(improved, st_j.spins,
+                                               states.best_spins[j])
+                        return mcmc.ChainState(
+                            spins=states.spins.at[j].set(st_j.spins),
+                            fields=states.fields.at[j].set(st_j.fields),
+                            energy=states.energy.at[j].set(st_j.energy),
+                            best_energy=states.best_energy.at[j].set(
+                                jnp.minimum(states.best_energy[j], st_j.energy)),
+                            best_spins=states.best_spins.at[j].set(new_best_s),
+                            num_flips=states.num_flips,
+                        )
+                    states = jax.lax.fori_loop(
+                        0, k_restart, lambda i, st: restart_one(st, worst[i]), states)
+                    return states
+
+                states = jax.lax.cond((c + 1) % config.exchange_every == 0,
+                                      exchange, lambda s: s, states)
+            return states, states.best_energy  # (r_local,) per chunk
+
+        states, trace = jax.lax.scan(chunk_body, states, jnp.arange(num_chunks))
+        return (states.best_energy, states.best_spins, states.energy,
+                states.num_flips, trace)
+
+    spec_rep = P()  # replicated inputs
+    out_specs = (P(axes), P(axes), P(axes), P(axes), P(None, axes))
+    fn = jax.jit(jax.shard_map(
+        local_solve, mesh=mesh,
+        in_specs=(spec_rep, spec_rep, spec_rep),
+        out_specs=out_specs, check_vma=False))
+    seed_arr = jnp.asarray([seed], jnp.uint32)
+    be, bs, fe, nf, trace = fn(problem.couplings, problem.fields, seed_arr)
+    return SolveResult(best_energy=be + problem.offset, best_spins=bs,
+                       final_energy=fe + problem.offset, num_flips=nf,
+                       trace_energy=trace + problem.offset)

@@ -1,0 +1,4 @@
+from .maxcut import MaxCutInstance, maxcut_to_ising, cut_value  # noqa: F401
+from .generators import erdos_renyi, small_world, torus_grid, complete_bipolar  # noqa: F401
+from .qubo import qubo_to_ising, ising_to_qubo  # noqa: F401
+from .gset import parse_gset, GSET_SAMPLE  # noqa: F401

@@ -1,0 +1,109 @@
+"""Synthetic problem-graph generators matching Table I's topology families.
+
+Gset instances are Erdős–Rényi / small-world / torus graphs with ±1 edge
+weights; K2000 is the complete graph with uniform ±1 couplings. The real Gset
+files are not redistributable in this offline container, so benchmarks use
+these statistically matched generators (same |V|, |E| target, topology family,
+signed unit weights) — noted in EXPERIMENTS.md. A parser for the real files is
+in :mod:`repro.graphs.gset`.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .maxcut import MaxCutInstance
+
+
+def _rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(np.random.PCG64(seed))
+
+
+def _signed_weights(rng: np.random.Generator, mask: np.ndarray) -> np.ndarray:
+    """Uniform ±1 weights on the upper-triangular edge mask, symmetrized."""
+    n = mask.shape[0]
+    signs = rng.choice(np.array([-1.0, 1.0], np.float32), size=(n, n))
+    w = np.triu(mask, 1) * signs
+    return (w + w.T).astype(np.float32)
+
+
+def erdos_renyi(n: int, num_edges: int, seed: int = 0, signed: bool = True,
+                name: str = "er") -> MaxCutInstance:
+    """G(n, m): exactly ``num_edges`` uniform random edges (G6/G61 family)."""
+    rng = _rng(seed)
+    iu = np.triu_indices(n, 1)
+    total = iu[0].size
+    pick = rng.choice(total, size=min(num_edges, total), replace=False)
+    mask = np.zeros((n, n), np.float32)
+    mask[iu[0][pick], iu[1][pick]] = 1.0
+    mask = mask + mask.T
+    w = _signed_weights(rng, mask) if signed else (np.triu(mask, 1) + np.triu(mask, 1).T)
+    return MaxCutInstance(weights=w, name=name)
+
+
+def small_world(n: int, k: int, rewire_p: float = 0.1, seed: int = 0,
+                signed: bool = True, name: str = "sw") -> MaxCutInstance:
+    """Watts–Strogatz ring lattice with rewiring (G18/G64 family)."""
+    rng = _rng(seed)
+    mask = np.zeros((n, n), np.float32)
+    for d in range(1, k // 2 + 1):
+        idx = np.arange(n)
+        mask[idx, (idx + d) % n] = 1.0
+    # Rewire each lattice edge with probability rewire_p.
+    edges = np.argwhere(mask > 0)
+    for (i, j) in edges:
+        if rng.random() < rewire_p:
+            mask[i, j] = 0.0
+            tgt = int(rng.integers(n))
+            while tgt == i:
+                tgt = int(rng.integers(n))
+            a, b = min(i, tgt), max(i, tgt)
+            mask[a, b] = 1.0
+    mask = np.triu(mask + mask.T, 1)
+    mask = ((mask + mask.T) > 0).astype(np.float32)
+    w = _signed_weights(rng, mask) if signed else np.triu(mask, 1) + np.triu(mask, 1).T
+    return MaxCutInstance(weights=w, name=name)
+
+
+def torus_grid(rows: int, cols: int, seed: int = 0, signed: bool = True,
+               name: str = "torus") -> MaxCutInstance:
+    """2D torus (periodic grid), the G11/G62 family."""
+    rng = _rng(seed)
+    n = rows * cols
+    mask = np.zeros((n, n), np.float32)
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            for (rr, cc) in (((r + 1) % rows, c), (r, (c + 1) % cols)):
+                j = rr * cols + cc
+                if i != j:
+                    a, b = min(i, j), max(i, j)
+                    mask[a, b] = 1.0
+    mask = mask + mask.T
+    w = _signed_weights(rng, mask) if signed else np.triu(mask, 1) + np.triu(mask, 1).T
+    return MaxCutInstance(weights=w, name=name)
+
+
+def complete_bipolar(n: int, seed: int = 0, name: str = "K") -> MaxCutInstance:
+    """Complete graph with J_ij ∈ {−1,+1} uniform — the paper's K2000 (§V-A2)."""
+    rng = _rng(seed)
+    mask = np.ones((n, n), np.float32) - np.eye(n, dtype=np.float32)
+    w = _signed_weights(rng, mask)
+    return MaxCutInstance(weights=w, name=f"{name}{n}")
+
+
+def ground_state_planted_grid(rows: int, cols: int, seed: int = 0,
+                              name: str = "planted") -> tuple[MaxCutInstance, np.ndarray]:
+    """Ferromagnetic torus with a planted bipartition (known optimum), used by
+    tests in the spirit of paper Fig. 4's known-optimum instance."""
+    rng = _rng(seed)
+    inst = torus_grid(rows, cols, seed=seed, signed=False, name=name)
+    planted = rng.choice(np.array([-1, 1], np.int8), size=rows * cols)
+    # Gauge transform w_ij = -w0_ij p_i p_j: H(s) = -Σ w0 (p⊙s)_i (p⊙s)_j is
+    # minimized exactly at s = ±p, so the max cut is attained at the plant.
+    w = (-inst.weights * np.outer(planted, planted)).astype(np.float32)
+    np.fill_diagonal(w, 0.0)
+    from .maxcut import cut_value
+
+    planted_inst = MaxCutInstance(weights=w, name=name)
+    best = float(cut_value(planted_inst, planted))
+    return MaxCutInstance(weights=w, name=name, best_known=best), planted

@@ -1,0 +1,60 @@
+"""Gset benchmark file format parser (paper §V-A2, [59]).
+
+Format: first line ``|V| |E|``; then one line per edge ``i j w`` (1-indexed).
+A small embedded sample (a 10-vertex signed graph in exact Gset syntax) keeps
+the parser tested offline; point :func:`parse_gset` at real downloaded files
+(e.g. web.stanford.edu/~yyye/yyye/Gset/G6) to reproduce Table II on the
+original instances.
+"""
+from __future__ import annotations
+
+import io
+
+import numpy as np
+
+from .maxcut import MaxCutInstance
+
+GSET_SAMPLE = """10 14
+1 2 1
+1 3 -1
+2 4 1
+3 4 1
+4 5 -1
+5 6 1
+6 7 1
+6 8 -1
+7 9 1
+8 9 1
+8 10 -1
+9 10 1
+2 7 1
+3 8 -1
+"""
+
+
+def parse_gset(source, name: str = "gset") -> MaxCutInstance:
+    """Parse a Gset file from a path, file object, or literal string."""
+    if isinstance(source, str) and "\n" in source:
+        fh = io.StringIO(source)
+    elif hasattr(source, "read"):
+        fh = source
+    else:
+        fh = open(source)
+    try:
+        header = fh.readline().split()
+        n, m = int(header[0]), int(header[1])
+        w = np.zeros((n, n), np.float32)
+        count = 0
+        for line in fh:
+            parts = line.split()
+            if not parts:
+                continue
+            i, j, wt = int(parts[0]) - 1, int(parts[1]) - 1, float(parts[2])
+            w[i, j] = wt
+            w[j, i] = wt
+            count += 1
+        if count != m:
+            raise ValueError(f"Gset header declared {m} edges, file had {count}")
+        return MaxCutInstance(weights=w, name=name)
+    finally:
+        fh.close()

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for Snowball's compute hot-spots.
+
+- ``local_field``   — MXU tiled matmul init  u = J s + h      (paper §IV-B2a)
+- ``bitplane_field``— VPU popcount init from packed bit-planes (paper Eq. 14-16)
+- ``sweep``         — fused VMEM-resident multi-step MCMC sweep (paper §IV-B2b/3)
+
+``ops`` holds the jit'd wrappers; ``ref`` the pure-jnp oracles.
+"""
+from . import ops, ref  # noqa: F401
+from .ops import bitplane_field_init, fused_anneal, local_field_init  # noqa: F401

@@ -1,0 +1,115 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``fused_anneal`` is the *optimized* solver backend (beyond-paper, DESIGN.md §2):
+it runs the annealing loop in chunks of the VMEM-resident sweep kernel, with
+uniforms drawn from the same stateless threefry streams as the reference
+engine. ``repro.core.solver.solve`` remains the paper-faithful baseline; both
+are benchmarked side by side in EXPERIMENTS.md §Perf.
+
+On this CPU container kernels run in interpret mode (the Mosaic TPU backend is
+the target); ``interpret=None`` auto-detects.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core import ising, rng
+from ..core.bitplane import BitPlanes, pack_spins
+from ..core.solver import SolverConfig, SolveResult
+from . import bitplane_field as _bitplane_field
+from . import local_field as _local_field
+from . import sweep as _sweep
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _fit_block(n: int, target: int) -> int:
+    """Largest divisor of n that is ≤ target (BlockSpec grids need exact tiling)."""
+    for b in range(min(target, n), 0, -1):
+        if n % b == 0:
+            return b
+    return 1
+
+
+def local_field_init(spins: jax.Array, couplings: jax.Array, bias: jax.Array,
+                     *, interpret: Optional[bool] = None, **kw) -> jax.Array:
+    """Batched u = J s + h via the MXU matmul kernel."""
+    r, n = spins.shape
+    kw.setdefault("block_r", _fit_block(r, 8))
+    kw.setdefault("block_n", _fit_block(n, 256))
+    kw.setdefault("block_k", _fit_block(n, 512))
+    return _local_field.local_field_init(
+        spins, couplings, bias, interpret=_auto_interpret(interpret), **kw)
+
+
+def bitplane_field_init(planes: BitPlanes, spins: jax.Array,
+                        *, interpret: Optional[bool] = None, **kw) -> jax.Array:
+    """Batched u^(J) from packed bit-planes via the popcount kernel."""
+    words = pack_spins(spins)
+    return _bitplane_field.bitplane_field_init(
+        planes.pos, planes.neg, words, interpret=_auto_interpret(interpret), **kw)
+
+
+@partial(jax.jit, static_argnames=("config", "chunk_steps", "block_r", "interpret"))
+def _fused_anneal_impl(problem: ising.IsingProblem, seed: jax.Array,
+                       config: SolverConfig, chunk_steps: int, block_r: int,
+                       interpret: bool) -> SolveResult:
+    n = problem.num_spins
+    r = config.num_replicas
+    base = jax.random.fold_in(jax.random.key(0), seed)
+    replica_keys = jax.vmap(lambda i: rng.stream(base, rng.Salt.REPLICA, i))(jnp.arange(r))
+    spins0 = jax.vmap(lambda k: ising.random_spins(rng.stream(k, rng.Salt.INIT), (n,)))(replica_keys)
+    spins0 = spins0.astype(jnp.float32)
+    u0 = local_field_init(spins0, problem.couplings, problem.fields,
+                          interpret=interpret, block_r=_fit_block(r, block_r))
+    e0 = ising.energy(problem, spins0)
+
+    num_chunks = max(config.num_steps // chunk_steps, 1)
+
+    def chunk(carry, c):
+        u, s, e, be, bs = carry
+        ck = rng.stream(base, rng.Salt.ROULETTE, c)
+        uniforms = rng.uniform01(ck, (chunk_steps, r, 3))
+        steps = c * chunk_steps + jnp.arange(chunk_steps)
+        temps = jax.vmap(config.schedule)(steps).astype(jnp.float32)
+        u, s, e, ce, cs = _sweep.mcmc_sweep(
+            problem.couplings, u, s, e, uniforms, temps,
+            mode=config.mode, block_r=min(block_r, r), interpret=interpret)
+        better = ce < be
+        be = jnp.where(better, ce, be)
+        bs = jnp.where(better[:, None], cs, bs)
+        return (u, s, e, be, bs), be
+
+    init = (u0, spins0, e0, e0, spins0)
+    (u, s, e, be, bs), trace = jax.lax.scan(chunk, init, jnp.arange(num_chunks))
+    return SolveResult(
+        best_energy=be + problem.offset,
+        best_spins=bs.astype(jnp.int8),
+        final_energy=e + problem.offset,
+        num_flips=jnp.zeros((r,), jnp.int32),  # not tracked by the fused path
+        trace_energy=(trace + problem.offset) if config.trace_every else jnp.zeros((0, r)),
+    )
+
+
+def fused_anneal(problem: ising.IsingProblem, seed, config: SolverConfig,
+                 *, chunk_steps: int = 256, block_r: int = 8,
+                 interpret: Optional[bool] = None) -> SolveResult:
+    """Optimized annealing driver on the fused sweep kernel.
+
+    Matches ``core.solver.solve`` semantics (same modes, schedule, TTS usage)
+    up to RNG stream layout; the exact flip-probability (not the PWL) is used
+    inside the kernel. Fallback path for degenerate W follows Alg. 1.
+    """
+    if config.uniformized:
+        raise NotImplementedError("fused path implements plain RSA/RWA (paper's default)")
+    return _fused_anneal_impl(problem, jnp.asarray(seed, jnp.uint32), config,
+                              chunk_steps, block_r, _auto_interpret(interpret))

@@ -1,0 +1,144 @@
+"""Pallas TPU kernel: fused multi-step dual-mode MCMC sweep.
+
+TPU analogue of the paper's on-chip local-field memory (§IV-B2b): the FPGA
+keeps u in BRAM and read-modify-writes it after every flip. A literal
+one-flip-per-XLA-op loop would round-trip u, s through HBM every step; this
+kernel keeps the coupling tile J, the local fields u, and the spins s resident
+in VMEM across ``T`` consecutive MCMC steps, so per-step HBM traffic drops to
+zero for N ≤ ~2800 (f32 J; 16 MiB VMEM) — the same "compute-bound, not
+memory-bound" crossover the paper demonstrates in Fig. 14.
+
+Asynchronous single-spin semantics are preserved exactly: each step selects at
+most one spin per replica, flips it, and applies the incremental update
+u ← u − 2 J[j,:] s_j_old before the next selection (Eq. 27/31).
+
+Randomness is supplied as a precomputed (T, R, 3) tensor of uniforms from the
+stateless threefry streams (site, accept, roulette) — the kernel itself stays
+deterministic and replayable, mirroring the paper's stateless-RNG design.
+
+Grid: replica blocks; J is broadcast (index_map pins block 0) so the pipeline
+loads it once per program.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _flip_prob(de, temp):
+    safe_t = jnp.where(temp > 0, temp, 1.0)
+    warm = jax.nn.sigmoid(-de / safe_t)
+    cold = jnp.where(de < 0, 1.0, jnp.where(de == 0, 0.5, 0.0))
+    return jnp.where(temp > 0, warm, cold).astype(jnp.float32)
+
+
+def _kernel(j_ref, u0_ref, s0_ref, e0_ref, unif_ref, temp_ref,
+            u_out, s_out, e_out, be_out, bs_out, *, num_steps: int, mode: str):
+    n = j_ref.shape[0]
+    J = j_ref[...].astype(jnp.float32)  # (N, N) VMEM-resident
+    u = u0_ref[...].astype(jnp.float32)  # (br, N)
+    s = s0_ref[...].astype(jnp.float32)  # (br, N) ±1
+    e = e0_ref[...].astype(jnp.float32)[:, 0]  # (br,)
+    be = e
+    bs = s
+
+    def step(t, carry):
+        u, s, e, be, bs = carry
+        u01 = unif_ref[t]  # (br, 3)... sliced below
+        temp = temp_ref[t, 0]
+        de_all = 2.0 * s * u
+        p_all = _flip_prob(de_all, temp)
+        u_site = unif_ref[t, :, 0]
+        u_acc = unif_ref[t, :, 1]
+        u_rou = unif_ref[t, :, 2]
+        if mode == "rsa":
+            j = jnp.minimum((u_site * n).astype(jnp.int32), n - 1)  # (br,)
+            onehot = (jax.lax.broadcasted_iota(jnp.int32, p_all.shape, 1)
+                      == j[:, None]).astype(jnp.float32)
+            p_j = jnp.sum(p_all * onehot, axis=1)
+            accept = (u_acc < p_j).astype(jnp.float32)
+        else:
+            wheel = jnp.cumsum(p_all, axis=1)
+            total = wheel[:, -1]
+            degenerate = (total <= 0) | ~jnp.isfinite(total)
+            r = u_rou * jnp.where(degenerate, 1.0, total)
+            j_rw = jnp.minimum(jnp.sum((wheel <= r[:, None]).astype(jnp.int32), axis=1),
+                               n - 1)
+            j_fb = jnp.minimum((u_site * n).astype(jnp.int32), n - 1)
+            onehot_fb = (jax.lax.broadcasted_iota(jnp.int32, p_all.shape, 1)
+                         == j_fb[:, None]).astype(jnp.float32)
+            p_fb = jnp.sum(p_all * onehot_fb, axis=1)
+            accept_fb = u_acc < p_fb
+            j = jnp.where(degenerate, j_fb, j_rw)
+            accept = jnp.where(degenerate, accept_fb, True).astype(jnp.float32)
+            onehot = (jax.lax.broadcasted_iota(jnp.int32, p_all.shape, 1)
+                      == j[:, None]).astype(jnp.float32)
+        s_old = jnp.sum(s * onehot, axis=1)  # (br,)
+        de = jnp.sum(de_all * onehot, axis=1)
+        # Incremental update: rows J[j] gathered via one-hot matmul (MXU-friendly,
+        # avoids per-replica dynamic gathers from VMEM).
+        rows = jax.lax.dot_general(onehot, J, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)  # (br, N)
+        u = u - (2.0 * accept * s_old)[:, None] * rows
+        s = s * (1.0 - 2.0 * accept[:, None] * onehot)
+        e = e + accept * de
+        better = e < be
+        be = jnp.where(better, e, be)
+        bs = jnp.where(better[:, None], s, bs)
+        return (u, s, e, be, bs)
+
+    u, s, e, be, bs = jax.lax.fori_loop(0, num_steps, step, (u, s, e, be, bs))
+    u_out[...] = u
+    s_out[...] = s.astype(s_out.dtype)
+    e_out[...] = e[:, None]
+    be_out[...] = be[:, None]
+    bs_out[...] = bs.astype(bs_out.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "block_r", "interpret"))
+def mcmc_sweep(couplings: jax.Array, fields0: jax.Array, spins0: jax.Array,
+               energy0: jax.Array, uniforms: jax.Array, temps: jax.Array,
+               *, mode: str = "rsa", block_r: int = 8, interpret: bool = False):
+    """T fused MCMC steps for R replicas. Returns (fields, spins, energy,
+    best_energy, best_spins); see ``ref.mcmc_sweep`` for exact semantics."""
+    r, n = fields0.shape
+    t = uniforms.shape[0]
+    assert couplings.shape == (n, n) and spins0.shape == (r, n)
+    assert uniforms.shape == (t, r, 3) and temps.shape == (t,)
+    br = min(block_r, r)
+    if r % br:
+        raise ValueError(f"R={r} not divisible by block_r={br}")
+    grid = (r // br,)
+    outs = pl.pallas_call(
+        functools.partial(_kernel, num_steps=t, mode=mode),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, n), lambda i: (0, 0)),        # J broadcast
+            pl.BlockSpec((br, n), lambda i: (i, 0)),       # u0
+            pl.BlockSpec((br, n), lambda i: (i, 0)),       # s0
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),       # e0
+            pl.BlockSpec((t, br, 3), lambda i: (0, i, 0)),  # uniforms
+            pl.BlockSpec((t, 1), lambda i: (0, 0)),        # temps
+        ],
+        out_specs=[
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, n), jnp.float32),
+            jax.ShapeDtypeStruct((r, n), spins0.dtype),
+            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+            jax.ShapeDtypeStruct((r, n), spins0.dtype),
+        ],
+        interpret=interpret,
+    )(couplings, fields0, spins0, energy0.reshape(r, 1), uniforms,
+      temps.reshape(t, 1))
+    u, s, e, be, bs = outs
+    return u, s, e[:, 0], be[:, 0], bs

@@ -1,0 +1,123 @@
+"""Abstract (ShapeDtypeStruct) inputs for the dry-run: no allocation, correct
+shardings attached. This is the `input_specs()` deliverable — every model
+input (tokens / frontend embeddings / labels / KV caches / optimizer state)
+as weak-type-correct, shardable stand-ins.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.shapes import InputShape
+from ..models import abstract_params, init_decode_cache, model_specs
+from ..models.config import ModelConfig
+from ..models.sharding import ShardingRules, make_sharding
+from ..optim import AdamWConfig
+from ..optim.adamw import QTensor
+from ..train.step import TrainState
+
+
+def rules_for(shape: InputShape, multi_pod: bool) -> ShardingRules:
+    """Per-shape sharding rules (see DESIGN.md §5)."""
+    if shape.kind == "decode":
+        if shape.name == "long_500k":  # batch=1: all parallelism into the cache
+            return ShardingRules(batch=None, kv_heads=None,
+                                 cache_seq=("data", "model"))
+        # decode: batch over pod×data; KV length over model (flash-decode style)
+        return ShardingRules(kv_heads=None, cache_seq="model")
+    if shape.kind == "prefill":
+        return ShardingRules()
+    return ShardingRules()  # train defaults
+
+
+def _sds(shape, dtype, spec_names, mesh, rules):
+    sharding = (make_sharding(spec_names, mesh, rules, shape=shape)
+                if mesh is not None else None)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh=None,
+                rules: Optional[ShardingRules] = None) -> dict:
+    """Model inputs for one (arch × shape) cell."""
+    rules = rules or ShardingRules()
+    b = shape.global_batch
+    s = shape.seq_len if shape.kind != "decode" else 1
+    out: dict = {}
+    if cfg.uses_token_embedding:
+        out["tokens"] = _sds((b, s), jnp.int32, ("batch", "seq"), mesh, rules)
+    else:
+        out["embeddings"] = _sds((b, s, cfg.d_model), jnp.bfloat16,
+                                 ("batch", "seq", None), mesh, rules)
+    if shape.kind == "train":
+        out["labels"] = _sds((b, s), jnp.int32, ("batch", "seq"), mesh, rules)
+    return out
+
+
+_CACHE_AXES = {
+    ("attn", "k"): ("layers", "batch", "kv_heads", "cache_seq", None),
+    ("attn", "v"): ("layers", "batch", "kv_heads", "cache_seq", None),
+    ("mamba", "conv"): ("layers", "batch", "ssm_inner", None),
+    ("mamba", "ssm"): ("layers", "batch", "ssm_inner", "ssm_state"),
+    ("rwkv", "wkv"): ("layers", "batch", "rwkv_heads", None, None),
+    ("rwkv", "shift"): ("layers", "batch", None),
+    ("rwkv", "cmix_shift"): ("layers", "batch", None),
+}
+
+
+def abstract_cache(cfg: ModelConfig, shape: InputShape, mesh=None,
+                   rules: Optional[ShardingRules] = None) -> dict:
+    """Abstract decode cache with shardings (KV length = shape.seq_len)."""
+    rules = rules or ShardingRules()
+    shaped = jax.eval_shape(
+        lambda: init_decode_cache(cfg, shape.global_batch, shape.seq_len))
+
+    def assign(path, leaf):
+        keys = tuple(str(getattr(p, "key", getattr(p, "name", p))) for p in path)
+        kind = next((k for k in ("attn", "mamba", "rwkv") if k in keys), None)
+        axes = _CACHE_AXES.get((kind, keys[-1]))
+        if axes is None:
+            axes = ("layers", "batch") + (None,) * (len(leaf.shape) - 2)
+        return _sds(leaf.shape, leaf.dtype, axes, mesh, rules)
+
+    return jax.tree_util.tree_map_with_path(assign, shaped)
+
+
+def abstract_train_state(cfg: ModelConfig, opt: AdamWConfig, mesh=None,
+                         rules: Optional[ShardingRules] = None) -> TrainState:
+    """Abstract TrainState: params from specs; optimizer moments inherit the
+    param shardings (QTensor codes keep lead-dim axes; scales drop the last)."""
+    rules = rules or ShardingRules()
+    specs = model_specs(cfg)
+    aparams = abstract_params(specs, mesh, rules)
+
+    from ..optim.adamw import adamw_init
+
+    astate = jax.eval_shape(lambda p: adamw_init(p, opt), aparams)
+
+    # Collect param axes by path for moment assignment.
+    from ..models.params import tree_paths
+    axes_by_path = {p: s.axes for p, s in tree_paths(specs)}
+
+    def assign_moments(tree):
+        def walk(node, prefix):
+            if isinstance(node, QTensor):
+                axes = axes_by_path[prefix]
+                codes = _sds(node.codes.shape, node.codes.dtype, axes, mesh, rules)
+                scales = _sds(node.scales.shape, node.scales.dtype,
+                              axes[:-1] + (None,), mesh, rules)
+                return QTensor(codes=codes, scales=scales, orig_last=node.orig_last)
+            if isinstance(node, dict):
+                return {k: walk(v, prefix + (k,)) for k, v in node.items()}
+            axes = axes_by_path[prefix]
+            return _sds(node.shape, node.dtype, axes, mesh, rules)
+
+        return walk(tree, ())
+
+    m = assign_moments(astate.m)
+    v = assign_moments(astate.v)
+    step_sds = jax.ShapeDtypeStruct((), jnp.int32,
+                                    sharding=make_sharding((), mesh, rules))
+    opt_state = type(astate)(step=step_sds, m=m, v=v)
+    return TrainState(params=aparams, opt_state=opt_state, step=step_sds)

@@ -1,0 +1,178 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+DOC = """Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape) cell, `jax.jit(step).lower(**abstract
+inputs).compile()` must succeed on the single-pod 16×16 mesh AND the 2-pod
+2×16×16 mesh. `memory_analysis()` proves the per-device footprint fits;
+`cost_analysis()` + the compiled HLO feed the §Roofline terms.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out dryrun.json
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, applicable, get_config
+from repro.configs.shapes import InputShape
+from repro.launch.abstracts import (abstract_cache, abstract_train_state,
+                                    input_specs, rules_for)
+from repro.launch.mesh import make_production_mesh
+from repro.models import abstract_params, forward, model_specs, decode_step
+from repro.models.config import ModelConfig
+from repro.models.sharding import use_sharding
+from repro.optim import AdamWConfig
+from repro.roofline import analyze_compiled
+from repro.train.step import make_train_step
+
+# Per-arch dry-run hints (tuned in EXPERIMENTS.md §Perf iterations).
+# train_microbatches sizes the scan-saved residual carries (≈ G·B_mb·S·d·6B
+# per device); "rules" overrides shard the residual stream (Megatron-style)
+# for the largest models.
+HINTS: dict[str, dict] = {
+    "starcoder2-7b": {"train_microbatches": 16},
+    "stablelm-12b": {"train_microbatches": 16},
+    "nemotron-4-340b": {"train_microbatches": 16, "state_dtype": "int8",
+                        "rules": {"embed_act": "model"}},
+    "qwen2-7b": {"train_microbatches": 8},
+    "llava-next-34b": {"train_microbatches": 16, "rules": {"embed_act": "model"}},
+    "phi3.5-moe-42b-a6.6b": {"train_microbatches": 8},
+    "granite-moe-1b-a400m": {"train_microbatches": 4},
+    "hubert-xlarge": {"train_microbatches": 8},
+    "rwkv6-1.6b": {"train_microbatches": 4},
+    "jamba-1.5-large-398b": {"train_microbatches": 8, "state_dtype": "int8",
+                             "rules": {"embed_act": "model"}},
+}
+
+
+def build_lowered(cfg: ModelConfig, shape: InputShape, mesh, multi_pod: bool):
+    """Lower one cell; returns (lowered, model_flops_global)."""
+    hints = HINTS.get(cfg.name, {})
+    rules = rules_for(shape, multi_pod)
+    if shape.kind == "train" and hints.get("rules"):
+        rules = dataclasses.replace(rules, **hints["rules"])
+    n_active = cfg.active_param_count()
+    tokens_global = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    with use_sharding(mesh, rules):
+        if shape.kind == "train":
+            opt = AdamWConfig(state_dtype=hints.get("state_dtype", "float32"))
+            state = abstract_train_state(cfg, opt, mesh, rules)
+            batch = input_specs(cfg, shape, mesh, rules)
+            mb = hints.get("train_microbatches", 1)
+            pshard = jax.tree.map(lambda s: s.sharding, state.params)
+            gathered = None
+            if hints.get("gather_once"):
+                from repro.models import model_specs as _specs, param_shardings as _pshard
+                grules = dataclasses.replace(rules, embed_w=None)
+                gathered = _pshard(_specs(cfg), mesh, grules)
+            step = make_train_step(cfg, opt, num_microbatches=mb, donate=False,
+                                   param_shardings=pshard,
+                                   gathered_shardings=gathered)
+            lowered = step.lower(state, batch)
+            return lowered, 6.0 * n_active * tokens_global
+        serve_cfg = dataclasses.replace(cfg, param_dtype="bfloat16", remat="none")
+        specs = model_specs(serve_cfg)
+        params = abstract_params(specs, mesh, rules)
+        if shape.kind == "prefill":
+            batch = input_specs(serve_cfg, shape, mesh, rules)
+            fn = jax.jit(lambda p, b: forward(serve_cfg, p, **b))
+            lowered = fn.lower(params, batch)
+            return lowered, 2.0 * n_active * tokens_global
+        # decode: one new token against a seq_len-deep cache
+        cache = abstract_cache(serve_cfg, shape, mesh, rules)
+        batch = input_specs(serve_cfg, shape, mesh, rules)
+        pos = jax.ShapeDtypeStruct((), jax.numpy.int32)
+        fn = jax.jit(lambda p, c, t, b: decode_step(serve_cfg, p, c, t, **b))
+        lowered = fn.lower(params, cache, pos, batch)
+        return lowered, 2.0 * n_active * tokens_global
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": reason}
+    multi_pod = mesh_kind == "multipod"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    num_devices = mesh.devices.size
+    t0 = time.time()
+    try:
+        lowered, model_flops = build_lowered(cfg, shape, mesh, multi_pod)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        if verbose:
+            print(f"[{arch} × {shape_name} × {mesh_kind}] memory_analysis: {mem}")
+            ca = compiled.cost_analysis()
+            print(f"[{arch} × {shape_name} × {mesh_kind}] cost_analysis: "
+                  f"flops={ca.get('flops'):.4g} bytes={ca.get('bytes accessed'):.4g}")
+        report = analyze_compiled(
+            compiled, arch=arch, shape=shape_name, mesh_name=mesh_kind,
+            num_devices=num_devices, model_flops=model_flops)
+        out = dataclasses.asdict(report)
+        out.update(status="ok", lower_s=round(t_lower, 1),
+                   compile_s=round(t_compile, 1),
+                   step_time=report.step_time, mfu=report.mfu)
+        return out
+    except Exception as e:  # a failing cell is a bug in the system
+        traceback.print_exc()
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "error", "error": f"{type(e).__name__}: {e}"}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, action="append")
+    ap.add_argument("--shape", choices=tuple(SHAPES), action="append")
+    ap.add_argument("--mesh", choices=("pod", "multipod", "both"), default="pod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="append results to this JSON file")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if (args.all or not args.arch) else args.arch
+    shapes = list(SHAPES) if (args.all or not args.shape) else args.shape
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    results = []
+    failed = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mesh_kind in meshes:
+                r = run_cell(arch, shape_name, mesh_kind)
+                status = r["status"]
+                extra = (f"bottleneck={r.get('bottleneck')} "
+                         f"mfu={100*r.get('mfu', 0):.1f}% "
+                         f"compile={r.get('compile_s')}s" if status == "ok"
+                         else r.get("reason", r.get("error", "")))
+                print(f"== {arch:24s} {shape_name:12s} {mesh_kind:8s} {status:8s} {extra}",
+                      flush=True)
+                results.append(r)
+                failed += status == "error"
+    if args.out:
+        existing = []
+        if os.path.exists(args.out):
+            with open(args.out) as fh:
+                existing = json.load(fh)
+        key = lambda r: (r["arch"], r["shape"], r["mesh"])
+        merged = {key(r): r for r in existing}
+        merged.update({key(r): r for r in results})
+        with open(args.out, "w") as fh:
+            json.dump(list(merged.values()), fh, indent=1)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,43 @@
+"""Production mesh construction (multi-pod dry-run deliverable, step 1).
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state. Single pod = v5e-256 as (16, 16) = ("data", "model");
+multi-pod adds a leading "pod" axis: (2, 16, 16) = ("pod", "data", "model").
+
+`xla_performance_flags` collects the flags a real TPU launch would set for
+collective/compute overlap (latency-hiding scheduler, async collectives);
+they are inert on CPU but recorded here so launch scripts stay the deployable
+artifact.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1, pods: int = 1):
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    if n % (model_parallel * pods):
+        raise ValueError(f"{n} devices not divisible by tp={model_parallel}×pods={pods}")
+    data = n // (model_parallel * pods)
+    if pods > 1:
+        return jax.make_mesh((pods, data, model_parallel), ("pod", "data", "model"))
+    return jax.make_mesh((data, model_parallel), ("data", "model"))
+
+
+def xla_performance_flags() -> list[str]:
+    """Flags for compute/communication overlap on real TPU deployments."""
+    return [
+        "--xla_tpu_enable_async_collective_fusion=true",
+        "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true",
+        "--xla_tpu_overlap_compute_collective_tc=true",
+        "--xla_enable_async_all_gather=true",
+        "--xla_enable_async_collective_permute=true",
+        "--xla_tpu_spmd_threshold_for_allgather_cse=10000",
+    ]

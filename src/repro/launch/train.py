@@ -1,0 +1,46 @@
+"""Production train launcher: --arch selection, checkpoint/resume, microbatching.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --smoke \
+        --steps 100 --checkpoint-dir /tmp/ckpt --resume
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data import DataConfig
+from repro.train import TrainLoopConfig, train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable); full configs are for "
+                         "real accelerator meshes")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--state-dtype", choices=("float32", "bfloat16", "int8"),
+                    default="float32")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    loop = TrainLoopConfig(
+        steps=args.steps, checkpoint_every=args.checkpoint_every,
+        checkpoint_dir=args.checkpoint_dir, num_microbatches=args.microbatches,
+        base_lr=args.lr, seed=args.seed, state_dtype=args.state_dtype,
+        async_checkpoint=True)
+    data = DataConfig(seed=args.seed, global_batch=args.global_batch,
+                      seq_len=args.seq_len)
+    train_loop(cfg, data, loop, resume=args.resume)
+
+
+if __name__ == "__main__":
+    main()

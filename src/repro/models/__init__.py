@@ -1,0 +1,6 @@
+from .config import ModelConfig  # noqa: F401
+from .model import (ForwardOut, decode_step, forward, init_decode_cache,  # noqa: F401
+                    model_specs)
+from .params import (abstract_params, init_params, param_bytes, param_count,  # noqa: F401
+                     param_shardings)
+from .sharding import ShardingRules, logical_constraint, use_sharding  # noqa: F401

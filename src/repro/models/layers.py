@@ -1,0 +1,181 @@
+"""Shared layers: norms, activations, rotary embeddings, chunked (flash-style)
+attention, and the dense/gated MLP. All functions are pure and take params as
+plain dicts of arrays (spec trees built in model.py)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .sharding import logical_constraint
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms & activations
+# ---------------------------------------------------------------------------
+
+def norm(cfg: ModelConfig, scale: jax.Array, x: jax.Array,
+         bias: Optional[jax.Array] = None) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + 1e-6) * (1.0 + scale.astype(jnp.float32))
+    else:  # layernorm
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+        out = (xf - mean) * jax.lax.rsqrt(var + 1e-6) * (1.0 + scale.astype(jnp.float32))
+        if bias is not None:
+            out = out + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def activation(cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.activation == "silu":
+        return jax.nn.silu(x)
+    if cfg.activation == "gelu":
+        return jax.nn.gelu(x)
+    if cfg.activation == "relu2":  # squared ReLU (nemotron / Primer)
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(f"unknown activation {cfg.activation!r}")
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) with D even; positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention — pure jnp, O(S·blk) live memory
+# ---------------------------------------------------------------------------
+
+def _attend_block(q, k, v, mask):
+    """GQA-grouped block attention. q (B,K,R,Tq,D); k/v (B,K,Tk,D);
+    mask (Tq,Tk) or None -> (scores_max, exp_sum, acc). KV is never
+    repeated to Hq = K·R heads — the group dim R rides along in the einsum."""
+    s = jnp.einsum("bkrqd,bkld->bkrql", q, k, preferred_element_type=jnp.float32)
+    if mask is not None:
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    if mask is not None:  # fully-masked rows must contribute zero, not exp(0)
+        p = jnp.where(mask[None, None, None], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bkrql,bkld->bkrqd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return m, l, acc
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+                      q_chunk: int, kv_chunk: int, scale: float) -> jax.Array:
+    """Flash-attention in pure jnp: scan over KV blocks with running (m, l, acc).
+
+    q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D) with Hq a multiple of Hkv (GQA
+    handled natively — KV is never materialized at Hq width).
+    Returns (B, Hq, Sq, D). Live memory O(B·Hq·q_chunk·kv_chunk).
+    """
+    with jax.named_scope("chunked_attention"):
+        return _chunked_attention(q, k, v, causal=causal, q_chunk=q_chunk,
+                                  kv_chunk=kv_chunk, scale=scale)
+
+
+def _chunked_attention(q, k, v, *, causal, q_chunk, kv_chunk, scale):
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    q = (q * scale).reshape(b, hkv, rep, sq, d)
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    nq, nk = sq // q_chunk, skv // kv_chunk
+    if sq % q_chunk or skv % kv_chunk:
+        raise ValueError(f"seq ({sq},{skv}) not divisible by chunks ({q_chunk},{kv_chunk})")
+
+    qs = q.reshape(b, hkv, rep, nq, q_chunk, d)
+
+    def q_block(qi, q_blk):  # q_blk: (B,K,R,q_chunk,D)
+        def kv_block(carry, kj):
+            m, l, acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, kj * kv_chunk, kv_chunk, axis=2)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, kj * kv_chunk, kv_chunk, axis=2)
+            if causal:
+                rows = qi * q_chunk + jnp.arange(q_chunk)
+                cols = kj * kv_chunk + jnp.arange(kv_chunk)
+                mask = rows[:, None] >= cols[None, :]
+            else:
+                mask = None
+            m2, l2, acc2 = _attend_block(q_blk, k_blk, v_blk, mask)
+            m_new = jnp.maximum(m, m2)
+            c1 = jnp.exp(m - m_new)
+            c2 = jnp.exp(m2 - m_new)
+            l_new = l * c1 + l2 * c2
+            acc_new = acc * c1[..., None] + acc2 * c2[..., None]
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((b, hkv, rep, q_chunk), NEG_INF, jnp.float32),
+                jnp.zeros((b, hkv, rep, q_chunk), jnp.float32),
+                jnp.zeros((b, hkv, rep, q_chunk, d), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_block, init, jnp.arange(nk))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    out = jax.lax.map(lambda args: q_block(args[0], args[1]),
+                      (jnp.arange(nq), jnp.moveaxis(qs, 3, 0)))
+    # out: (nq, B, K, R, q_chunk, D) -> (B, Hq, Sq, D)
+    out = jnp.moveaxis(out, 0, 3).reshape(b, hq, sq, d)
+    return out.astype(k.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array, *, scale: float) -> jax.Array:
+    """Single-token attention over a (possibly sharded) KV cache, GQA-native.
+
+    q: (B, Hq, S, D); caches: (B, Hkv, L, D) with Hq a multiple of Hkv.
+    Positions ≥ cache_len are masked. Softmax over the (sharded) L dim —
+    GSPMD inserts the distributed max/sum combine (flash-decoding analogue),
+    so sharding the cache length over `model`/`data` parallelizes decode.
+    """
+    with jax.named_scope("decode_attention"):
+        b, hq, s, d = q.shape
+        hkv = k_cache.shape[1]
+        rep = hq // hkv
+        qg = (q * scale).reshape(b, hkv, rep, s, d)
+        sc = jnp.einsum("bkrqd,bkld->bkrql", qg, k_cache,
+                        preferred_element_type=jnp.float32)
+        mask = jnp.arange(k_cache.shape[2])[None, None, None, None, :] < cache_len
+        sc = jnp.where(mask, sc, NEG_INF)
+        p = jax.nn.softmax(sc, axis=-1)
+        out = jnp.einsum("bkrql,bkld->bkrqd", p.astype(v_cache.dtype), v_cache,
+                         preferred_element_type=jnp.float32)
+        return out.reshape(b, hq, s, d).astype(k_cache.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP (gated / plain)
+# ---------------------------------------------------------------------------
+
+@jax.named_scope("mlp")
+def mlp(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, p["wi"].astype(x.dtype))
+    h = logical_constraint(h, "batch", "seq", "ffn")
+    h = activation(cfg, h)
+    if cfg.gated_mlp:
+        g = jnp.einsum("...d,df->...f", x, p["wg"].astype(x.dtype))
+        h = h * g
+    out = jnp.einsum("...f,fd->...d", h, p["wo"].astype(x.dtype))
+    return logical_constraint(out, "batch", "res_seq", "embed_act")

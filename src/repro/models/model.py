@@ -1,0 +1,389 @@
+"""Composable LM assembly for all 10 assigned architectures.
+
+Layers are grouped by ``cfg.block_pattern`` (one group = one pass over the
+pattern); groups are stacked and scanned (`lax.scan`), keeping HLO size
+O(|pattern|) for 24–96-layer models. Every block = pre-norm mixer + pre-norm
+FFN with residuals. MoE aux losses accumulate through the scan carry.
+
+Public API:
+    model_specs(cfg)                  -> ParamSpec tree
+    forward(cfg, params, batch)       -> ForwardOut(logits, aux)
+    init_decode_cache(cfg, batch, L)  -> cache pytree
+    decode_step(cfg, params, cache, tokens/embeddings) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, moe, rwkv, ssm
+from .config import ModelConfig
+from .params import ParamSpec, stack_specs
+from .sharding import logical_constraint
+
+
+class ForwardOut(NamedTuple):
+    logits: jax.Array          # (B, S, V)
+    aux_loss: jax.Array        # scalar: MoE load-balance + z losses (0 if dense)
+    expert_load: Optional[jax.Array] = None  # (num_moe_blocks_in_pattern, E) mean load
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def _attn_specs(cfg: ModelConfig) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    pd = cfg.param_dtype
+    o_scale = 0.02 / math.sqrt(2 * cfg.num_layers)
+    s = {
+        "norm": ParamSpec((d,), (None,), "zeros", pd),
+        "wq": ParamSpec((d, hq, hd), ("embed_w", "heads", "head_dim"), "normal", pd),
+        "wk": ParamSpec((d, hkv, hd), ("embed_w", "kv_heads", "head_dim"), "normal", pd),
+        "wv": ParamSpec((d, hkv, hd), ("embed_w", "kv_heads", "head_dim"), "normal", pd),
+        "wo": ParamSpec((hq, hd, d), ("heads", "head_dim", "embed_w"), f"scaled:{o_scale}", pd),
+    }
+    if cfg.norm == "layernorm":
+        s["norm_b"] = ParamSpec((d,), (None,), "zeros", pd)
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec((hq, hd), ("heads", "head_dim"), "zeros", pd)
+        s["bk"] = ParamSpec((hkv, hd), ("kv_heads", "head_dim"), "zeros", pd)
+        s["bv"] = ParamSpec((hkv, hd), ("kv_heads", "head_dim"), "zeros", pd)
+    return s
+
+
+def _mlp_specs(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    pd = cfg.param_dtype
+    o_scale = 0.02 / math.sqrt(2 * cfg.num_layers)
+    s = {
+        "norm": ParamSpec((d,), (None,), "zeros", pd),
+        "wi": ParamSpec((d, f), ("embed_w", "ffn"), "normal", pd),
+        "wo": ParamSpec((f, d), ("ffn", "embed_w"), f"scaled:{o_scale}", pd),
+    }
+    if cfg.norm == "layernorm":
+        s["norm_b"] = ParamSpec((d,), (None,), "zeros", pd)
+    if cfg.gated_mlp:
+        s["wg"] = ParamSpec((d, f), ("embed_w", "ffn"), "normal", pd)
+    return s
+
+
+def _moe_specs(cfg: ModelConfig) -> dict:
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.resolved_moe_d_ff
+    pd = cfg.param_dtype
+    o_scale = 0.02 / math.sqrt(2 * cfg.num_layers)
+    s = {
+        "norm": ParamSpec((d,), (None,), "zeros", pd),
+        "router": ParamSpec((d, e), ("embed_w", "experts"), "normal", pd),
+        "wi": ParamSpec((e, d, f), ("experts", "embed_w", None), "normal", pd),
+        "wo": ParamSpec((e, f, d), ("experts", None, "embed_w"), f"scaled:{o_scale}", pd),
+    }
+    if cfg.norm == "layernorm":
+        s["norm_b"] = ParamSpec((d,), (None,), "zeros", pd)
+    if cfg.gated_mlp:
+        s["wg"] = ParamSpec((e, d, f), ("experts", "embed_w", None), "normal", pd)
+    return s
+
+
+def _mamba_specs(cfg: ModelConfig) -> dict:
+    d, di, n, w = cfg.d_model, cfg.d_inner, cfg.ssm_state_dim, cfg.ssm_conv_width
+    r = cfg.resolved_dt_rank
+    pd = cfg.param_dtype
+    return {
+        "norm": ParamSpec((d,), (None,), "zeros", pd),
+        "in_proj": ParamSpec((d, 2 * di), ("embed_w", "ssm_inner"), "normal", pd),
+        "conv_w": ParamSpec((di, w), ("ssm_inner", "conv"), "uniform_fan", pd),
+        "conv_b": ParamSpec((di,), ("ssm_inner",), "zeros", pd),
+        "x_proj": ParamSpec((di, r + 2 * n), ("ssm_inner", None), "normal", pd),
+        "dt_proj": ParamSpec((r, di), ("dt_rank", "ssm_inner"), "uniform_fan", pd),
+        "dt_bias": ParamSpec((di,), ("ssm_inner",), "mamba_dt_bias", pd),
+        "a_log": ParamSpec((di, n), ("ssm_inner", "ssm_state"), "mamba_a_log", pd),
+        "d_skip": ParamSpec((di,), ("ssm_inner",), "ones", pd),
+        "out_proj": ParamSpec((di, d), ("ssm_inner", "embed_w"),
+                              f"scaled:{0.02 / math.sqrt(2 * cfg.num_layers)}", pd),
+    }
+
+
+def _rwkv_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    pd = cfg.param_dtype
+    rank = 32
+    return {
+        "norm": ParamSpec((d,), (None,), "zeros", pd),
+        "mix_base": ParamSpec((rwkv.N_MIX, d), (None, "embed_w"), "const:0.5", pd),
+        "mix_lora_a": ParamSpec((d, rank), ("embed_w", "lora"), "normal", pd),
+        "mix_lora_b": ParamSpec((rank, rwkv.N_MIX, d), ("lora", None, "embed_w"), "zeros", pd),
+        "wr": ParamSpec((d, d), ("embed_w", "rwkv_heads"), "normal", pd),
+        "wk": ParamSpec((d, d), ("embed_w", "rwkv_heads"), "normal", pd),
+        "wv": ParamSpec((d, d), ("embed_w", "rwkv_heads"), "normal", pd),
+        "wg": ParamSpec((d, d), ("embed_w", "rwkv_heads"), "normal", pd),
+        "decay_base": ParamSpec((d,), ("embed_w",), "const:-4.0", pd),
+        "decay_lora_a": ParamSpec((d, 2 * rank), ("embed_w", "lora"), "normal", pd),
+        "decay_lora_b": ParamSpec((2 * rank, d), ("lora", "embed_w"), "zeros", pd),
+        "bonus": ParamSpec((h, hd), ("rwkv_heads", None), "normal", pd),
+        "ln_x": ParamSpec((d,), ("embed_w",), "zeros", pd),
+        "wo": ParamSpec((d, d), ("rwkv_heads", "embed_w"),
+                        f"scaled:{0.02 / math.sqrt(2 * cfg.num_layers)}", pd),
+    }
+
+
+def _cmix_specs(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    pd = cfg.param_dtype
+    return {
+        "norm": ParamSpec((d,), (None,), "zeros", pd),
+        "mu_k": ParamSpec((d,), ("embed_w",), "const:0.5", pd),
+        "mu_r": ParamSpec((d,), ("embed_w",), "const:0.5", pd),
+        "wk": ParamSpec((d, f), ("embed_w", "ffn"), "normal", pd),
+        "wv": ParamSpec((f, d), ("ffn", "embed_w"),
+                        f"scaled:{0.02 / math.sqrt(2 * cfg.num_layers)}", pd),
+        "wr": ParamSpec((d, d), ("embed_w", "rwkv_heads"), "normal", pd),
+    }
+
+
+_MIXER_SPECS = {"attn": _attn_specs, "mamba": _mamba_specs, "rwkv": _rwkv_specs}
+_FFN_SPECS = {"mlp": _mlp_specs, "moe": _moe_specs, "cmix": _cmix_specs}
+
+
+def model_specs(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    pd = cfg.param_dtype
+    tree: dict = {}
+    if cfg.uses_token_embedding:
+        tree["embed"] = ParamSpec((v, d), ("vocab", "embed_w"), "normal", pd)
+    else:
+        tree["frontend_in"] = ParamSpec((d, d), ("embed_w", None), "normal", pd)
+    groups: dict = {}
+    for i, entry in enumerate(cfg.block_pattern):
+        mixer, _, ffn = entry.partition(":")
+        block = {"mixer": _MIXER_SPECS[mixer](cfg), "ffn": _FFN_SPECS[ffn](cfg)}
+        groups[f"b{i}"] = stack_specs(block, cfg.num_groups)
+    tree["groups"] = groups
+    tree["final_norm"] = ParamSpec((d,), (None,), "zeros", pd)
+    if cfg.norm == "layernorm":
+        tree["final_norm_b"] = ParamSpec((d,), (None,), "zeros", pd)
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = ParamSpec((d, v), ("embed_w", "vocab"), "normal", pd)
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+def _pre_norm(cfg, p, x):
+    return layers.norm(cfg, p["norm"], x, p.get("norm_b"))
+
+
+def _attn_apply(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
+                cache: Optional[dict], pos: Optional[jax.Array]):
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    xn = _pre_norm(cfg, p, x)
+    q = jnp.einsum("bsd,dhk->bshk", xn, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xn, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", xn, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = layers.rope(q, positions, cfg.rope_theta)
+    k = layers.rope(k, positions, cfg.rope_theta)
+    q = logical_constraint(q, "batch", "seq", "heads", None)
+    k = logical_constraint(k, "batch", "seq", "kv_heads", None)
+    scale = 1.0 / math.sqrt(hd)
+    new_cache = None
+    if cache is None:
+        qh = jnp.swapaxes(q, 1, 2)  # (B,Hq,S,D)
+        kh = jnp.swapaxes(k, 1, 2)  # (B,Hkv,S,D)
+        vh = jnp.swapaxes(v, 1, 2)
+        if cfg.attn_impl == "flash":
+            from ..kernels.flash_attention import flash_attention
+            out = flash_attention(qh, kh, vh, cfg.causal, scale,
+                                  cfg.seq_chunk_q, cfg.seq_chunk_kv,
+                                  jax.default_backend() != "tpu")
+        else:
+            out = layers.chunked_attention(qh, kh, vh, causal=cfg.causal,
+                                           q_chunk=cfg.seq_chunk_q,
+                                           kv_chunk=cfg.seq_chunk_kv, scale=scale)
+        out = jnp.swapaxes(out, 1, 2)  # (B,S,H,D)
+    else:
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], jnp.swapaxes(k, 1, 2).astype(cache["k"].dtype), pos, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], jnp.swapaxes(v, 1, 2).astype(cache["v"].dtype), pos, axis=2)
+        kc = logical_constraint(kc, "batch", "kv_heads", "cache_seq", None)
+        vc = logical_constraint(vc, "batch", "kv_heads", "cache_seq", None)
+        new_cache = {"k": kc, "v": vc}
+        qh = jnp.swapaxes(q, 1, 2)
+        out = layers.decode_attention(qh, kc, vc, pos + s, scale=scale)
+        out = jnp.swapaxes(out, 1, 2)
+    proj = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return logical_constraint(proj, "batch", "res_seq", "embed_act"), new_cache
+
+
+def _apply_block(cfg: ModelConfig, entry: str, p: dict, x: jax.Array,
+                 positions: jax.Array, cache: Optional[dict], pos):
+    """One pattern entry: mixer + ffn, residual around each."""
+    mixer, _, ffn = entry.partition(":")
+    aux = (jnp.float32(0.0), None)
+    new_cache: dict = {}
+    if mixer == "attn":
+        h, c = _attn_apply(cfg, p["mixer"], x, positions,
+                           cache.get("attn") if cache else None, pos)
+        if c is not None:
+            new_cache["attn"] = c
+    elif mixer == "mamba":
+        mc = None
+        if cache and "mamba" in cache:
+            mc = ssm.MambaCache(conv=cache["mamba"]["conv"], ssm=cache["mamba"]["ssm"])
+        h, c = ssm.mamba_block(cfg, p["mixer"], _pre_norm(cfg, p["mixer"], x), cache=mc)
+        if c is not None:
+            new_cache["mamba"] = {"conv": c.conv, "ssm": c.ssm}
+    else:  # rwkv time-mix
+        rc = None
+        if cache and "rwkv" in cache:
+            rc = rwkv.RwkvCache(**cache["rwkv"])
+        h, c = rwkv.time_mix(cfg, p["mixer"], _pre_norm(cfg, p["mixer"], x), cache=rc)
+        if c is not None:
+            new_cache["rwkv"] = c._asdict()
+    x = x + h
+
+    fp = p["ffn"]
+    xn = _pre_norm(cfg, fp, x)
+    if ffn == "mlp":
+        h = layers.mlp(cfg, fp, xn)
+    elif ffn == "moe":
+        h, moe_aux = moe.moe_ffn(cfg, fp, xn)
+        aux = (moe_aux.load_balance_loss * cfg.router_aux_weight
+               + moe_aux.router_z_loss * 1e-3, moe_aux.expert_load)
+    else:  # rwkv channel mix
+        rc = None
+        if cache and "rwkv" in cache:
+            rc = rwkv.RwkvCache(**{**new_cache.get("rwkv", cache["rwkv"])})
+        h, c = rwkv.channel_mix(cfg, fp, xn, cache=rc)
+        if c is not None:
+            new_cache["rwkv"] = c._asdict()
+    x = x + h
+    return x, aux, (new_cache or None)
+
+
+# ---------------------------------------------------------------------------
+# Forward / decode
+# ---------------------------------------------------------------------------
+
+def _embed_input(cfg: ModelConfig, params: dict, tokens, embeddings):
+    dtype = jnp.dtype(cfg.compute_dtype)
+    if cfg.uses_token_embedding:
+        x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    else:
+        x = jnp.einsum("bsd,de->bse", embeddings.astype(dtype),
+                       params["frontend_in"].astype(dtype))
+    return logical_constraint(x, "batch", "res_seq", "embed_act")
+
+
+@jax.named_scope("_logits")
+def _logits(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    xn = layers.norm(cfg, params["final_norm"], x, params.get("final_norm_b"))
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", xn, head.astype(x.dtype))
+    return logical_constraint(logits, "batch", "seq", "vocab")
+
+
+def _remat_wrap(cfg: ModelConfig, fn):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def _run_groups(cfg: ModelConfig, params: dict, x: jax.Array, positions,
+                cache: Optional[dict], pos):
+    """lax.scan over layer groups; cache (if any) is scanned alongside."""
+
+    def group_fn(carry, xs):
+        x, aux = carry
+        gp, gc = xs
+        new_gc = {}
+        loads = []
+        for i, entry in enumerate(cfg.block_pattern):
+            bc = gc.get(f"b{i}") if gc else None
+            x, (a, load), nc = _apply_block(cfg, entry, gp[f"b{i}"], x, positions, bc, pos)
+            aux = aux + a
+            if load is not None:
+                loads.append(load)
+            if nc is not None:
+                new_gc[f"b{i}"] = nc
+        load_arr = jnp.stack(loads) if loads else jnp.zeros((0,), jnp.float32)
+        return (x, aux), (new_gc or None, load_arr)
+
+    group_fn = _remat_wrap(cfg, group_fn)
+    (x, aux), (new_cache, loads) = jax.lax.scan(
+        group_fn, (x, jnp.float32(0.0)), (params["groups"], cache))
+    mean_load = loads.mean(axis=0) if loads.size else None
+    return x, aux, new_cache, mean_load
+
+
+def forward(cfg: ModelConfig, params: dict, tokens=None, embeddings=None,
+            positions=None) -> ForwardOut:
+    """Full-sequence forward (train / prefill-scoring). No cache."""
+    ref = tokens if tokens is not None else embeddings
+    b, s = ref.shape[0], ref.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = _embed_input(cfg, params, tokens, embeddings)
+    x, aux, _, load = _run_groups(cfg, params, x, positions, None, None)
+    return ForwardOut(logits=_logits(cfg, params, x), aux_loss=aux, expert_load=load)
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Cache pytree stacked over groups; dtype = compute dtype."""
+    g = cfg.num_groups
+    hd = cfg.resolved_head_dim
+    dtype = jnp.dtype(cfg.compute_dtype)
+    cache: dict = {}
+
+    def stack(tree):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (g,) + a.shape), tree)
+
+    for i, entry in enumerate(cfg.block_pattern):
+        mixer = entry.partition(":")[0]
+        ffn = entry.partition(":")[2]
+        blk: dict = {}
+        if mixer == "attn":
+            blk["attn"] = {
+                "k": jnp.zeros((batch, cfg.num_kv_heads, max_len, hd), dtype),
+                "v": jnp.zeros((batch, cfg.num_kv_heads, max_len, hd), dtype),
+            }
+        elif mixer == "mamba":
+            mc = ssm.init_cache(cfg, batch)
+            blk["mamba"] = {"conv": mc.conv, "ssm": mc.ssm}
+        if mixer == "rwkv" or ffn == "cmix":
+            rc = rwkv.init_cache(cfg, batch)
+            blk["rwkv"] = rc._asdict()
+        cache[f"b{i}"] = stack(blk)
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, pos: jax.Array,
+                tokens=None, embeddings=None) -> tuple[jax.Array, dict]:
+    """One-token decode (S may also be >1 for chunked prefill into the cache).
+
+    ``pos``: scalar int32 — write offset into the KV cache (same across batch).
+    Returns (logits (B,S,V), new cache).
+    """
+    ref = tokens if tokens is not None else embeddings
+    b, s = ref.shape[0], ref.shape[1]
+    positions = pos + jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = _embed_input(cfg, params, tokens, embeddings)
+    x, _, new_cache, _ = _run_groups(cfg, params, x, positions, cache, pos)
+    return _logits(cfg, params, x), new_cache

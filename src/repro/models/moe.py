@@ -1,0 +1,91 @@
+"""Mixture-of-Experts layer (GShard-style capacity dispatch, top-k routing).
+
+Dispatch/combine are einsum-based so GSPMD can lower them to all-to-alls when
+experts are sharded over the `model` mesh axis. Tokens are grouped by the
+batch dim (group = one sequence), so the dispatch one-hot is (B, S, E, C) with
+per-group capacity C = ceil(k·S/E·cf) — per-device this is modest once batch
+is sharded over `data` and experts over `model`.
+
+An auxiliary load-balance loss (Switch-style) and router z-loss are returned
+for the train loop. The Ising-based expert placement optimizer
+(`repro.core.placement`) consumes `router_probs` statistics to co-locate
+co-activated experts across the EP axis.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import activation
+from .sharding import logical_constraint
+
+
+class MoEAux(NamedTuple):
+    load_balance_loss: jax.Array  # scalar
+    router_z_loss: jax.Array      # scalar
+    expert_load: jax.Array        # (E,) fraction of tokens routed per expert
+
+
+def _capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    c = int(cfg.experts_per_token * tokens_per_group * cfg.capacity_factor
+            / max(cfg.num_experts, 1))
+    return max(c, 1)
+
+
+@jax.named_scope("moe_ffn")
+def moe_ffn(cfg: ModelConfig, p: dict, x: jax.Array) -> tuple[jax.Array, MoEAux]:
+    """x: (B, S, d) -> (B, S, d). Router in fp32 for numerical stability."""
+    b, s, d = x.shape
+    e = cfg.num_experts
+    k = cfg.experts_per_token
+    c = _capacity(cfg, s)
+
+    router_logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                               p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(router_logits, axis=-1)
+
+    # Top-k expert choice per token; gates renormalized over the selected k.
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (B,S,k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Position of each (token, k) within its expert's capacity buffer.
+    sel_onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)  # (B,S,k,E)
+    flat_sel = sel_onehot.reshape(b, s * k, e)
+    pos_in_expert = (jnp.cumsum(flat_sel, axis=1) - flat_sel).reshape(b, s, k, e)
+    pos = jnp.sum(pos_in_expert * sel_onehot, axis=-1)  # (B,S,k)
+    keep = pos < c  # overflow tokens dropped (capacity-factor semantics)
+
+    # Dispatch (B,S,E,C) and combine (B,S,E,C) tensors. The k axis is
+    # contracted inside one einsum (a (k,E)ᵀ(k,C) batched matmul) so the
+    # (B,S,k,E,C) outer product is never materialized.
+    pos_onehot = jax.nn.one_hot(pos, c, dtype=jnp.float32)  # (B,S,k,C)
+    kept_sel = sel_onehot * keep[..., None].astype(jnp.float32)  # (B,S,k,E)
+    dispatch = jnp.einsum("bske,bskc->bsec", kept_sel, pos_onehot)
+    combine = jnp.einsum("bske,bskc->bsec", kept_sel * gate_vals[..., None], pos_onehot)
+
+    xin = jnp.einsum("bsec,bsd->becd", dispatch.astype(x.dtype), x)
+    xin = logical_constraint(xin, "batch", "experts", None, None)
+
+    wi = p["wi"].astype(x.dtype)
+    wo = p["wo"].astype(x.dtype)
+    h = jnp.einsum("becd,edf->becf", xin, wi)
+    h = activation(cfg, h)
+    if cfg.gated_mlp:
+        g = jnp.einsum("becd,edf->becf", xin, p["wg"].astype(x.dtype))
+        h = h * g
+    out_e = jnp.einsum("becf,efd->becd", h, wo)
+    out = jnp.einsum("bsec,becd->bsd", combine.astype(x.dtype), out_e)
+    out = logical_constraint(out, "batch", "res_seq", "embed_act")
+
+    # Switch-transformer load-balance loss: E · Σ_e f_e · P_e.
+    top1 = jax.nn.one_hot(expert_idx[..., 0], e, dtype=jnp.float32)
+    frac_tokens = top1.reshape(-1, e).mean(0)
+    frac_probs = probs.reshape(-1, e).mean(0)
+    lb_loss = e * jnp.sum(frac_tokens * frac_probs)
+    z = jax.nn.logsumexp(router_logits, axis=-1)
+    z_loss = jnp.mean(z * z)
+    return out, MoEAux(load_balance_loss=lb_loss, router_z_loss=z_loss,
+                       expert_load=frac_tokens)

@@ -1,0 +1,189 @@
+"""RWKV-6 "Finch" blocks (arXiv:2404.05892): data-dependent decay time-mix +
+token-shift channel-mix. Attention-free; decode state is O(1) in context,
+which is what makes `long_500k` runnable for rwkv6-1.6b.
+
+Time-mix recurrence per head (head dim D):
+    wkv_t = diag(w_t) · wkv_{t-1} + k_tᵀ v_t           (D×D state)
+    o_t   = r_t · (diag(u) · k_tᵀ v_t + wkv_{t-1})
+with w_t = exp(−exp(decay_t)) *data-dependent* via a LoRA on the shifted
+input — the v6 hallmark. Token-shift lerp coefficients are likewise
+LoRA-modulated. Channel-mix is the classic shifted 2-layer FFN with a
+receptance gate.
+
+Train path scans over sequence in chunks carrying the (B, H, D, D) state —
+identical math to decode, so the prefill→decode consistency test is exact.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .sharding import logical_constraint
+
+N_MIX = 5  # r, k, v, g, w token-shift lerps
+
+
+class RwkvCache(NamedTuple):
+    wkv: jax.Array        # (B, H, D, D) float32
+    shift: jax.Array      # (B, d) last token (time-mix shift)
+    cmix_shift: jax.Array  # (B, d) last token (channel-mix shift)
+
+
+def init_cache(cfg: ModelConfig, batch: int) -> RwkvCache:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    dtype = jnp.dtype(cfg.compute_dtype)
+    return RwkvCache(wkv=jnp.zeros((batch, h, hd, hd), jnp.float32),
+                     shift=jnp.zeros((batch, d), dtype),
+                     cmix_shift=jnp.zeros((batch, d), dtype))
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """x_{t-1} with x_{-1} = prev (zeros at sequence start)."""
+    if x.shape[1] == 1 and prev is not None:
+        return prev[:, None]
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if prev is not None:
+        shifted = shifted.at[:, 0].set(prev)
+    return shifted
+
+
+@jax.named_scope("_wkv_scan")
+def _wkv_scan(r, k, v, w, u, state):
+    """Sequential wkv recurrence. r,k,v: (B,S,H,D); w: (B,S,H,D) decay in (0,1);
+    u: (H,D) bonus. state: (B,H,D,D). Returns out (B,S,H,D), final state."""
+    def step(wkv, inputs):
+        r_t, k_t, v_t, w_t = inputs  # (B,H,D) each
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B,H,D,D)
+        out = jnp.einsum("bhd,bhde->bhe", r_t, u[None, :, :, None] * kv + wkv)
+        wkv = w_t[..., :, None] * wkv + kv
+        return wkv, out
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
+    state, outs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(outs, 0, 1), state
+
+
+@jax.named_scope("_wkv_chunked")
+def _wkv_chunked(r, k, v, w, u, state, chunk: int = 16):
+    """Chunked-parallel wkv: mathematically identical to ``_wkv_scan`` but
+    matmul-shaped (MXU-friendly) — the §Perf fix for rwkv6 train/prefill.
+
+    Within a chunk of C steps (per head, per batch):
+        P_t[i]      = Π_{s≤t} w_s[i]           (channel-wise decay cumprod)
+        score(t,τ)  = Σ_i r_t[i]·(P_{t-1}/P_τ)[i]·k_τ[i]      (τ < t)
+        score(t,t)  = Σ_i r_t[i]·u[i]·k_t[i]
+        out_t       = Σ_τ score(t,τ)·v_τ + (r_t⊙P_{t-1})·S_in
+        S_out       = P_C⊙S_in + Σ_τ (P_C/P_τ)⊙k_τ v_τ
+    computed with the factorization a_t = r_t⊙P_{t-1}, b_τ = k_τ/P_τ, which is
+    f32-safe for C·|log w|_max ≤ ~80 (the decay exponent is clipped to ≥ −e in
+    time_mix, so C=16 ⇒ bound ≈ 43.5). Sequential work drops from S steps to
+    S/C chunk hops; per-step (D×D) state traffic becomes per-chunk.
+    """
+    b, s, h, d = r.shape
+    if s % chunk:
+        return _wkv_scan(r, k, v, w, u, state)
+    nc = s // chunk
+    rc, kc, vc, wc = (jnp.moveaxis(t.astype(jnp.float32).reshape(b, nc, chunk, h, d),
+                                   1, 0) for t in (r, k, v, w))
+
+    def per_chunk(s_in, inputs):
+        rr, kk, vv, ww = inputs  # (B, C, H, D)
+        logw = jnp.log(jnp.maximum(ww, 1e-38))
+        logp = jnp.cumsum(logw, axis=1)              # logP_t
+        p = jnp.exp(logp)
+        p_prev = jnp.exp(logp - logw)                # P_{t-1}
+        a = rr * p_prev                              # (B,C,H,D)
+        bmat = kk * jnp.exp(-logp)                   # k_τ / P_τ
+        scores = jnp.einsum("bthd,bshd->bhts", a, bmat)  # (B,H,C,C)
+        tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), -1)
+        scores = scores * tri[None, None]
+        diag = jnp.einsum("bthd,hd,bthd->bth", rr, u, kk)  # score(t,t)
+        scores = scores + jnp.einsum(
+            "bth,ts->bhts", diag, jnp.eye(chunk, dtype=jnp.float32))
+        intra = jnp.einsum("bhts,bshe->bthe", scores, vv)
+        cross = jnp.einsum("bthd,bhde->bthe", a, s_in)
+        out = intra + cross
+        # State update: S_out = P_C ⊙ S_in + Σ_τ (P_C/P_τ) k_τ v_τ
+        p_last = p[:, -1]                            # (B,H,D)
+        carry_k = kk * jnp.exp(logp[:, -1][:, None] - logp)  # (P_C/P_τ)·k_τ
+        s_out = p_last[..., None] * s_in + jnp.einsum("bshd,bshe->bhde", carry_k, vv)
+        return s_out, out
+
+    state, outs = jax.lax.scan(per_chunk, state.astype(jnp.float32),
+                               (rc, kc, vc, wc))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, d)
+    return out, state
+
+
+def time_mix(cfg: ModelConfig, p: dict, x: jax.Array,
+             cache: Optional[RwkvCache] = None):
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    prev = cache.shift if cache is not None else None
+    xs = _token_shift(x, prev)
+    delta = xs - x
+
+    # Data-dependent token-shift lerp (v6): mu + LoRA(x) per r/k/v/g/w stream.
+    base = p["mix_base"].astype(x.dtype)  # (N_MIX, d)
+    lora = jnp.tanh(jnp.einsum("bsd,dr->bsr", x + 0.5 * delta, p["mix_lora_a"].astype(x.dtype)))
+    lora = jnp.einsum("bsr,rmd->bsmd", lora, p["mix_lora_b"].astype(x.dtype))  # (B,S,M,d)
+    mixed = x[:, :, None, :] + (base[None, None] + lora) * delta[:, :, None, :]
+    xr, xk, xv, xg, xw = [mixed[:, :, i] for i in range(N_MIX)]
+
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(x.dtype)).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(x.dtype)).reshape(b, s, h, hd)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(x.dtype)).reshape(b, s, h, hd)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"].astype(x.dtype)))
+
+    # Data-dependent decay (v6): w_t = exp(-exp(decay_base + LoRA(xw))).
+    # Exponent clipped at +1 (w ≥ exp(-e) ≈ 0.066) so the chunked-parallel
+    # factorization below stays f32-safe (DESIGN.md §8).
+    dec = jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, p["decay_lora_a"].astype(x.dtype)))
+    dec = jnp.einsum("bsr,rd->bsd", dec, p["decay_lora_b"].astype(x.dtype))
+    log_w = -jnp.exp(jnp.clip(p["decay_base"].astype(jnp.float32)
+                              + dec.astype(jnp.float32), -8.0, 1.0))
+    w = jnp.exp(log_w).reshape(b, s, h, hd)  # in (0,1)
+
+    u = p["bonus"].astype(jnp.float32)  # (H, D)
+    state = cache.wkv if cache is not None else jnp.zeros((b, h, hd, hd), jnp.float32)
+    if s > 1 and s % 16 == 0:
+        out, new_state = _wkv_chunked(r, k, v, w, u, state, chunk=16)
+    else:
+        out, new_state = _wkv_scan(r, k, v, w, u, state)
+
+    # Per-head group norm then output projection, gated.
+    mean = out.mean(-1, keepdims=True)
+    var = out.var(-1, keepdims=True)
+    out = (out - mean) * jax.lax.rsqrt(var + 1e-5)
+    out = out * (1.0 + p["ln_x"].astype(jnp.float32).reshape(1, 1, h, hd))
+    out = (out.reshape(b, s, d).astype(x.dtype)) * g
+    out = jnp.einsum("bse,ed->bsd", out, p["wo"].astype(x.dtype))
+    out = logical_constraint(out, "batch", "res_seq", "embed_act")
+    new_cache = None
+    if cache is not None:
+        new_cache = RwkvCache(wkv=new_state, shift=x[:, -1], cmix_shift=cache.cmix_shift)
+    return out, new_cache
+
+
+def channel_mix(cfg: ModelConfig, p: dict, x: jax.Array,
+                cache: Optional[RwkvCache] = None):
+    prev = cache.cmix_shift if cache is not None else None
+    xs = _token_shift(x, prev)
+    delta = xs - x
+    xk = x + p["mu_k"].astype(x.dtype) * delta
+    xr = x + p["mu_r"].astype(x.dtype) * delta
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(x.dtype))
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv"].astype(x.dtype))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"].astype(x.dtype)))
+    out = logical_constraint(r * kv, "batch", "res_seq", "embed_act")
+    new_cache = None
+    if cache is not None:
+        new_cache = cache._replace(cmix_shift=x[:, -1])
+    return out, new_cache

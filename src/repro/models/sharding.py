@@ -1,0 +1,140 @@
+"""Logical-axis sharding (MaxText-style) for GSPMD distribution.
+
+Every parameter and major activation is annotated with *logical* axis names;
+``ShardingRules`` maps logical names → mesh axes. GSPMD tolerates
+non-divisible dims (e.g. starcoder2's 36 heads on 16-way tensor parallelism)
+via implicit padding, which is why the model stack uses ``jit`` +
+``with_sharding_constraint`` instead of ``shard_map``.
+
+The active (mesh, rules) pair is threaded through a context variable so model
+code stays pure and runs unmodified on a single device (constraints become
+no-ops when no context is set).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical name -> mesh axis (or tuple of axes, or None = replicate)."""
+
+    # Weights
+    embed_w: Axis = "data"        # FSDP: shard the embed dim of every weight
+    vocab: Axis = "model"
+    heads: Axis = "model"
+    kv_heads: Axis = "model"
+    ffn: Axis = "model"
+    experts: Axis = "model"
+    ssm_inner: Axis = "model"
+    rwkv_heads: Axis = "model"
+    layers: Axis = None
+    # Activations
+    batch: Axis = ("pod", "data")
+    seq: Axis = None              # seq dim of qkv/ffn activations (leave None)
+    res_seq: Axis = None          # residual-stream seq dim only: set to
+                                  # "model" for Megatron-style sequence
+                                  # parallelism (RS/AG around each block)
+    embed_act: Axis = None        # residual-stream embed dim (alternative SP)
+    cache_seq: Axis = None        # long-context decode: shard KV cache length
+    # Misc small dims
+    head_dim: Axis = None
+    ssm_state: Axis = None
+    conv: Axis = None
+    capacity: Axis = None
+    dt_rank: Axis = None
+    lora: Axis = None
+
+    def spec(self, *names: Optional[str], mesh_axes: Optional[tuple] = None) -> P:
+        axes = []
+        used: set[str] = set()
+        for name in names:
+            if name is None:
+                axes.append(None)
+                continue
+            ax = getattr(self, name)
+            # Drop axes absent from this mesh (e.g. "pod" on the single-pod mesh)
+            # and mesh axes already consumed by an earlier dim (GSPMD forbids reuse).
+            if isinstance(ax, tuple):
+                ax = tuple(a for a in ax
+                           if a not in used and (mesh_axes is None or a in mesh_axes))
+                ax = ax or None
+            elif ax in used or (mesh_axes is not None and ax is not None
+                                and ax not in mesh_axes):
+                ax = None
+            if isinstance(ax, tuple):
+                used.update(ax)
+            elif ax is not None:
+                used.add(ax)
+            axes.append(ax)
+        return P(*axes)
+
+
+_CTX: contextvars.ContextVar[Optional[tuple[Mesh, ShardingRules]]] = \
+    contextvars.ContextVar("sharding_ctx", default=None)
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Optional[Mesh], rules: Optional[ShardingRules] = None):
+    """Activate (mesh, rules) for logical_constraint / make_sharding below."""
+    token = _CTX.set((mesh, rules or ShardingRules()) if mesh is not None else None)
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def current() -> Optional[tuple[Mesh, ShardingRules]]:
+    return _CTX.get()
+
+
+def logical_constraint(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """with_sharding_constraint under the active context; no-op otherwise."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    # Trim/pad names to rank.
+    names = tuple(names[: x.ndim]) + (None,) * (x.ndim - len(names))
+    spec = rules.spec(*names, mesh_axes=tuple(mesh.axis_names))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def make_sharding(names: tuple, mesh: Optional[Mesh] = None,
+                  rules: Optional[ShardingRules] = None,
+                  shape: Optional[tuple] = None) -> Optional[NamedSharding]:
+    """NamedSharding for a logical-axes tuple (for in_shardings / params).
+
+    When ``shape`` is given, dims that the mapped mesh axes do not divide
+    evenly are left unsharded — jit input shardings require divisibility
+    (internal with_sharding_constraint hints tolerate GSPMD padding instead).
+    """
+    ctx = _CTX.get()
+    if mesh is None and ctx is not None:
+        mesh, rules = ctx
+    if mesh is None:
+        return None
+    rules = rules or ShardingRules()
+    spec = rules.spec(*names, mesh_axes=tuple(mesh.axis_names))
+    if shape is not None:
+        fitted = []
+        entries = tuple(spec) + (None,) * (len(shape) - len(spec))
+        for dim, ax in zip(shape, entries):
+            if ax is None:
+                fitted.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            fitted.append(ax if size and dim % size == 0 else None)
+        spec = P(*fitted)
+    return NamedSharding(mesh, spec)

@@ -1,0 +1,136 @@
+"""Mamba selective-SSM block (for the Jamba hybrid; Gu & Dao 2023).
+
+Recurrence: h_t = Ā_t h_{t-1} + B̄_t x_t, y_t = C_t h_t + D x_t with
+Ā_t = exp(Δ_t A), B̄_t = Δ_t B_t (ZOH-ish discretization), and input-dependent
+Δ, B, C (the "selective" part). Implemented as a *chunked* scan: within a
+chunk the (T, d_inner, N) tensors are materialized (parallel), across chunks a
+(B, d_inner, N) state is carried (sequential lax.scan) — the standard
+TPU-friendly memory/parallelism trade. The chunk width is `cfg.ssm_chunk`;
+d_inner is sharded over `model` (tensor parallel) so the per-device chunk
+working set is (B·T_c·d_inner/TP·N).
+
+Decode carries (conv_state (B, d_inner, W−1), ssm_state (B, d_inner, N)) —
+O(1) per token, which is what makes `long_500k` runnable for jamba.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .sharding import logical_constraint
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array  # (B, d_inner, W-1)
+    ssm: jax.Array   # (B, d_inner, N) float32
+
+
+def init_cache(cfg: ModelConfig, batch: int) -> MambaCache:
+    di, n, w = cfg.d_inner, cfg.ssm_state_dim, cfg.ssm_conv_width
+    dtype = jnp.dtype(cfg.compute_dtype)
+    return MambaCache(conv=jnp.zeros((batch, di, w - 1), dtype),
+                      ssm=jnp.zeros((batch, di, n), jnp.float32))
+
+
+def _ssm_scan_chunked(a_disc, bx, chunk: int, h0=None):
+    """h_t = a_t * h_{t-1} + bx_t over seq axis 1.
+
+    a_disc, bx: (B, S, d, N). Within a chunk: cumulative products (parallel);
+    across chunks: carried state. Returns h: (B, S, d, N) float32, h_last.
+    """
+    b, s, d, n = a_disc.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        raise ValueError(f"seq {s} not divisible by ssm_chunk {chunk}")
+    nc = s // chunk
+    a_c = a_disc.reshape(b, nc, chunk, d, n)
+    bx_c = bx.reshape(b, nc, chunk, d, n)
+    if h0 is None:
+        h0 = jnp.zeros((b, d, n), jnp.float32)
+
+    def per_chunk(h_in, inputs):
+        a, u = inputs  # (B, T, d, N)
+        # cumprod of a within chunk: p_t = a_1…a_t
+        log_a = jnp.log(jnp.maximum(a, 1e-37))
+        cum = jnp.cumsum(log_a, axis=1)
+        p = jnp.exp(cum)
+        # h_t = p_t (h_0 + Σ_{τ≤t} u_τ / p_τ)
+        inv_p = jnp.exp(-cum)
+        acc = jnp.cumsum(u * inv_p, axis=1)
+        h = p * (h_in[:, None] + acc)
+        return h[:, -1], h
+
+    h_last, hs = jax.lax.scan(
+        per_chunk, h0.astype(jnp.float32),
+        (jnp.moveaxis(a_c, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(bx_c, 1, 0).astype(jnp.float32)))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, d, n)
+    return h, h_last
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, prev: Optional[jax.Array] = None):
+    """Depthwise causal conv along seq. x: (B, S, d); w: (d, W). Returns y and
+    the trailing (B, d, W-1) state for decode handoff."""
+    b, s, d = x.shape
+    width = w.shape[-1]
+    xt = jnp.swapaxes(x, 1, 2)  # (B, d, S)
+    if prev is None:
+        prev = jnp.zeros((b, d, width - 1), x.dtype)
+    xp = jnp.concatenate([prev, xt], axis=-1)  # (B, d, S+W-1)
+    idx = jnp.arange(s)[:, None] + jnp.arange(width)[None, :]  # (S, W)
+    windows = xp[:, :, idx]  # (B, d, S, W)
+    y = jnp.einsum("bdsw,dw->bds", windows, w.astype(x.dtype))
+    new_state = xp[:, :, -(width - 1):] if width > 1 else jnp.zeros((b, d, 0), x.dtype)
+    return jnp.swapaxes(y, 1, 2), new_state
+
+
+@jax.named_scope("mamba_block")
+def mamba_block(cfg: ModelConfig, p: dict, x: jax.Array,
+                cache: Optional[MambaCache] = None):
+    """x: (B, S, d_model) -> (B, S, d_model)[, new cache when decoding (S=1)]."""
+    b, s, d = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state_dim
+    r = cfg.resolved_dt_rank
+    decode = cache is not None
+
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))  # (B,S,2di)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = logical_constraint(xin, "batch", "seq", "ssm_inner")
+
+    conv_w = p["conv_w"]  # (di, W)
+    if decode:
+        y_conv, conv_state = _causal_conv(xin, conv_w, prev=cache.conv)
+    else:
+        y_conv, conv_state = _causal_conv(xin, conv_w)
+    xin = jax.nn.silu(y_conv + p["conv_b"].astype(x.dtype))
+
+    # Input-dependent Δ, B, C.
+    dbc = jnp.einsum("bsd,de->bse", xin, p["x_proj"].astype(x.dtype))
+    dt, bmat, cmat = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = jnp.einsum("bsr,rd->bsd", dt, p["dt_proj"].astype(x.dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (di, N)
+    a_disc = jnp.exp(dt[..., None] * a[None, None])  # (B,S,di,N)
+    bx = (dt[..., None] * bmat.astype(jnp.float32)[:, :, None, :]
+          * xin.astype(jnp.float32)[..., None])  # (B,S,di,N)
+
+    if decode and s == 1:
+        h = cache.ssm * a_disc[:, 0] + bx[:, 0]  # (B,di,N)
+        y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0].astype(jnp.float32))[:, None]
+        new_ssm = h
+    else:
+        h0 = cache.ssm if decode else None  # prefill-with-cache continues state
+        hs, h_last = _ssm_scan_chunked(a_disc, bx, cfg.ssm_chunk, h0=h0)
+        y = jnp.einsum("bsdn,bsn->bsd", hs, cmat.astype(jnp.float32))
+        new_ssm = h_last if decode else None
+
+    y = y + xin.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    out = logical_constraint(out, "batch", "res_seq", "embed_act")
+    if decode:
+        return out, MambaCache(conv=conv_state, ssm=new_ssm)
+    return out, None

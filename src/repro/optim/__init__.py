@@ -1,0 +1,2 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from .schedule import cosine_lr, linear_warmup_cosine  # noqa: F401

@@ -1,0 +1,156 @@
+"""AdamW with sharded states and optional 8-bit (block-quantized) moments.
+
+Optimizer states inherit each parameter's sharding (quantization blocks run
+along the **last** axis only, so leading-dim shardings — FSDP on `embed`,
+TP on `heads`/`ffn` — are preserved on the int8 codes). The 8-bit mode stores
+m and v as int8 with fp32 absmax per 256-element block (Dettmers-style),
+cutting optimizer HBM 4× vs fp32 — this is what lets nemotron-4-340b fit
+training state on 256 × 16 GiB chips (EXPERIMENTS.md §Dry-run).
+
+Gradient clipping is global-norm; weight decay is decoupled (AdamW).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+QBLOCK = 256  # elements per quantization block (last axis)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    state_dtype: str = "float32"     # float32 | bfloat16 | int8
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class QTensor:
+    """Last-axis blockwise-quantized tensor (sharding-preserving)."""
+
+    codes: jax.Array   # int8, shape = lead_dims + (padded_last,)
+    scales: jax.Array  # f32,  shape = lead_dims + (num_blocks,)
+    orig_last: int     # static: unpadded last-dim size
+
+    def tree_flatten(self):
+        return (self.codes, self.scales), (self.orig_last,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(codes=children[0], scales=children[1], orig_last=aux[0])
+
+
+def _quantize(x: jax.Array) -> QTensor:
+    lead = x.shape[:-1]
+    last = x.shape[-1] if x.ndim else 1
+    xf = x.astype(jnp.float32).reshape(lead + (last,))
+    nb = -(-last // QBLOCK)
+    pad = nb * QBLOCK - last
+    if pad:
+        xf = jnp.pad(xf, [(0, 0)] * len(lead) + [(0, pad)])
+    blocks = xf.reshape(lead + (nb, QBLOCK))
+    scales = jnp.max(jnp.abs(blocks), axis=-1) / 127.0
+    safe = jnp.where(scales > 0, scales, 1.0)
+    codes = jnp.clip(jnp.round(blocks / safe[..., None]), -127, 127).astype(jnp.int8)
+    return QTensor(codes=codes.reshape(lead + (nb * QBLOCK,)), scales=scales,
+                   orig_last=last)
+
+
+def _dequantize(q: QTensor, shape) -> jax.Array:
+    lead = q.codes.shape[:-1]
+    nb = q.scales.shape[-1]
+    blocks = q.codes.astype(jnp.float32).reshape(lead + (nb, QBLOCK))
+    out = (blocks * q.scales[..., None]).reshape(lead + (nb * QBLOCK,))
+    out = out[..., :q.orig_last]
+    return out.reshape(shape)
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: object  # pytree congruent with params at param positions
+    v: object
+
+
+def _encode(x, dtype: str):
+    if dtype == "int8":
+        return _quantize(x)
+    return x.astype(jnp.dtype(dtype))
+
+
+def _decode(x, shape, dtype: str):
+    if dtype == "int8":
+        return _dequantize(x, shape)
+    return x.astype(jnp.float32)
+
+
+def _map_over_params(params, fn, *rests):
+    """tree.map over the *param* tree structure; rest trees may hold QTensor
+    (or any subtree) at each param-leaf position."""
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_rests = [treedef.flatten_up_to(r) for r in rests]
+    out = [fn(p, *(fr[i] for fr in flat_rests)) for i, p in enumerate(flat_p)]
+    return out, treedef
+
+
+def adamw_init(params, config: AdamWConfig) -> AdamWState:
+    def zero_like(p):
+        z = jnp.zeros(p.shape if p.ndim else (1,), jnp.float32)
+        return _encode(z, config.state_dtype)
+
+    flat, treedef = _map_over_params(params, zero_like)
+    m = jax.tree.unflatten(treedef, flat)
+    flat_v, _ = _map_over_params(params, zero_like)
+    v = jax.tree.unflatten(treedef, flat_v)
+    return AdamWState(step=jnp.int32(0), m=m, v=v)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state: AdamWState, config: AdamWConfig,
+                 lr: Optional[jax.Array] = None):
+    """Returns (new_params, new_state, metrics)."""
+    lr = config.learning_rate if lr is None else lr
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, config.grad_clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    b1, b2 = config.beta1, config.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        shape = p.shape if p.ndim else (1,)
+        g32 = g.astype(jnp.float32).reshape(shape) * clip
+        m32 = b1 * _decode(m, shape, config.state_dtype) + (1 - b1) * g32
+        v32 = b2 * _decode(v, shape, config.state_dtype) + (1 - b2) * g32 * g32
+        update = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + config.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            update = update + config.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32).reshape(shape) - lr * update).astype(p.dtype)
+        return (new_p.reshape(p.shape), _encode(m32, config.state_dtype),
+                _encode(v32, config.state_dtype))
+
+    flat, treedef = _map_over_params(params, upd, grads, state.m, state.v)
+    new_params = jax.tree.unflatten(treedef, [t[0] for t in flat])
+    new_m = jax.tree.unflatten(treedef, [t[1] for t in flat])
+    new_v = jax.tree.unflatten(treedef, [t[2] for t in flat])
+    metrics = {"grad_norm": gnorm, "clip_factor": clip}
+    return new_params, AdamWState(step=step, m=new_m, v=new_v), metrics
+
+
+def state_bytes(state: AdamWState) -> int:
+    """Actual optimizer-state bytes (for the memory accounting in §Dry-run)."""
+    total = 0
+    for leaf in jax.tree.leaves(state):
+        total += leaf.size * leaf.dtype.itemsize
+    return total

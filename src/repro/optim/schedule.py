@@ -1,0 +1,25 @@
+"""Learning-rate schedules for the train loop."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_lr(base_lr: float, total_steps: int, min_ratio: float = 0.1):
+    def lr(step):
+        frac = jnp.minimum(step.astype(jnp.float32) / max(total_steps, 1), 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return base_lr * (min_ratio + (1 - min_ratio) * cos)
+
+    return lr
+
+
+def linear_warmup_cosine(base_lr: float, warmup_steps: int, total_steps: int,
+                         min_ratio: float = 0.1):
+    decay = cosine_lr(base_lr, max(total_steps - warmup_steps, 1), min_ratio)
+
+    def lr(step):
+        step_f = step.astype(jnp.float32)
+        warm = base_lr * step_f / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, decay(step - warmup_steps))
+
+    return lr

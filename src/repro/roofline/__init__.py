@@ -1,0 +1,2 @@
+from .analysis import (HW, CellReport, analyze_compiled, collective_bytes,  # noqa: F401
+                       format_report_table)

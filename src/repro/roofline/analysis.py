@@ -1,0 +1,248 @@
+"""Three-term roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Terms (seconds), per (arch × shape × mesh):
+
+    t_compute    = device_FLOPs / peak_FLOPs_per_chip
+    t_memory     = device_bytes / HBM_bw_per_chip
+    t_collective = wire_bytes_per_device / ICI_bw_per_chip
+
+``compiled.cost_analysis()`` on the SPMD-partitioned module reports
+**per-device** flops/bytes (calibrated empirically: a 1024³ matmul on 4
+devices reports global/4), so terms divide by *per-chip* peaks — equivalent to
+the global/(chips·peak) formulation.
+
+Collective bytes are parsed from the compiled HLO text: every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+result shape and replica-group size, converted to ring-algorithm wire bytes
+per device:
+    all-reduce       2·B·(G−1)/G
+    all-gather       B_result·(G−1)/G
+    reduce-scatter   B_result·(G−1)        (operand = G·result)
+    all-to-all       B·(G−1)/G
+    collective-permute  B
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+# TPU v5e hardware constants (per chip).
+HW = {
+    "peak_flops_bf16": 197e12,   # FLOP/s
+    "hbm_bw": 819e9,             # B/s
+    "ici_bw": 50e9,              # B/s per link (conservative single-link figure)
+    "hbm_bytes": 16 * 1024**3,   # capacity
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(segment):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_V2_RE.search(line)
+    if m:  # iota format [num_groups, group_size]
+        return int(m.group(2))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0
+    op_bytes: dict = dataclasses.field(default_factory=dict)
+    op_counts: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, kind: str, b: float):
+        self.wire_bytes += b
+        self.op_bytes[kind] = self.op_bytes.get(kind, 0.0) + b
+        self.op_counts[kind] = self.op_counts.get(kind, 0) + 1
+
+
+def collective_bytes(hlo_text: str, default_group: int = 1) -> CollectiveStats:
+    """Ring-algorithm wire bytes per device, summed over all collective ops."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        head, _, rest = stripped.partition("=")
+        op = None
+        for kind in _COLLECTIVES:
+            # match the op name token, e.g. "all-reduce(" or "all-gather-start("
+            if re.search(rf"\b{kind}(-start)?\(", rest):
+                op = kind
+                break
+        if op is None:
+            continue
+        result_bytes = _shape_bytes(rest.split("(")[0])
+        if result_bytes == 0:
+            continue
+        g = _group_size(stripped, default_group)
+        if op == "all-reduce":
+            wire = 2.0 * result_bytes * (g - 1) / max(g, 1)
+        elif op == "all-gather":
+            wire = result_bytes * (g - 1) / max(g, 1)
+        elif op == "reduce-scatter":
+            wire = result_bytes * (g - 1)
+        elif op == "all-to-all":
+            wire = result_bytes * (g - 1) / max(g, 1)
+        else:  # collective-permute
+            wire = float(result_bytes)
+        stats.add(op, wire)
+    return stats
+
+
+@dataclasses.dataclass
+class CellReport:
+    arch: str
+    shape: str
+    mesh: str
+    num_devices: int
+    device_flops: float
+    device_bytes: float
+    wire_bytes: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float          # 6·N·D (or 2·N·D inference) GLOBAL
+    useful_ratio: float         # model_flops / global HLO flops
+    memory_per_device: dict
+    collective_ops: dict
+    scope_bytes: dict = dataclasses.field(default_factory=dict)
+    scope_flops: dict = dataclasses.field(default_factory=dict)
+    note: str = ""
+
+    @property
+    def step_time(self) -> float:
+        """Roofline step time (max of the three terms — perfect overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline step time."""
+        total_peak = self.num_devices * HW["peak_flops_bf16"]
+        return self.model_flops / (self.step_time * total_peak) if self.step_time else 0.0
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
+                     num_devices: int, model_flops: float,
+                     hlo_text: Optional[str] = None, note: str = "") -> CellReport:
+    from . import hlo_cost
+
+    ca = compiled.cost_analysis() or {}
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    # Loop-aware walker: XLA's cost_analysis counts while bodies once, which
+    # undercounts every scanned program (see hlo_cost module docstring).
+    walked = hlo_cost.analyze(text, default_group=num_devices)
+    dev_flops = walked.flops or float(ca.get("flops", 0.0))
+    # Memory term uses the fusion-optimistic count (TPU target fuses
+    # elementwise chains; CPU-compiled HLO does not — see hlo_cost).
+    dev_bytes = walked.bytes_fused or walked.bytes or float(ca.get("bytes accessed", 0.0))
+    stats = CollectiveStats(wire_bytes=walked.wire_bytes,
+                            op_bytes=walked.collective_bytes_by_op)
+    t_comp = dev_flops / HW["peak_flops_bf16"]
+    t_mem = dev_bytes / HW["hbm_bw"]
+    t_coll = stats.wire_bytes / HW["ici_bw"]
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    mem = compiled.memory_analysis()
+    mem_dict = {
+        "arguments": int(getattr(mem, "argument_size_in_bytes", 0)),
+        "outputs": int(getattr(mem, "output_size_in_bytes", 0)),
+        "temps": int(getattr(mem, "temp_size_in_bytes", 0)),
+        "aliased": int(getattr(mem, "alias_size_in_bytes", 0)),
+    }
+    global_flops = dev_flops * num_devices
+    return CellReport(
+        arch=arch, shape=shape, mesh=mesh_name, num_devices=num_devices,
+        device_flops=dev_flops, device_bytes=dev_bytes,
+        wire_bytes=stats.wire_bytes,
+        t_compute=t_comp, t_memory=t_mem, t_collective=t_coll,
+        bottleneck=bottleneck, model_flops=model_flops,
+        useful_ratio=(model_flops / global_flops) if global_flops else 0.0,
+        memory_per_device=mem_dict, collective_ops=dict(stats.op_bytes),
+        scope_bytes=dict(sorted(walked.scope_bytes.items(),
+                                key=lambda kv: -kv[1])[:10]),
+        scope_flops=dict(sorted(walked.scope_flops.items(),
+                                key=lambda kv: -kv[1])[:10]),
+        note=note,
+    )
+
+
+def apply_flash_substitution(report: CellReport, *, head_dim: int, causal: bool,
+                             block_q: int = 512, block_k: int = 512) -> CellReport:
+    """Model replacing the jnp chunked attention with the Pallas flash kernel
+    (repro.kernels.flash_attention) in a compiled cell.
+
+    Per (block_q × block_k) tile the jnp path moves ≈ 3 f32 traversals of the
+    score tile through HBM (dot result, exp/mask fusion, p operand of the pv
+    dot) plus the bf16 q/k/v/o streams; the kernel keeps the tile in VMEM so
+    only the streams survive. The ratio is applied to the walker-measured
+    attention-scope bytes (loop/remat/microbatch multipliers cancel). Causal
+    cells also drop the ~2× rectangle-vs-triangle FLOP waste (the kernel's
+    loop bound stops at the diagonal; the jnp path computes all tiles).
+    """
+    attn_bytes = report.scope_bytes.get("chunked_attention", 0.0)
+    attn_flops = report.scope_flops.get("chunked_attention", 0.0)
+    if attn_bytes == 0 and attn_flops == 0:
+        return report
+    score_traffic = 3.0 * 4.0 * block_q * block_k
+    streams = 2.0 * (block_q + block_k) * head_dim * 2.0
+    ratio = streams / (score_traffic + streams)
+    if causal:
+        ratio *= 0.5
+    new_bytes = report.device_bytes - attn_bytes * (1.0 - ratio)
+    new_flops = report.device_flops - (attn_flops * 0.5 if causal else 0.0)
+    t_comp = new_flops / HW["peak_flops_bf16"]
+    t_mem = new_bytes / HW["hbm_bw"]
+    terms = {"compute": t_comp, "memory": t_mem, "collective": report.t_collective}
+    global_flops = new_flops * report.num_devices
+    return dataclasses.replace(
+        report, device_flops=new_flops, device_bytes=new_bytes,
+        t_compute=t_comp, t_memory=t_mem,
+        bottleneck=max(terms, key=terms.get),
+        useful_ratio=(report.model_flops / global_flops) if global_flops else 0.0,
+        note=(report.note + " +flash-attn-kernel").strip(),
+    )
+
+
+def format_report_table(reports: list[CellReport]) -> str:
+    header = ("| arch | shape | mesh | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+              "bottleneck | useful | roofline MFU | HBM/dev (GiB) |\n"
+              "|---|---|---|---|---|---|---|---|---|---|")
+    rows = [header]
+    for r in reports:
+        hbm = (r.memory_per_device["arguments"] + r.memory_per_device["outputs"]
+               + r.memory_per_device["temps"] - r.memory_per_device["aliased"])
+        rows.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.t_compute*1e3:.2f} | "
+            f"{r.t_memory*1e3:.2f} | {r.t_collective*1e3:.2f} | {r.bottleneck} | "
+            f"{r.useful_ratio:.2f} | {r.mfu*100:.1f}% | {hbm/2**30:.2f} |")
+    return "\n".join(rows)

@@ -1,0 +1,2 @@
+from .step import TrainState, lm_loss, make_train_step  # noqa: F401
+from .loop import TrainLoopConfig, train_loop  # noqa: F401

@@ -1,0 +1,146 @@
+"""Train step: loss, gradient accumulation (microbatching), optimizer update.
+
+Loss is next-token (or masked-prediction) cross-entropy computed against
+(possibly vocab-sharded) logits; labels < 0 are ignored (encoder masking and
+padding). Microbatching scans over grad-accumulation slices so the peak
+activation footprint is ``1/num_microbatches`` of the global batch — the knob
+that fits nemotron-4-340b's train_4k activations on v5e (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import forward
+from ..models.config import ModelConfig
+from ..optim import AdamWConfig, adamw_init, adamw_update
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt_state: object
+    step: jax.Array
+
+
+def lm_loss(cfg: ModelConfig, params: dict, batch: dict) -> tuple[jax.Array, dict]:
+    """Mean CE over valid label positions + MoE aux. Returns (loss, metrics)."""
+    kwargs = {}
+    if "tokens" in batch:
+        kwargs["tokens"] = batch["tokens"]
+    if "embeddings" in batch:
+        kwargs["embeddings"] = batch["embeddings"]
+    out = forward(cfg, params, **kwargs)
+    logits = out.logits.astype(jnp.float32)
+    labels = batch["labels"]
+    if labels.shape[1] != logits.shape[1]:  # next-token on same-length stream
+        logits = logits[:, : labels.shape[1]]
+    valid = labels >= 0
+    safe_labels = jnp.where(valid, labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # One-hot einsum instead of take_along_axis: a gather along the
+    # vocab-sharded dim would force GSPMD to all-gather the logits
+    # (~40 GiB/device for 152k vocab at train_4k); the einsum contracts the
+    # sharded dim into a partial-sum + all-reduce instead.
+    onehot = jax.nn.one_hot(safe_labels, logits.shape[-1], dtype=logits.dtype)
+    picked = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    token_ce = (lse - picked) * valid.astype(jnp.float32)
+    denom = jnp.maximum(valid.sum(), 1)
+    ce = token_ce.sum() / denom
+    loss = ce + out.aux_loss
+    return loss, {"ce": ce, "aux": out.aux_loss,
+                  "tokens": denom.astype(jnp.float32)}
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig,
+                    lr_fn: Optional[Callable] = None,
+                    num_microbatches: int = 1,
+                    donate: bool = True,
+                    param_shardings=None,
+                    gathered_shardings=None):
+    """Build the jitted train step. Batch leading dim must divide microbatches.
+
+    ``param_shardings`` (optional pytree of NamedSharding congruent with
+    params): GSPMD's backward-of-scan gradient accumulators otherwise lose the
+    FSDP/TP sharding and replicate stacked-layer grads (~30 GiB/device for a
+    7B model) — the explicit constraint pins them to the param layout.
+
+    ``gathered_shardings`` (optional): shardings with the FSDP (`data`) axis
+    removed. When given, params are cast to the compute dtype and
+    all-gathered ONCE per step *outside* the microbatch loop, instead of
+    re-gathered every microbatch — an ``num_microbatches×`` reduction of the
+    dominant all-gather traffic (EXPERIMENTS.md §Perf hillclimb #1).
+    """
+
+    def constrain_grads(grads):
+        if param_shardings is None:
+            return grads
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s) if s is not None else g,
+            grads, param_shardings)
+
+    def split_mb(batch):
+        def r(x):
+            b = x.shape[0]
+            return x.reshape((num_microbatches, b // num_microbatches) + x.shape[1:])
+        return {k: r(v) for k, v in batch.items()}
+
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+
+    def gather_once(params):
+        """bf16-cast + FSDP-unshard the params once per step (hoisted out of
+        the microbatch loop by construction)."""
+        if gathered_shardings is None:
+            return params
+        return jax.tree.map(
+            lambda p, s: jax.lax.with_sharding_constraint(
+                p.astype(compute_dtype) if p.dtype == jnp.float32 else p, s)
+            if s is not None else p.astype(compute_dtype),
+            params, gathered_shardings)
+
+    def grads_and_metrics(params, batch):
+        fwd_params = gather_once(params)
+        if num_microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: lm_loss(cfg, p, batch), has_aux=True)(fwd_params)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            return loss, constrain_grads(grads), metrics
+        mbs = split_mb(batch)
+
+        def body(carry, mb):
+            loss_acc, grads_acc = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: lm_loss(cfg, p, mb), has_aux=True)(fwd_params)
+            grads_acc = constrain_grads(jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), grads_acc, grads))
+            return (loss_acc + loss, grads_acc), metrics
+
+        zero_grads = constrain_grads(
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        (loss_sum, grads), metrics = jax.lax.scan(body, (jnp.float32(0.0), zero_grads), mbs)
+        inv = 1.0 / num_microbatches
+        grads = constrain_grads(jax.tree.map(lambda g: g * inv, grads))
+        last_metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss_sum * inv, grads, last_metrics
+
+    def train_step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        loss, grads, metrics = grads_and_metrics(state.params, batch)
+        lr = lr_fn(state.step) if lr_fn is not None else None
+        new_params, new_opt, opt_metrics = adamw_update(
+            state.params, grads, state.opt_state, opt, lr=lr)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        if lr is not None:
+            metrics["lr"] = lr
+        return TrainState(params=new_params, opt_state=new_opt,
+                          step=state.step + 1), metrics
+
+    donate_args = (0,) if donate else ()
+    return jax.jit(train_step, donate_argnums=donate_args)
+
+
+def init_train_state(cfg: ModelConfig, params: dict, opt: AdamWConfig) -> TrainState:
+    return TrainState(params=params, opt_state=adamw_init(params, opt),
+                      step=jnp.int32(0))

@@ -1,0 +1,75 @@
+"""Bit-plane codec + Hamming-weight local-field math (paper §IV-B1, Eq. 13-16)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitplane, ising
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 40), st.integers(1, 12))
+def test_encode_decode_roundtrip(seed, n, num_planes):
+    rng = np.random.default_rng(seed)
+    limit = (1 << num_planes) - 1
+    J = rng.integers(-limit, limit + 1, size=(n, n)).astype(np.int64)
+    J = np.triu(J, 1)
+    J = J + J.T
+    planes = bitplane.encode_couplings(J, num_planes)
+    back = bitplane.decode_couplings(planes)
+    np.testing.assert_array_equal(back, J)
+
+
+def test_encode_rejects_overflow():
+    J = np.zeros((4, 4))
+    J[0, 1] = J[1, 0] = 4  # needs 3 planes
+    with pytest.raises(ValueError, match="planes"):
+        bitplane.encode_couplings(J, 2)
+    with pytest.raises(ValueError, match="integer"):
+        bitplane.encode_couplings(J * 0.3, 8)
+
+
+def test_pack_spins_bits():
+    s = np.array([1, -1, 1, 1] + [-1] * 60 + [1, 1], np.int8)  # 66 spins -> 3 words
+    packed = np.asarray(bitplane.pack_spins(jnp.asarray(s)))
+    assert packed.shape == (3,)
+    x = (s + 1) // 2
+    for j, bit in enumerate(x):
+        assert (packed[j // 32] >> (j % 32)) & 1 == bit
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 70), st.integers(1, 8))
+def test_hamming_weight_local_fields_match_dense(seed, n, num_planes):
+    """Eq. 14-16: popcount accumulation == dense J @ s."""
+    rng = np.random.default_rng(seed)
+    limit = (1 << num_planes) - 1
+    J = rng.integers(-limit, limit + 1, size=(n, n)).astype(np.int64)
+    J = np.triu(J, 1)
+    J = J + J.T
+    planes = bitplane.encode_couplings(J, num_planes)
+    s = np.where(rng.random(n) < 0.5, 1, -1).astype(np.int8)
+    u = np.asarray(bitplane.local_fields_from_planes(planes, jnp.asarray(s)))
+    ref = J.astype(np.float64) @ s
+    np.testing.assert_allclose(u, ref, rtol=0, atol=1e-3)
+
+
+def test_local_fields_batched_replicas():
+    rng = np.random.default_rng(0)
+    n, r = 48, 5
+    J = rng.integers(-3, 4, size=(n, n))
+    J = np.triu(J, 1)
+    J = J + J.T
+    planes = bitplane.encode_couplings(J, 3)
+    s = np.where(rng.random((r, n)) < 0.5, 1, -1).astype(np.int8)
+    u = np.asarray(bitplane.local_fields_from_planes(planes, jnp.asarray(s)))
+    assert u.shape == (r, n)
+    np.testing.assert_allclose(u, s.astype(np.float64) @ J.T, atol=1e-3)
+
+
+def test_memory_scales_linearly_in_planes():
+    """Paper's scalability claim: bytes grow linearly with precision B."""
+    J = np.zeros((64, 64))
+    sizes = [bitplane.encode_couplings(J, b).nbytes for b in (1, 2, 4, 8)]
+    assert sizes[1] == 2 * sizes[0] and sizes[3] == 8 * sizes[0]

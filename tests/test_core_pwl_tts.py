@@ -1,0 +1,74 @@
+"""PWL logistic approximation (paper §IV-B3a) and TTS statistics (Eq. 32)."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pwl, tts
+
+
+@pytest.mark.parametrize("segments,zmax", [(32, 8.0), (64, 8.0), (128, 12.0)])
+def test_pwl_sigmoid_error_within_analytic_bound(segments, zmax):
+    f = pwl.make_pwl_sigmoid(segments, zmax)
+    x = np.linspace(-zmax * 1.5, zmax * 1.5, 20001).astype(np.float32)
+    approx = np.asarray(f(jnp.asarray(x)))
+    exact = 1.0 / (1.0 + np.exp(-x.astype(np.float64)))
+    err = np.abs(approx - exact)
+    bound = pwl.pwl_error_bound(segments, zmax) + np.float32(1e-6)
+    # Tail clamp error: σ(zmax) vs 1 — include it in the tolerance.
+    tail = 1.0 / (1.0 + math.exp(zmax))
+    assert err.max() <= bound + tail
+
+
+def test_flip_probability_limits():
+    """Paper Fig. 3 behaviour: T→∞ ⇒ 0.5; T→0+ ⇒ {1, 0.5, 0} by sign of ΔE."""
+    fp = pwl.exact_flip_probability
+    de = jnp.asarray([-3.0, 0.0, 3.0])
+    hot = np.asarray(fp(de, jnp.float32(1e8)))
+    np.testing.assert_allclose(hot, 0.5, atol=1e-6)
+    cold = np.asarray(fp(de, jnp.float32(0.0)))
+    np.testing.assert_array_equal(cold, [1.0, 0.5, 0.0])
+    warm = np.asarray(fp(de, jnp.float32(1.0)))
+    assert 0.0 < warm[2] < 0.5 < warm[0] < 1.0  # uphill suppressed, downhill favoured
+
+
+def test_pwl_flip_probability_close_to_exact():
+    fp_pwl = pwl.pwl_flip_probability
+    fp_exact = pwl.exact_flip_probability
+    de = jnp.linspace(-20, 20, 401)
+    for T in (0.5, 1.0, 4.0):
+        a = np.asarray(fp_pwl(de, jnp.float32(T)))
+        b = np.asarray(fp_exact(de, jnp.float32(T)))
+        assert np.abs(a - b).max() < 2e-3
+
+
+def test_tts_formula_reference_values():
+    # Table III spot checks: Neal t_a=4610ms, P_a=0.38 -> TTS ~ 44413ms.
+    assert tts.tts(0.38, 4610.0) == pytest.approx(44413, rel=0.01)
+    # STATICA: t_a=0.13ms, P_a=0.07 -> 8.23ms.
+    assert tts.tts(0.07, 0.13) == pytest.approx(8.23, rel=0.01)
+    # Snowball: P_a=0.99 >= p ⇒ TTS = t_a.
+    assert tts.tts(0.99, 0.128) == pytest.approx(0.128)
+
+
+def test_tts_edge_cases():
+    assert math.isinf(tts.tts(0.0, 1.0))
+    assert tts.tts(1.0, 2.0) == 2.0
+    with pytest.raises(ValueError):
+        tts.tts(0.5, 1.0, target=1.0)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(1e-6, 0.98), st.floats(1e-3, 1e3))
+def test_tts_monotone_in_success_probability(p, t_a):
+    assert tts.tts(p, t_a) >= tts.tts(min(p * 1.5, 0.99), t_a) - 1e-9
+
+
+def test_estimate_from_replicas():
+    best = np.array([-10.0, -8.0, -10.0, -9.0])
+    r = tts.estimate(best, threshold=-10.0, time_per_run=2.0)
+    assert r.success_probability == 0.5
+    assert r.num_successes == 2
+    assert r.tts == pytest.approx(2.0 * math.log(0.01) / math.log(0.5), rel=1e-9)

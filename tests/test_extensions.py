@@ -1,0 +1,95 @@
+"""Beyond-core extensions: parallel tempering baseline, greedy 1-opt
+refinement, graph/number partitioning encodings."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ising
+from repro.core.refine import greedy_descent
+from repro.core.solver import solve
+from repro.core.tempering import TemperingConfig, solve_tempering
+from repro.configs.snowball import default_solver
+from repro.graphs import complete_bipolar, maxcut_to_ising
+from repro.graphs.partitioning import (graph_partitioning_to_ising,
+                                       number_partitioning_to_ising,
+                                       partition_cost, partition_residue)
+
+
+def _rough_problem(seed=0, n=12):
+    rng = np.random.default_rng(seed)
+    J = np.rint(rng.normal(size=(n, n)) * 2)
+    J = np.triu(J, 1)
+    J = J + J.T
+    return ising.IsingProblem.create(J=J)
+
+
+def test_parallel_tempering_finds_ground_state():
+    problem = _rough_problem(1, 12)
+    e_star, _, _ = ising.brute_force_ground_state(problem)
+    cfg = TemperingConfig(num_steps=4000, t_min=0.05, t_max=8.0,
+                          num_replicas=8, swap_every=10)
+    res = solve_tempering(problem, 0, cfg)
+    assert float(jnp.min(res.best_energy)) == pytest.approx(e_star, abs=1e-2)
+    # bookkeeping consistent
+    recomputed = np.asarray(ising.energy(problem, res.best_spins))
+    np.testing.assert_allclose(np.asarray(res.best_energy), recomputed, atol=1e-2)
+    assert 0.0 <= float(res.swap_acceptance) <= 1.0
+
+
+def test_parallel_tempering_swaps_happen():
+    problem = _rough_problem(2, 16)
+    cfg = TemperingConfig(num_steps=2000, t_min=0.1, t_max=4.0,
+                          num_replicas=8, swap_every=5)
+    res = solve_tempering(problem, 3, cfg)
+    assert float(res.swap_acceptance) > 0.05  # geometric ladder keeps exchange alive
+
+
+def test_greedy_descent_reaches_local_optimum_and_never_hurts():
+    problem = _rough_problem(3, 20)
+    key = jax.random.key(0)
+    spins = ising.random_spins(key, (6, 20))
+    e0 = np.asarray(ising.energy(problem, spins))
+    refined, e1 = greedy_descent(problem, spins)
+    e1 = np.asarray(e1)
+    assert (e1 <= e0 + 1e-4).all()
+    # 1-opt local optimality: no single flip improves
+    de = np.asarray(ising.delta_energies(problem, refined))
+    assert (de >= -1e-3).all()
+    # energies consistent
+    np.testing.assert_allclose(e1, np.asarray(ising.energy(problem, refined)),
+                               rtol=1e-4, atol=1e-2)
+
+
+def test_greedy_descent_after_anneal_improves_or_ties():
+    inst = complete_bipolar(64, seed=9)
+    problem = maxcut_to_ising(inst)
+    res = solve(problem, 0, default_solver(64, 800, "rwa", num_replicas=4))
+    _, refined_e = greedy_descent(problem, res.best_spins)
+    assert (np.asarray(refined_e) <= np.asarray(res.best_energy) + 1e-3).all()
+
+
+def test_number_partitioning_encoding():
+    values = [4, 5, 6, 7, 8]  # perfect partition: {4,5,6} vs {7,8}
+    problem = number_partitioning_to_ising(values)
+    e, s, _ = ising.brute_force_ground_state(problem)
+    assert e == pytest.approx(0.0, abs=1e-3)  # H + offset = residue² = 0
+    assert partition_residue(values, s) == pytest.approx(0.0, abs=1e-6)
+    # solver finds it too
+    res = solve(problem, 0, default_solver(5, 2000, "rwa", num_replicas=8))
+    assert float(jnp.min(res.best_energy)) == pytest.approx(0.0, abs=1e-3)
+
+
+def test_graph_partitioning_encoding_balances():
+    rng = np.random.default_rng(4)
+    n = 12
+    w = np.triu(rng.random((n, n)) < 0.4, 1).astype(np.float64)
+    w = w + w.T
+    lam = 2.0
+    problem = graph_partitioning_to_ising(w, balance_weight=lam)
+    e, s, _ = ising.brute_force_ground_state(problem)
+    # Ising energy + offset equals the explicit cost
+    assert e == pytest.approx(partition_cost(w, s, lam), rel=1e-4, abs=1e-3)
+    # the optimum at this λ is balanced
+    assert abs(int(np.sum(s))) <= 2

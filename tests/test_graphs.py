@@ -1,0 +1,111 @@
+"""Graph substrate: generators, Max-Cut/QUBO mappings, Gset parser, placement."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import ising, placement
+from repro.graphs import (GSET_SAMPLE, MaxCutInstance, complete_bipolar, cut_value,
+                          erdos_renyi, ising_to_qubo, maxcut_to_ising, parse_gset,
+                          qubo_to_ising, small_world, torus_grid)
+from repro.graphs.generators import ground_state_planted_grid
+from repro.graphs.maxcut import cut_from_energy, energy_from_cut
+from repro.graphs.qubo import qubo_energy
+
+
+def test_generator_statistics_match_table1_families():
+    g6 = erdos_renyi(80, 192, seed=0)   # scaled G6: n=800,|E|=19176 -> /10
+    assert g6.num_vertices == 80 and g6.num_edges == 192
+    sw = small_world(80, 6, seed=0)
+    assert sw.num_vertices == 80 and sw.num_edges > 0
+    tg = torus_grid(8, 10)
+    assert tg.num_vertices == 80 and tg.num_edges == 160  # 2 edges per vertex
+    k = complete_bipolar(50, seed=0)
+    assert k.num_edges == 50 * 49 // 2 and k.density == 1.0
+    w = np.asarray(k.weights)
+    assert set(np.unique(w[np.triu_indices(50, 1)])) == {-1.0, 1.0}
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10**6), st.integers(3, 12))
+def test_maxcut_energy_cut_duality(seed, n):
+    """cut(s) == (Σw − H(s))/2 for J = −w (paper §II-B mapping)."""
+    rng = np.random.default_rng(seed)
+    w = np.triu(rng.integers(-3, 4, size=(n, n)).astype(np.float32), 1)
+    w = w + w.T
+    inst = MaxCutInstance(weights=w)
+    prob = maxcut_to_ising(inst)
+    s = np.where(rng.random(n) < 0.5, 1, -1).astype(np.int8)
+    h_val = float(ising.energy(prob, jnp.asarray(s)))
+    assert cut_value(inst, s) == pytest.approx(float(cut_from_energy(inst, h_val)), abs=1e-3)
+    assert energy_from_cut(inst, cut_value(inst, s)) == pytest.approx(h_val, abs=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10**6), st.integers(2, 10))
+def test_qubo_ising_roundtrip(seed, n):
+    rng = np.random.default_rng(seed)
+    Q = rng.normal(size=(n, n))
+    prob = qubo_to_ising(Q)
+    for _ in range(8):
+        x = (rng.random(n) < 0.5).astype(np.float64)
+        s = (2 * x - 1).astype(np.int8)
+        e_ising = float(ising.energy(prob, jnp.asarray(s))) + prob.offset
+        assert e_ising == pytest.approx(qubo_energy(Q, x), rel=1e-4, abs=1e-4)
+    Q2, off2 = ising_to_qubo(prob)
+    x = (rng.random(n) < 0.5).astype(np.float64)
+    s = (2 * x - 1).astype(np.int8)
+    assert qubo_energy(Q2, x) + off2 == pytest.approx(
+        float(ising.energy(prob, jnp.asarray(s))) + prob.offset, rel=1e-4, abs=1e-4)
+
+
+def test_gset_parser_roundtrip():
+    inst = parse_gset(GSET_SAMPLE, name="sample")
+    assert inst.num_vertices == 10 and inst.num_edges == 14
+    assert inst.weights[0, 1] == 1.0 and inst.weights[2, 0] == -1.0
+    assert np.allclose(inst.weights, inst.weights.T)
+
+
+def test_gset_parser_rejects_bad_edge_count():
+    bad = "3 2\n1 2 1\n"
+    with pytest.raises(ValueError):
+        parse_gset(bad)
+
+
+def test_planted_ground_state_is_optimal():
+    inst, planted = ground_state_planted_grid(4, 4, seed=1)
+    best = cut_value(inst, planted)
+    assert best == pytest.approx(inst.best_known)
+    # No single-flip improvement exists at the plant (local optimality).
+    for i in range(16):
+        s2 = planted.copy()
+        s2[i] = -s2[i]
+        assert cut_value(inst, s2) <= best + 1e-6
+
+
+def test_placement_beats_random_and_balances():
+    rng = np.random.default_rng(0)
+    # Two clusters of experts with heavy intra-cluster traffic.
+    E = 16
+    C = rng.random((E, E)) * 0.1
+    C[:8, :8] += 5.0
+    C[8:, 8:] += 5.0
+    C = np.triu(C, 1)
+    C = C + C.T
+    res = placement.place(C, num_devices=2, seed=0, steps=1500, replicas=4)
+    rand_cuts = [placement.cut_bytes(C, rng.integers(0, 2, E)) for _ in range(20)]
+    assert res.cut_bytes < min(rand_cuts)
+    assert res.imbalance < 0.26
+    counts = np.bincount(res.assignment, minlength=2)
+    assert counts.min() >= 6  # near-balanced bisection
+
+
+def test_placement_four_devices():
+    rng = np.random.default_rng(1)
+    E = 16
+    C = np.triu(rng.random((E, E)), 1)
+    C = C + C.T
+    res = placement.place(C, num_devices=4, seed=0, steps=800, replicas=4)
+    assert set(np.unique(res.assignment)) == {0, 1, 2, 3}
+    assert res.cut_bytes >= 0

@@ -1,0 +1,92 @@
+"""Roofline machinery: loop-aware HLO walker vs known-cost programs, collective
+wire-byte parsing, report formatting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import analysis, hlo_cost
+from repro.roofline.analysis import CellReport, format_report_table
+
+
+def test_walker_counts_scan_trip_counts():
+    def body(x):
+        def f(c, _):
+            return c @ c, None
+        out, _ = jax.lax.scan(f, x, None, length=10)
+        return out
+
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    txt = jax.jit(body).lower(x).compile().as_text()
+    c = hlo_cost.analyze(txt)
+    assert c.flops == pytest.approx(10 * 2 * 256**3, rel=1e-6)
+    assert c.max_trip_product == 10
+
+
+def test_walker_nested_scans_multiply():
+    def nested(x):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ ci, None
+            c2, _ = jax.lax.scan(inner, c, None, length=4)
+            return c2, None
+        out, _ = jax.lax.scan(outer, x, None, length=3)
+        return out
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    txt = jax.jit(nested).lower(x).compile().as_text()
+    c = hlo_cost.analyze(txt)
+    assert c.flops == pytest.approx(12 * 2 * 128**3, rel=1e-6)
+
+
+def test_walker_bytes_at_least_io():
+    def mm(a):
+        return a @ a
+
+    x = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+    txt = jax.jit(mm).lower(x).compile().as_text()
+    c = hlo_cost.analyze(txt)
+    assert c.bytes >= 3 * 512 * 512 * 4  # 2 reads (same arg) + 1 write
+    assert c.bytes_fused >= 3 * 512 * 512 * 4
+    assert c.bytes_fused <= c.bytes + 1
+
+
+def test_collective_wire_bytes_formulas():
+    hlo = """
+HloModule m
+ENTRY %main (a: f32[1024]) -> f32[1024] {
+  %a = f32[1024]{0} parameter(0)
+  %ar = f32[1024]{0} all-reduce(%a), replica_groups={{0,1,2,3}}, to_apply=%sum
+  %ag = f32[4096]{0} all-gather(%ar), replica_groups={{0,1,2,3}}, dimensions={0}
+  %rs = f32[1024]{0} reduce-scatter(%ag), replica_groups={{0,1,2,3}}, dimensions={0}
+  ROOT %cp = f32[1024]{0} collective-permute(%rs), source_target_pairs={{0,1},{1,0}}
+}
+"""
+    stats = analysis.collective_bytes(hlo, default_group=4)
+    b = 1024 * 4
+    assert stats.op_bytes["all-reduce"] == pytest.approx(2 * b * 3 / 4)
+    assert stats.op_bytes["all-gather"] == pytest.approx(4 * b * 3 / 4)
+    assert stats.op_bytes["reduce-scatter"] == pytest.approx(b * 3)
+    assert stats.op_bytes["collective-permute"] == pytest.approx(b)
+
+
+def test_cell_report_bottleneck_and_mfu():
+    r = CellReport(
+        arch="x", shape="train_4k", mesh="pod", num_devices=256,
+        device_flops=1e12, device_bytes=1e9, wire_bytes=1e6,
+        t_compute=1e12 / analysis.HW["peak_flops_bf16"],
+        t_memory=1e9 / analysis.HW["hbm_bw"],
+        t_collective=1e6 / analysis.HW["ici_bw"],
+        bottleneck="compute", model_flops=256 * 0.9e12, useful_ratio=0.9,
+        memory_per_device={"arguments": 1, "outputs": 1, "temps": 1, "aliased": 0},
+        collective_ops={})
+    assert r.step_time == max(r.t_compute, r.t_memory, r.t_collective)
+    assert 0.0 < r.mfu <= 1.0
+    table = format_report_table([r])
+    assert "train_4k" in table and "compute" in table
+
+
+def test_dtype_byte_table_consistency():
+    assert hlo_cost._DTYPE_BYTES["bf16"] == 2
+    assert hlo_cost._DTYPE_BYTES["f32"] == 4
+    assert analysis._DTYPE_BYTES["bf16"] == 2
