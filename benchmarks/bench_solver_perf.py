@@ -1,12 +1,20 @@
 """§Perf (paper side): per-step cost of the solver engines.
 
 Paper-faithful baseline (core.solver scan, one flip per XLA step) vs the
-beyond-paper fused Pallas sweep (interpret mode on CPU — wall numbers are the
+production fused Pallas sweep (interpret mode on CPU — wall numbers are the
 *relative* signal; the TPU roofline for the fused kernel is derived in
-EXPERIMENTS.md §Perf from its VMEM-resident design: per-step HBM traffic → 0
-for N ≤ ~2800, leaving the O(N) VPU/MXU work).
+DESIGN.md §Backends from its VMEM-resident design: per-step HBM traffic → 0
+for N ≤ ~2800, leaving the O(N) VPU work after the O(N²)→O(N) gather fix).
+
+Emits ``BENCH_solver_perf.json`` at the repo root — µs/step for both
+backends at N ∈ {512, 2000} × {rsa, rwa} — so subsequent PRs have a perf
+trajectory to regress against.
 """
 from __future__ import annotations
+
+import json
+import os
+import platform
 
 import numpy as np
 
@@ -20,6 +28,8 @@ from .common import CsvEmitter, time_call
 
 STEPS = 1024
 REPLICAS = 8
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                          "BENCH_solver_perf.json")
 
 
 def run(emit: CsvEmitter) -> dict:
@@ -35,13 +45,41 @@ def run(emit: CsvEmitter) -> dict:
             best = float(np.min(np.asarray(res.best_energy)))
             emit.add(f"solver/N{n}/{mode}/baseline", us, f"best_E={best:.0f}")
             out[(n, mode, "baseline")] = us
-        cfg = default_solver(n, steps, mode="rwa", num_replicas=REPLICAS)
-        res, secs = time_call(fused_anneal, prob, 0, cfg, repeats=2)
-        us = secs / steps * 1e6
-        best = float(np.min(np.asarray(res.best_energy)))
-        emit.add(f"solver/N{n}/rwa/fused_interpret", us, f"best_E={best:.0f}")
-        out[(n, "rwa", "fused")] = us
+            res, secs = time_call(fused_anneal, prob, 0, cfg, repeats=2)
+            us = secs / steps * 1e6
+            best = float(np.min(np.asarray(res.best_energy)))
+            emit.add(f"solver/N{n}/{mode}/fused_interpret", us, f"best_E={best:.0f}")
+            out[(n, mode, "fused")] = us
     return out
+
+
+def write_bench_json(out: dict) -> None:
+    """Persist the backend perf table (the cross-PR regression anchor)."""
+    import jax
+
+    results = {}
+    for n in (512, 2000):
+        results[f"N{n}"] = {}
+        for mode in ("rsa", "rwa"):
+            base = out.get((n, mode, "baseline"))
+            fused = out.get((n, mode, "fused"))
+            results[f"N{n}"][mode] = {
+                "baseline_us_per_step": base,
+                "fused_us_per_step": fused,
+                "fused_speedup": (base / fused) if base and fused else None,
+            }
+    payload = {
+        "bench": "solver_perf",
+        "units": "us_per_step (R=8 replicas, interpret-mode Pallas on CPU; "
+                 "relative signal only)",
+        "host": platform.node(),
+        "jax_backend": jax.default_backend(),
+        "results": results,
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {BENCH_JSON}", flush=True)
 
 
 def run_tempering_comparison(emit: CsvEmitter):
@@ -72,6 +110,7 @@ def run_tempering_comparison(emit: CsvEmitter):
 def main():
     emit = CsvEmitter()
     out = run(emit)
+    write_bench_json(out)
     out["tempering"] = run_tempering_comparison(emit)
     return out
 

@@ -23,11 +23,28 @@ import numpy as np
 FlipProbFn = Callable[[jax.Array, jax.Array], jax.Array]  # (delta_e, temperature) -> p
 
 
-def make_pwl_sigmoid(num_segments: int = 64, z_max: float = 8.0) -> Callable[[jax.Array], jax.Array]:
-    """σ(x) ≈ LUT with ``num_segments`` uniform linear pieces on [-z_max, z_max]."""
+def _pwl_arrays(num_segments: int, z_max: float):
+    """Shared LUT construction: (knots (S+1,), values (S+1,), slopes (S,))."""
     knots = np.linspace(-z_max, z_max, num_segments + 1).astype(np.float32)
     values = (1.0 / (1.0 + np.exp(-knots.astype(np.float64)))).astype(np.float32)
-    slopes = np.diff(values) / np.diff(knots)
+    slopes = (np.diff(values) / np.diff(knots)).astype(np.float32)
+    return knots, values, slopes
+
+
+def pwl_table(num_segments: int = 64, z_max: float = 8.0) -> jax.Array:
+    """The LUT as a dense ``(S+1, 3)`` f32 array ``[knot, value, slope]`` (last
+    slope row zero-padded) — the form the fused sweep kernel keeps in VMEM.
+    Same construction as :func:`make_pwl_sigmoid`; the kernel evaluates it in
+    intercept form (``kernels.common.flip_probability``), which agrees with
+    the reference PWL to float ulps."""
+    knots, values, slopes = _pwl_arrays(num_segments, z_max)
+    return jnp.asarray(
+        np.stack([knots, values, np.append(slopes, 0.0).astype(np.float32)], axis=1))
+
+
+def make_pwl_sigmoid(num_segments: int = 64, z_max: float = 8.0) -> Callable[[jax.Array], jax.Array]:
+    """σ(x) ≈ LUT with ``num_segments`` uniform linear pieces on [-z_max, z_max]."""
+    knots, values, slopes = _pwl_arrays(num_segments, z_max)
     knots_j = jnp.asarray(knots)
     values_j = jnp.asarray(values)
     slopes_j = jnp.asarray(slopes)

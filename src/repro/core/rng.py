@@ -25,6 +25,8 @@ class Salt(IntEnum):
     INIT = 4          # initial spin configuration
     REPLICA = 5       # replica stream split
     PROBLEM = 6       # problem/instance generation
+    SWEEP = 7         # fused-sweep chunk uniforms (disjoint from ROULETTE by
+                      # construction — the sequential engine never uses it)
 
 
 def base_key(seed: int) -> jax.Array:
@@ -39,11 +41,33 @@ def stream(key: jax.Array, *indices) -> jax.Array:
     return key
 
 
+def index_from_uniform(u01: jax.Array, n: int) -> jax.Array:
+    """Canonical ``u ∈ [0,1) → site index`` rescaling (paper Eq. 22).
+
+    This is the single site-derivation shared by the sequential engine
+    (:func:`uniform_index`), the fused sweep kernel, and its jnp oracle, so
+    backend-parity tests can require exact trajectory agreement. float32
+    resolution (2⁻²⁴) is ample for the VMEM-resident problem sizes (N ≲ 4k).
+    """
+    j = (u01.astype(jnp.float32) * jnp.float32(n)).astype(jnp.int32)
+    return jnp.minimum(j, jnp.int32(n - 1))
+
+
+#: Largest N for which the shared float32 rescaling is used by
+#: :func:`uniform_index` — covers every VMEM-resident fused-sweep size, so
+#: the sequential engine and the kernel draw sites identically there.
+FLOAT_INDEX_MAX_N = 4096
+
+
 def uniform_index(key: jax.Array, n: int) -> jax.Array:
-    """Uniform site index via the paper's fixed-point scaling (Eq. 22):
-    j = floor(u·N / 2³²) for a uniform 32-bit integer u. Computed with exact
-    nested floor-division in 32-bit lanes (x64 is disabled); valid for N ≤ 2¹⁶,
-    beyond which two independent draws are combined."""
+    """Uniform site index. For N up to :data:`FLOAT_INDEX_MAX_N` this is one
+    32-bit draw through the canonical :func:`index_from_uniform` rescaling
+    (Eq. 22) — bit-compatible with the fused sweep's site stream. Larger N
+    (where float32 rounding against 1/N buckets would bias selection) uses
+    the exact fixed-point ``floor(u·N/2³²)`` in 32-bit integer lanes up to
+    N ≤ 2¹⁶, then JAX's unbiased bounded-int sampler."""
+    if n <= FLOAT_INDEX_MAX_N:
+        return index_from_uniform(uniform01(key), n)
     if n <= (1 << 16):
         u = jax.random.bits(key, (), jnp.uint32)
         hi = u >> jnp.uint32(16)
@@ -51,7 +75,6 @@ def uniform_index(key: jax.Array, n: int) -> jax.Array:
         nn = jnp.uint32(n)
         # floor(u·N/2³²) == floor((hi·N + floor(lo·N/2¹⁶)) / 2¹⁶); all ≤ 2³².
         return ((hi * nn + ((lo * nn) >> jnp.uint32(16))) >> jnp.uint32(16)).astype(jnp.int32)
-    # Large N: fall back to JAX's unbiased bounded-int sampler.
     return jax.random.randint(key, (), 0, n, dtype=jnp.int32)
 
 

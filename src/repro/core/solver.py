@@ -98,12 +98,28 @@ def _run(problem: ising.IsingProblem, seed: jax.Array, config: SolverConfig) -> 
     )
 
 
-@partial(jax.jit, static_argnames=("config",))
-def solve(problem: ising.IsingProblem, seed, config: SolverConfig) -> SolveResult:
-    """Jitted entry point. ``seed`` is a dynamic int32 (host 64-bit seed)."""
+@partial(jax.jit, static_argnames=("config", "backend"))
+def solve(problem: ising.IsingProblem, seed, config: SolverConfig,
+          backend: str = "reference") -> SolveResult:
+    """Jitted entry point. ``seed`` is a dynamic int32 (host 64-bit seed).
+
+    ``backend`` selects the engine: "reference" is the paper-faithful
+    one-flip-per-XLA-op scan (the semantic oracle); "fused" is the production
+    VMEM-resident Pallas sweep (``kernels.ops.fused_anneal``) — same modes,
+    schedule, PWL/uniformized options, and trace shape/dtype/cadence, O(N)
+    per-step work, different (documented) RNG stream layout.
+    """
+    if backend == "fused":
+        # Lazy import: kernels.ops imports this module for SolverConfig.
+        from ..kernels import ops as _ops
+        return _ops.fused_anneal(problem, seed, config)
+    if backend != "reference":
+        raise ValueError(f"backend must be 'reference' or 'fused', got {backend!r}")
     return _run(problem, jnp.asarray(seed, jnp.uint32), config)
 
 
-def solve_many(problem: ising.IsingProblem, seeds, config: SolverConfig) -> SolveResult:
+def solve_many(problem: ising.IsingProblem, seeds, config: SolverConfig,
+               backend: str = "reference") -> SolveResult:
     """Independent runs (for TTS success-probability estimation)."""
-    return jax.vmap(lambda s: solve(problem, s, config))(jnp.asarray(seeds, jnp.uint32))
+    return jax.vmap(lambda s: solve(problem, s, config, backend))(
+        jnp.asarray(seeds, jnp.uint32))

@@ -11,20 +11,25 @@ with the Metropolis swap probability
 The paper's argument — that maintaining swap acceptance needs many closely
 spaced replicas as the system grows — shows up directly in the benchmark's
 measured swap-acceptance column.
+
+Two backends share the swap machinery: ``backend="reference"`` runs the
+one-flip-per-XLA-op ``core.mcmc`` chains; ``backend="fused"`` runs each
+between-swap phase as one VMEM-resident Pallas sweep with the ladder passed
+as the kernel's per-replica ``(T, R)`` temperature tensor — swap phases land
+exactly at sweep-chunk boundaries.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import NamedTuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import ising, mcmc, rng
-from .pwl import make_flip_probability, make_pwl_sigmoid
-from .solver import SolveResult
+from .pwl import make_flip_probability, make_pwl_sigmoid, pwl_table
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +41,7 @@ class TemperingConfig:
     swap_every: int = 10
     mode: str = "rsa"            # kernel for within-chain moves
     use_pwl: bool = True
+    backend: str = "reference"   # "reference" | "fused"
 
     @property
     def ladder(self) -> np.ndarray:
@@ -50,9 +56,42 @@ class TemperingResult(NamedTuple):
     num_flips: jax.Array
 
 
-@partial(jax.jit, static_argnames=("config",))
-def solve_tempering(problem: ising.IsingProblem, seed,
-                    config: TemperingConfig) -> TemperingResult:
+def _swap_phase(state, energy_of: Callable, temps: jax.Array, base: jax.Array,
+                round_idx: jax.Array, r: int):
+    """Metropolis exchange of adjacent rungs (even pairs then odd pairs).
+
+    ``state`` is any pytree whose leaves have a leading replica axis;
+    ``energy_of(state)`` extracts the (R,) current energies. Shared by both
+    backends so swap decisions consume identical RNG streams.
+    """
+
+    def try_pairs(state, parity, salt):
+        e = energy_of(state)
+        beta = 1.0 / temps
+        # pair (i, i+1) for i ≡ parity (mod 2)
+        idx = jnp.arange(r - 1)
+        active = (idx % 2) == parity
+        delta = (beta[idx] - beta[idx + 1]) * (e[idx] - e[idx + 1])
+        key = rng.stream(base, rng.Salt.UNIFORMIZE, round_idx, salt)
+        u = rng.uniform01(key, (r - 1,))
+        accept = active & (u < jnp.minimum(jnp.exp(jnp.clip(delta, -80.0, 80.0)), 1.0))
+
+        # Build a permutation that swaps accepted pairs.
+        perm = jnp.arange(r)
+        lo = idx
+        hi = idx + 1
+        perm = perm.at[lo].set(jnp.where(accept, hi, perm[lo]))
+        perm = perm.at[hi].set(jnp.where(accept, lo, perm[hi]))
+        swapped = jax.tree.map(lambda x: x[perm], state)
+        return swapped, accept.sum(), active.sum()
+
+    state, acc_e, n_e = try_pairs(state, 0, 0)
+    state, acc_o, n_o = try_pairs(state, 1, 1)
+    return state, (acc_e + acc_o, n_e + n_o)
+
+
+def _solve_tempering_reference(problem: ising.IsingProblem, seed,
+                               config: TemperingConfig) -> TemperingResult:
     n = problem.num_spins
     r = config.num_replicas
     temps = jnp.asarray(config.ladder, jnp.float32)
@@ -72,38 +111,13 @@ def solve_tempering(problem: ising.IsingProblem, seed,
             return new
         return jax.lax.fori_loop(t0, t0 + config.swap_every, one, states)
 
-    def swap_phase(states, round_idx):
-        """Metropolis exchange of adjacent rungs (even pairs then odd pairs)."""
-        def try_pairs(states, parity, salt):
-            e = states.energy
-            beta = 1.0 / temps
-            # pair (i, i+1) for i ≡ parity (mod 2)
-            idx = jnp.arange(r - 1)
-            active = (idx % 2) == parity
-            delta = (beta[idx] - beta[idx + 1]) * (e[idx] - e[idx + 1])
-            key = rng.stream(base, rng.Salt.UNIFORMIZE, round_idx, salt)
-            u = rng.uniform01(key, (r - 1,))
-            accept = active & (u < jnp.minimum(jnp.exp(jnp.clip(delta, -80.0, 80.0)), 1.0))
-
-            # Build a permutation that swaps accepted pairs.
-            perm = jnp.arange(r)
-            lo = idx
-            hi = idx + 1
-            perm = perm.at[lo].set(jnp.where(accept, hi, perm[lo]))
-            perm = perm.at[hi].set(jnp.where(accept, lo, perm[hi]))
-            swapped = jax.tree.map(lambda x: x[perm], states)
-            return swapped, accept.sum(), active.sum()
-
-        states, acc_e, n_e = try_pairs(states, 0, 0)
-        states, acc_o, n_o = try_pairs(states, 1, 1)
-        return states, (acc_e + acc_o, n_e + n_o)
-
     num_rounds = max(config.num_steps // config.swap_every, 1)
 
     def round_body(carry, round_idx):
         states, acc, tot = carry
         states = chain_steps(states, round_idx * config.swap_every)
-        states, (a, t) = swap_phase(states, round_idx)
+        states, (a, t) = _swap_phase(states, lambda st: st.energy, temps,
+                                     base, round_idx, r)
         return (states, acc + a, tot + t), None
 
     (states, acc, tot), _ = jax.lax.scan(
@@ -115,3 +129,52 @@ def solve_tempering(problem: ising.IsingProblem, seed,
         swap_acceptance=acc.astype(jnp.float32) / jnp.maximum(tot, 1),
         num_flips=states.num_flips,
     )
+
+
+def _solve_tempering_fused(problem: ising.IsingProblem, seed,
+                           config: TemperingConfig) -> TemperingResult:
+    """Fused backend: each between-swap phase is one VMEM-resident sweep with
+    the temperature ladder as the kernel's per-replica ``(T, R)`` tensor."""
+    from ..kernels import ops as _ops  # lazy: kernels.ops imports core.solver
+
+    r = config.num_replicas
+    temps = jnp.asarray(config.ladder, jnp.float32)
+    tbl = pwl_table() if config.use_pwl else None
+    interpret = _ops.auto_interpret(None)
+    block_r = _ops.fit_block(r, 8)
+    base = jax.random.fold_in(jax.random.key(0), jnp.asarray(seed, jnp.uint32))
+    init_state = _ops.fused_init_state(problem, base, r, interpret=interpret)
+    temps_trs = jnp.broadcast_to(temps[None, :], (config.swap_every, r))
+    num_rounds = max(config.num_steps // config.swap_every, 1)
+
+    def round_body(carry, round_idx):
+        state, acc, tot = carry
+        state = _ops.fused_sweep_chunk(
+            problem.couplings, state, rng.stream(base, rng.Salt.SWEEP, round_idx),
+            config.swap_every, temps_trs, mode=config.mode, pwl_table=tbl,
+            block_r=block_r, interpret=interpret)
+        state, (a, t) = _swap_phase(state, lambda st: st[2], temps,
+                                    base, round_idx, r)
+        return (state, acc + a, tot + t), None
+
+    init = (init_state, jnp.int32(0), jnp.int32(0))
+    ((u, s, e, be, bs, nf), acc, tot), _ = jax.lax.scan(
+        round_body, init, jnp.arange(num_rounds))
+    return TemperingResult(
+        best_energy=be + problem.offset,
+        best_spins=bs.astype(ising.SPIN_DTYPE),
+        final_energy=e + problem.offset,
+        swap_acceptance=acc.astype(jnp.float32) / jnp.maximum(tot, 1),
+        num_flips=nf,
+    )
+
+
+@partial(jax.jit, static_argnames=("config",))
+def solve_tempering(problem: ising.IsingProblem, seed,
+                    config: TemperingConfig) -> TemperingResult:
+    if config.backend == "fused":
+        return _solve_tempering_fused(problem, seed, config)
+    if config.backend != "reference":
+        raise ValueError(
+            f"backend must be 'reference' or 'fused', got {config.backend!r}")
+    return _solve_tempering_reference(problem, seed, config)

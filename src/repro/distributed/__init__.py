@@ -1,1 +1,2 @@
 from .compress import CompressionState, compressed_psum_grads, init_compression  # noqa: F401
+from .shmap import shard_map_compat  # noqa: F401

@@ -19,6 +19,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from .shmap import axis_size as _axis_size
+
 
 class CompressionState(NamedTuple):
     error_feedback: object  # pytree like grads, f32
@@ -39,7 +41,7 @@ def _quantize_tensor(g: jax.Array) -> tuple[jax.Array, jax.Array]:
 def compressed_psum_grads(grads, state: CompressionState, axis: str,
                           mean: bool = True):
     """All-reduce int8-compressed grads over ``axis``; returns (grads, state)."""
-    n = jax.lax.axis_size(axis)
+    n = _axis_size(axis)
 
     def one(g, ef):
         g32 = g.astype(jnp.float32) + ef

@@ -17,6 +17,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from .shmap import axis_size as _axis_size
+
 
 def bubble_fraction(num_microbatches: int, num_stages: int) -> float:
     return (num_stages - 1) / (num_microbatches + num_stages - 1)
@@ -30,7 +32,7 @@ def pipeline_apply(stage_fn: Callable, stage_params, x_microbatches: jax.Array,
     x_microbatches: (M, mb, ...) — meaningful on stage 0 (replicated is fine).
     Returns (M, mb, ...) — meaningful on the LAST stage.
     """
-    p = jax.lax.axis_size(axis)
+    p = _axis_size(axis)
     stage = jax.lax.axis_index(axis)
     m = x_microbatches.shape[0]
     ticks = m + p - 1

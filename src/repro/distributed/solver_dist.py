@@ -25,6 +25,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..core import ising, rng
 from ..core.solver import SolveResult, SolverConfig, _mcmc_config
 from ..core import mcmc
+from .shmap import shard_map_compat
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,6 +34,7 @@ class DistSolverConfig:
     replicas_per_device: int = 1
     exchange_every: int = 0      # chunks between best-exchange; 0 = never
     restart_fraction: float = 0.25  # worst fraction restarted at exchange
+    backend: str = "reference"   # "reference" | "fused" per-chunk engine
 
 
 def _chunk_runner(problem, mc, schedule, chunk_steps):
@@ -53,6 +55,46 @@ def _chunk_runner(problem, mc, schedule, chunk_steps):
     return run
 
 
+def _fused_chunk_runner(base_cfg: SolverConfig, chunk_steps: int, r_local: int,
+                        interpret: bool):
+    """Run `chunk_steps` steps as one VMEM-resident fused sweep per shard.
+
+    Replica chains stay in ``mcmc.ChainState`` so the elitist-exchange logic
+    is backend-agnostic; the sweep kernel consumes/produces the state arrays
+    directly. Per-device RNG: chunk uniforms come from the dedicated
+    ``Salt.SWEEP`` stream folded with the device index, so shards draw
+    disjoint streams by construction.
+    """
+    from ..kernels import ops as _ops
+
+    tbl = _ops.solver_pwl_table(base_cfg)
+    block_r = _ops.fit_block(r_local, 8)
+
+    def run(problem, states, base, device_idx, chunk_idx):
+        steps = chunk_idx * chunk_steps + jnp.arange(chunk_steps)
+        temps = jax.vmap(base_cfg.schedule)(steps).astype(jnp.float32)
+        temps = jnp.broadcast_to(temps[:, None], (chunk_steps, r_local))
+        state = (states.fields, states.spins.astype(jnp.float32),
+                 states.energy, states.best_energy,
+                 states.best_spins.astype(jnp.float32), states.num_flips)
+        u, s, e, be, bs, nf = _ops.fused_sweep_chunk(
+            problem.couplings, state,
+            rng.stream(base, rng.Salt.SWEEP, device_idx, chunk_idx),
+            chunk_steps, temps, mode=base_cfg.mode,
+            uniformized=base_cfg.uniformized, pwl_table=tbl,
+            block_r=block_r, interpret=interpret)
+        return mcmc.ChainState(
+            spins=s.astype(ising.SPIN_DTYPE),
+            fields=u,
+            energy=e,
+            best_energy=be,
+            best_spins=bs.astype(ising.SPIN_DTYPE),
+            num_flips=nf,
+        )
+
+    return run
+
+
 def solve_distributed(problem: ising.IsingProblem, seed, config: DistSolverConfig,
                       mesh: Mesh) -> SolveResult:
     """shard_map annealing over every mesh axis (replica-parallel)."""
@@ -67,13 +109,23 @@ def solve_distributed(problem: ising.IsingProblem, seed, config: DistSolverConfi
     n = problem.num_spins
     chunk = max(base_cfg.trace_every, 1) if base_cfg.trace_every else 64
     num_chunks = max(base_cfg.num_steps // chunk, 1)
-    runner = _chunk_runner(problem, mc, base_cfg.schedule, chunk)
+    if config.backend == "fused":
+        from ..kernels.ops import auto_interpret
+        runner_fused = _fused_chunk_runner(base_cfg, chunk, r_local,
+                                           auto_interpret(None))
+    elif config.backend == "reference":
+        runner = _chunk_runner(problem, mc, base_cfg.schedule, chunk)
+    else:
+        raise ValueError(
+            f"backend must be 'reference' or 'fused', got {config.backend!r}")
 
     def local_solve(J, h, seed_arr):
-        # Flatten all mesh axes into one linear device index.
+        # Flatten all mesh axes into one linear device index (axis sizes are
+        # static — read off the mesh, not the unavailable-in-old-JAX
+        # ``lax.axis_size``).
         idx = jnp.int32(0)
         for a in axes:
-            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
         prob = ising.IsingProblem(couplings=J, fields=h, offset=0.0)
         base = jax.random.fold_in(jax.random.key(0), seed_arr[0])
         rep_ids = idx * r_local + jnp.arange(r_local)
@@ -84,7 +136,10 @@ def solve_distributed(problem: ising.IsingProblem, seed, config: DistSolverConfi
 
         def chunk_body(carry, c):
             states = carry
-            states = runner(states, keys, c)
+            if config.backend == "fused":
+                states = runner_fused(prob, states, base, idx, c)
+            else:
+                states = runner(states, keys, c)
             if config.exchange_every:
                 def exchange(states):
                     # Global best config across ALL devices (psum-of-onehot trick).
@@ -139,10 +194,10 @@ def solve_distributed(problem: ising.IsingProblem, seed, config: DistSolverConfi
 
     spec_rep = P()  # replicated inputs
     out_specs = (P(axes), P(axes), P(axes), P(axes), P(None, axes))
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(shard_map_compat(
         local_solve, mesh=mesh,
         in_specs=(spec_rep, spec_rep, spec_rep),
-        out_specs=out_specs, check_vma=False))
+        out_specs=out_specs))
     seed_arr = jnp.asarray([seed], jnp.uint32)
     be, bs, fe, nf, trace = fn(problem.couplings, problem.fields, seed_arr)
     return SolveResult(best_energy=be + problem.offset, best_spins=bs,

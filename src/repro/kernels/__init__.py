@@ -2,9 +2,13 @@
 
 - ``local_field``   — MXU tiled matmul init  u = J s + h      (paper §IV-B2a)
 - ``bitplane_field``— VPU popcount init from packed bit-planes (paper Eq. 14-16)
-- ``sweep``         — fused VMEM-resident multi-step MCMC sweep (paper §IV-B2b/3)
+- ``sweep``         — fused VMEM-resident multi-step MCMC sweep (paper §IV-B2b/3),
+                      the production solver backend (DESIGN.md §Backends):
+                      O(N)/step row gather, dual-mode + uniformized RWA + PWL
+                      LUT parity with ``core.mcmc``, per-replica temp ladders
 
-``ops`` holds the jit'd wrappers; ``ref`` the pure-jnp oracles.
+``ops`` holds the jit'd wrappers; ``ref`` the pure-jnp oracles; ``common``
+the selection math shared by kernel and oracle (exact backend parity).
 """
-from . import ops, ref  # noqa: F401
+from . import common, ops, ref  # noqa: F401
 from .ops import bitplane_field_init, fused_anneal, local_field_init  # noqa: F401

@@ -1,0 +1,108 @@
+"""Selection math shared by the fused Pallas sweep kernel and its jnp oracle.
+
+Backend-parity tests require *exact* trajectory agreement between
+``kernels.sweep.mcmc_sweep`` and ``kernels.ref.mcmc_sweep``, so every piece of
+per-step arithmetic whose floating-point association matters — flip
+probability (exact or PWL LUT), the hierarchical roulette scan, and the
+site-index rescaling — lives here as pure jnp functions on values. The kernel
+reads its VMEM refs into values and calls these; the oracle calls the same
+functions from a ``lax.scan``. Both therefore trace to identical op sequences.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core import rng
+
+#: Widest lane block considered for the hierarchical roulette scan. 128 is the
+#: TPU lane count — a within-block cumsum over ≤128 lanes stays in-register.
+MAX_LANE = 128
+
+
+def default_lane(n: int) -> int:
+    """Largest divisor of ``n`` that is ≤ MAX_LANE (BlockSpec-exact tiling).
+
+    The roulette wheel over N sites is scanned as G = N/L block sums followed
+    by one L-wide within-block scan, replacing the O(N)-deep flat cumsum with
+    two short, lane-parallel scans."""
+    for lane in range(min(MAX_LANE, n), 0, -1):
+        if n % lane == 0:
+            return lane
+    return 1
+
+
+def flip_probability(delta_e: jax.Array, temperature: jax.Array,
+                     pwl_table: jax.Array | None = None) -> jax.Array:
+    """Glauber flip probability σ(-ΔE/T) (exact or PWL LUT).
+
+    ``pwl_table`` is the ``(S+1, 3)`` ``[knot, value, slope]`` LUT from
+    :func:`repro.core.pwl.pwl_table` (None = exact sigmoid) — the same
+    construction as ``core.pwl.make_pwl_sigmoid``, evaluated in intercept
+    form (agrees with the reference PWL to float ulps; kernel and oracle
+    share THIS function, so backend parity stays exact). T ≤ 0 uses the
+    greedy limit (1 downhill / 0.5 flat / 0 uphill). Broadcasts over any
+    leading shape.
+    """
+    de = delta_e.astype(jnp.float32)
+    t = jnp.asarray(temperature, jnp.float32)
+    safe_t = jnp.where(t > 0, t, 1.0)
+    z = -de / safe_t
+    if pwl_table is None:
+        warm = jax.nn.sigmoid(z)
+    else:
+        knots = pwl_table[:, 0]
+        values = pwl_table[:, 1]
+        slopes = pwl_table[:-1, 2]     # last row is zero padding
+        num_segments = pwl_table.shape[0] - 1
+        z_lo = knots[0]
+        z_hi = knots[num_segments]
+        inv_step = jnp.float32(1.0) / (knots[1] - knots[0])
+        # Intercept form y = icpt[seg] + slope[seg]·z: two gathers per element
+        # instead of three (the hot cost of the LUT on wide (R, N) inputs).
+        # icpt is loop-invariant — hoisted out of the sweep's step loop.
+        icpt = values[:-1] - slopes * knots[:-1]
+        zc = jnp.clip(z, z_lo, z_hi)  # tails collapse into the end segments
+        seg = jnp.clip(((zc - z_lo) * inv_step).astype(jnp.int32),
+                       0, num_segments - 1)
+        warm = jnp.take(icpt, seg) + jnp.take(slopes, seg) * zc
+    cold = jnp.where(de < 0, 1.0, jnp.where(de == 0, 0.5, 0.0))
+    return jnp.where(t > 0, warm, cold).astype(jnp.float32)
+
+
+def roulette_pick(p_all: jax.Array, u_roulette: jax.Array, lane: int):
+    """Hierarchical roulette-wheel selection (paper Eq. 28-29).
+
+    ``p_all`` is (R, N); ``u_roulette`` (R,) in [0,1). Returns
+    ``(site, total, degenerate)``. Site ``j`` is drawn with probability
+    ``p_j / W`` via a two-level scan: cumsum over the G = N/lane block sums
+    picks the block, a lane-wide cumsum inside the selected block picks the
+    site — O(G + lane) scan depth instead of O(N), and every reduction is a
+    lane-parallel segment sum. The ≤-count form keeps the pick branch-free.
+    """
+    r_, n = p_all.shape
+    num_blocks = n // lane
+    pb = p_all.reshape(r_, num_blocks, lane)
+    blk = jnp.sum(pb, axis=2)                      # (R, G) block weights
+    cb = jnp.cumsum(blk, axis=1)                   # (R, G) short scan
+    total = cb[:, -1]                              # W (Eq. 28)
+    degenerate = (total <= 0) | ~jnp.isfinite(total)
+    radius = u_roulette * jnp.where(degenerate, 1.0, total)
+    g = jnp.minimum(
+        jnp.sum((cb <= radius[:, None]).astype(jnp.int32), axis=1),
+        num_blocks - 1)                            # block index (R,)
+    iota_g = jax.lax.broadcasted_iota(jnp.int32, (r_, num_blocks), 1)
+    base = jnp.sum(jnp.where(iota_g < g[:, None], blk, 0.0), axis=1)
+    residual = radius - base
+    sel = jnp.sum(jnp.where((iota_g == g[:, None])[:, :, None], pb, 0.0),
+                  axis=1)                          # (R, lane) selected block
+    cl = jnp.cumsum(sel, axis=1)
+    l = jnp.minimum(
+        jnp.sum((cl <= residual[:, None]).astype(jnp.int32), axis=1),
+        lane - 1)
+    return (g * lane + l).astype(jnp.int32), total, degenerate
+
+
+def site_from_uniform(u01: jax.Array, n: int) -> jax.Array:
+    """Random-scan site pick — the canonical ``core.rng`` rescaling (Eq. 22)."""
+    return rng.index_from_uniform(u01, n)

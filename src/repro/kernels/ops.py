@@ -1,17 +1,18 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-``fused_anneal`` is the *optimized* solver backend (beyond-paper, DESIGN.md §2):
-it runs the annealing loop in chunks of the VMEM-resident sweep kernel, with
-uniforms drawn from the same stateless threefry streams as the reference
-engine. ``repro.core.solver.solve`` remains the paper-faithful baseline; both
-are benchmarked side by side in EXPERIMENTS.md §Perf.
+``fused_anneal`` is the *production* solver backend (DESIGN.md §Backends): it
+runs the annealing loop in chunks of the VMEM-resident sweep kernel, with
+uniforms drawn from the dedicated ``Salt.SWEEP`` stateless threefry stream
+(disjoint by construction from every stream the reference engine consumes).
+``repro.core.solver.solve`` with ``backend="reference"`` remains the
+paper-faithful oracle; ``backend="fused"`` routes through this module. Both
+are benchmarked side by side in ``BENCH_solver_perf.json``.
 
 On this CPU container kernels run in interpret mode (the Mosaic TPU backend is
 the target); ``interpret=None`` auto-detects.
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 from typing import Optional
 
@@ -20,19 +21,25 @@ import jax.numpy as jnp
 
 from ..core import ising, rng
 from ..core.bitplane import BitPlanes, pack_spins
+from ..core.pwl import pwl_table as _pwl_table
 from ..core.solver import SolverConfig, SolveResult
 from . import bitplane_field as _bitplane_field
 from . import local_field as _local_field
 from . import sweep as _sweep
 
+#: N at or below which the one-hot MXU row gather beats per-replica dynamic
+#: slices (one small matmul vs br sequential row DMAs) — the opt-in heuristic
+#: resolved by ``gather="auto"``.
+ONEHOT_GATHER_MAX_N = 128
 
-def _auto_interpret(interpret: Optional[bool]) -> bool:
+
+def auto_interpret(interpret: Optional[bool]) -> bool:
     if interpret is None:
         return jax.default_backend() != "tpu"
     return interpret
 
 
-def _fit_block(n: int, target: int) -> int:
+def fit_block(n: int, target: int) -> int:
     """Largest divisor of n that is ≤ target (BlockSpec grids need exact tiling)."""
     for b in range(min(target, n), 0, -1):
         if n % b == 0:
@@ -44,11 +51,11 @@ def local_field_init(spins: jax.Array, couplings: jax.Array, bias: jax.Array,
                      *, interpret: Optional[bool] = None, **kw) -> jax.Array:
     """Batched u = J s + h via the MXU matmul kernel."""
     r, n = spins.shape
-    kw.setdefault("block_r", _fit_block(r, 8))
-    kw.setdefault("block_n", _fit_block(n, 256))
-    kw.setdefault("block_k", _fit_block(n, 512))
+    kw.setdefault("block_r", fit_block(r, 8))
+    kw.setdefault("block_n", fit_block(n, 256))
+    kw.setdefault("block_k", fit_block(n, 512))
     return _local_field.local_field_init(
-        spins, couplings, bias, interpret=_auto_interpret(interpret), **kw)
+        spins, couplings, bias, interpret=auto_interpret(interpret), **kw)
 
 
 def bitplane_field_init(planes: BitPlanes, spins: jax.Array,
@@ -56,60 +63,146 @@ def bitplane_field_init(planes: BitPlanes, spins: jax.Array,
     """Batched u^(J) from packed bit-planes via the popcount kernel."""
     words = pack_spins(spins)
     return _bitplane_field.bitplane_field_init(
-        planes.pos, planes.neg, words, interpret=_auto_interpret(interpret), **kw)
+        planes.pos, planes.neg, words, interpret=auto_interpret(interpret), **kw)
 
 
-@partial(jax.jit, static_argnames=("config", "chunk_steps", "block_r", "interpret"))
+def _resolve_gather(gather: str, n: int) -> str:
+    if gather == "auto":
+        return "onehot" if n <= ONEHOT_GATHER_MAX_N else "dynamic"
+    return gather
+
+
+def init_fields(problem: ising.IsingProblem, spins0: jax.Array, *,
+                interpret: bool, block_r: int = 8) -> jax.Array:
+    """One-time u₀ = J s + h init for the fused drivers. The tiled Pallas MXU
+    kernel only wins on real TPUs; interpret mode emulates it tile-by-tile at
+    a huge constant factor, so there the init goes through XLA's native
+    matmul instead."""
+    if interpret:
+        return ising.local_fields(problem, spins0).astype(jnp.float32)
+    r = spins0.shape[0]
+    return local_field_init(spins0, problem.couplings, problem.fields,
+                            interpret=False, block_r=fit_block(r, block_r))
+
+
+def fused_init_state(problem: ising.IsingProblem, base: jax.Array, r: int, *,
+                     interpret: bool, block_r: int = 8):
+    """Replica init for the fused drivers: the ``(u, s, e, best_e, best_s,
+    num_flips)`` state tuple. Key derivation (``Salt.REPLICA`` → ``Salt.INIT``)
+    is exactly the reference engine's, so both backends start every replica
+    from the identical spin configuration — a single definition keeps that
+    parity contract in one place."""
+    n = problem.num_spins
+    replica_keys = jax.vmap(lambda i: rng.stream(base, rng.Salt.REPLICA, i))(jnp.arange(r))
+    spins0 = jax.vmap(lambda k: ising.random_spins(
+        rng.stream(k, rng.Salt.INIT), (n,)))(replica_keys)
+    spins0 = spins0.astype(jnp.float32)
+    u0 = init_fields(problem, spins0, interpret=interpret, block_r=block_r)
+    e0 = ising.energy(problem, spins0)
+    return (u0, spins0, e0, e0, spins0, jnp.zeros((r,), jnp.int32))
+
+
+def solver_pwl_table(config: SolverConfig) -> Optional[jax.Array]:
+    """The (S+1, 3) VMEM LUT for ``config``, or None for the exact sigmoid."""
+    if not config.use_pwl:
+        return None
+    return _pwl_table(config.pwl_segments, config.pwl_zmax)
+
+
+def fused_sweep_chunk(couplings: jax.Array, state, chunk_key: jax.Array,
+                      num_steps: int, temps: jax.Array, *, mode: str,
+                      uniformized: bool = False,
+                      pwl_table: Optional[jax.Array] = None,
+                      gather: str = "dynamic", block_r: int = 8,
+                      interpret: bool = False):
+    """One fused sweep chunk + best-so-far merge — the single chunk driver
+    shared by ``fused_anneal``, fused tempering, and the fused distributed
+    runner, so kernel-signature changes happen in exactly one place.
+
+    ``state`` is the 6-tuple ``(u, s, e, best_e, best_s, num_flips)`` with a
+    leading replica axis; ``chunk_key`` is the chunk's ``Salt.SWEEP`` stream;
+    ``temps`` is the (num_steps, R) per-replica temperature tensor. Returns
+    the updated state tuple.
+    """
+    u, s, e, be, bs, nf = state
+    r = e.shape[0]
+    uniforms = rng.uniform01(chunk_key, (num_steps, r, 4))
+    u, s, e, ce, cs, cf = _sweep.mcmc_sweep(
+        couplings, u, s, e, uniforms, temps, pwl_table, mode=mode,
+        uniformized=uniformized, gather=gather, block_r=block_r,
+        interpret=interpret)
+    better = ce < be
+    return (u, s, e, jnp.where(better, ce, be),
+            jnp.where(better[:, None], cs, bs), nf + cf)
+
+
+@partial(jax.jit, static_argnames=("config", "chunk_steps", "block_r",
+                                   "gather", "interpret"))
 def _fused_anneal_impl(problem: ising.IsingProblem, seed: jax.Array,
                        config: SolverConfig, chunk_steps: int, block_r: int,
-                       interpret: bool) -> SolveResult:
+                       gather: str, interpret: bool) -> SolveResult:
     n = problem.num_spins
     r = config.num_replicas
     base = jax.random.fold_in(jax.random.key(0), seed)
-    replica_keys = jax.vmap(lambda i: rng.stream(base, rng.Salt.REPLICA, i))(jnp.arange(r))
-    spins0 = jax.vmap(lambda k: ising.random_spins(rng.stream(k, rng.Salt.INIT), (n,)))(replica_keys)
-    spins0 = spins0.astype(jnp.float32)
-    u0 = local_field_init(spins0, problem.couplings, problem.fields,
-                          interpret=interpret, block_r=_fit_block(r, block_r))
-    e0 = ising.energy(problem, spins0)
+    init = fused_init_state(problem, base, r, interpret=interpret,
+                            block_r=block_r)
+    tbl = solver_pwl_table(config)
+    gather = _resolve_gather(gather, n)
 
-    num_chunks = max(config.num_steps // chunk_steps, 1)
+    # Trace cadence is identical to the reference backend: with tracing on,
+    # kernel chunks are exactly ``trace_every`` steps and the trace records
+    # best-so-far energy at every chunk end (both backends then run
+    # num_chunks·trace_every steps); ``chunk_steps`` is only the perf knob
+    # for untraced runs, where a remainder sweep keeps the total at exactly
+    # ``num_steps`` like the reference scan.
+    if config.trace_every:
+        chunk_len = config.trace_every
+        num_chunks = max(config.num_steps // chunk_len, 1)
+        rem_steps = 0
+    else:
+        chunk_len = max(min(chunk_steps, config.num_steps), 1)
+        num_chunks = config.num_steps // chunk_len
+        rem_steps = config.num_steps - num_chunks * chunk_len
 
-    def chunk(carry, c):
-        u, s, e, be, bs = carry
-        ck = rng.stream(base, rng.Salt.ROULETTE, c)
-        uniforms = rng.uniform01(ck, (chunk_steps, r, 3))
-        steps = c * chunk_steps + jnp.arange(chunk_steps)
+    def chunk(carry, c, clen):
+        steps = c * chunk_len + jnp.arange(clen)
         temps = jax.vmap(config.schedule)(steps).astype(jnp.float32)
-        u, s, e, ce, cs = _sweep.mcmc_sweep(
-            problem.couplings, u, s, e, uniforms, temps,
-            mode=config.mode, block_r=min(block_r, r), interpret=interpret)
-        better = ce < be
-        be = jnp.where(better, ce, be)
-        bs = jnp.where(better[:, None], cs, bs)
-        return (u, s, e, be, bs), be
+        temps = jnp.broadcast_to(temps[:, None], (clen, r))
+        state = fused_sweep_chunk(
+            problem.couplings, carry, rng.stream(base, rng.Salt.SWEEP, c),
+            clen, temps, mode=config.mode, uniformized=config.uniformized,
+            pwl_table=tbl, gather=gather, block_r=fit_block(r, block_r),
+            interpret=interpret)
+        return state, state[3]  # best-so-far energy at chunk end
 
-    init = (u0, spins0, e0, e0, spins0)
-    (u, s, e, be, bs), trace = jax.lax.scan(chunk, init, jnp.arange(num_chunks))
+    (u, s, e, be, bs, nf), trace = jax.lax.scan(
+        partial(chunk, clen=chunk_len), init, jnp.arange(num_chunks))
+    if rem_steps:
+        (u, s, e, be, bs, nf), _ = chunk((u, s, e, be, bs, nf),
+                                         jnp.int32(num_chunks), clen=rem_steps)
     return SolveResult(
         best_energy=be + problem.offset,
         best_spins=bs.astype(jnp.int8),
         final_energy=e + problem.offset,
-        num_flips=jnp.zeros((r,), jnp.int32),  # not tracked by the fused path
-        trace_energy=(trace + problem.offset) if config.trace_every else jnp.zeros((0, r)),
+        num_flips=nf,
+        trace_energy=((trace + problem.offset).astype(jnp.float32)
+                      if config.trace_every else jnp.zeros((0, r), jnp.float32)),
     )
 
 
 def fused_anneal(problem: ising.IsingProblem, seed, config: SolverConfig,
                  *, chunk_steps: int = 256, block_r: int = 8,
+                 gather: str = "dynamic",
                  interpret: Optional[bool] = None) -> SolveResult:
-    """Optimized annealing driver on the fused sweep kernel.
+    """Production annealing driver on the fused sweep kernel.
 
-    Matches ``core.solver.solve`` semantics (same modes, schedule, TTS usage)
-    up to RNG stream layout; the exact flip-probability (not the PWL) is used
-    inside the kernel. Fallback path for degenerate W follows Alg. 1.
+    Full ``core.solver.solve`` feature parity — both modes, uniformized RWA,
+    PWL LUT vs exact flip probability, ``num_flips``, and reference-identical
+    trace shape/dtype/cadence — up to RNG stream layout (the fused path draws
+    its chunk uniforms from the dedicated ``Salt.SWEEP`` stream). ``gather``
+    is "dynamic" (O(N)/step), "onehot" (O(N²)/step MXU contraction), or
+    "auto" (onehot only for N ≤ ONEHOT_GATHER_MAX_N, i.e. 128).
     """
-    if config.uniformized:
-        raise NotImplementedError("fused path implements plain RSA/RWA (paper's default)")
     return _fused_anneal_impl(problem, jnp.asarray(seed, jnp.uint32), config,
-                              chunk_steps, block_r, _auto_interpret(interpret))
+                              chunk_steps, block_r, gather,
+                              auto_interpret(interpret))

@@ -35,56 +35,65 @@ def bitplane_field_init(pos: jax.Array, neg: jax.Array, spin_words: jax.Array,
 
 def mcmc_sweep(couplings: jax.Array, fields0: jax.Array, spins0: jax.Array,
                energy0: jax.Array, uniforms: jax.Array, temps: jax.Array,
-               mode: str = "rsa") -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+               pwl_table: jax.Array | None = None, *, mode: str = "rsa",
+               uniformized: bool = False, lane: int | None = None):
     """T-step dual-mode sweep over R replicas (paper Alg. 1 inner loop).
 
-    couplings: (N, N); fields0/spins0: (R, N); energy0: (R,);
-    uniforms: (T, R, 3) f32 in [0,1) — (site, accept, roulette) streams;
-    temps: (T,) f32. Returns (fields, spins, energy, best_energy, best_spins).
-    mode 'rsa': stochastic Glauber accept at a uniform site;
-    mode 'rwa': roulette-wheel (degenerate-W fallback to the site/accept draws).
+    Exact-semantics oracle for ``kernels.sweep.mcmc_sweep``: identical
+    signature (minus blocking knobs) and identical per-step arithmetic via the
+    shared ``kernels.common`` selection math, so parity tests can require
+    trajectory-exact agreement. couplings (N, N); fields0/spins0 (R, N);
+    energy0 (R,); uniforms (T, R, 4) f32 in [0,1) — (site, accept, roulette,
+    uniformize) streams; temps (T, R) f32 per-replica temperatures;
+    ``pwl_table`` optional (S+1, 3) LUT (None = exact sigmoid). Returns
+    (fields, spins, energy, best_energy, best_spins, num_flips).
     """
+    from . import common  # local import: ref stays importable standalone
+
     n = couplings.shape[0]
     J = couplings.astype(jnp.float32)
+    lane = common.default_lane(n) if lane is None else lane
 
     def body(carry, xs):
-        u, s, e, be, bs = carry
-        u01, temp = xs
+        u, s, e, be, bs, nf = carry
+        u01, temp = xs                       # (R, 4), (R,)
         sf = s.astype(jnp.float32)
-        de_all = 2.0 * sf * u  # (R, N)
-        safe_t = jnp.where(temp > 0, temp, 1.0)
-        p_all = jax.nn.sigmoid(-de_all / safe_t)
-        p_all = jnp.where(temp > 0, p_all,
-                          jnp.where(de_all < 0, 1.0, jnp.where(de_all == 0, 0.5, 0.0)))
         if mode == "rsa":
-            j = jnp.minimum((u01[:, 0] * n).astype(jnp.int32), n - 1)
-            p_j = jnp.take_along_axis(p_all, j[:, None], axis=1)[:, 0]
+            j = common.site_from_uniform(u01[:, 0], n)
+            u_j = jnp.take_along_axis(u, j[:, None], axis=1)[:, 0]
+            s_j = jnp.take_along_axis(sf, j[:, None], axis=1)[:, 0]
+            de = 2.0 * s_j * u_j
+            p_j = common.flip_probability(de, temp, pwl_table)
             accept = u01[:, 1] < p_j
         else:
-            wheel = jnp.cumsum(p_all, axis=1)
-            total = wheel[:, -1]
-            degenerate = (total <= 0) | ~jnp.isfinite(total)
-            r = u01[:, 2] * jnp.where(degenerate, 1.0, total)
-            j_rw = jnp.minimum(jnp.sum(wheel <= r[:, None], axis=1), n - 1).astype(jnp.int32)
-            j_fb = jnp.minimum((u01[:, 0] * n).astype(jnp.int32), n - 1)
-            p_fb = jnp.take_along_axis(p_all, j_fb[:, None], axis=1)[:, 0]
-            accept_fb = u01[:, 1] < p_fb
-            j = jnp.where(degenerate, j_fb, j_rw)
-            accept = jnp.where(degenerate, accept_fb, True)
-        s_old = jnp.take_along_axis(s, j[:, None], axis=1)[:, 0].astype(jnp.float32)
-        de = jnp.take_along_axis(de_all, j[:, None], axis=1)[:, 0]
+            de_all = 2.0 * sf * u            # (R, N)
+            p_all = common.flip_probability(de_all, temp[:, None], pwl_table)
+            j_rw, total, degenerate = common.roulette_pick(p_all, u01[:, 2], lane)
+            if uniformized:
+                accept = jnp.where(degenerate, False,
+                                   u01[:, 3] * jnp.float32(n) < total)
+                j = j_rw
+            else:
+                j_fb = common.site_from_uniform(u01[:, 0], n)
+                p_fb = jnp.take_along_axis(p_all, j_fb[:, None], axis=1)[:, 0]
+                accept = jnp.where(degenerate, u01[:, 1] < p_fb, True)
+                j = jnp.where(degenerate, j_fb, j_rw)
+            de = jnp.take_along_axis(de_all, j[:, None], axis=1)[:, 0]
+        s_old = jnp.take_along_axis(sf, j[:, None], axis=1)[:, 0]
         acc_f = accept.astype(jnp.float32)
         rows = jnp.take(J, j, axis=0)  # (R, N)
         u = u - (2.0 * acc_f * s_old)[:, None] * rows
         onehot = jax.nn.one_hot(j, n, dtype=s.dtype)
         s = jnp.where(accept[:, None], (s * (1 - 2 * onehot)).astype(s.dtype), s)
         e = e + acc_f * de
+        nf = nf + accept.astype(jnp.int32)
         better = e < be
         be = jnp.where(better, e, be)
         bs = jnp.where(better[:, None], s, bs)
-        return (u, s, e, be, bs), None
+        return (u, s, e, be, bs, nf), None
 
+    r = fields0.shape[0]
     init = (fields0.astype(jnp.float32), spins0, energy0.astype(jnp.float32),
-            energy0.astype(jnp.float32), spins0)
-    (u, s, e, be, bs), _ = jax.lax.scan(body, init, (uniforms, temps))
-    return u, s, e, be, bs
+            energy0.astype(jnp.float32), spins0, jnp.zeros((r,), jnp.int32))
+    (u, s, e, be, bs, nf), _ = jax.lax.scan(body, init, (uniforms, temps))
+    return u, s, e, be, bs, nf

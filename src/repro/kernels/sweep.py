@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused multi-step dual-mode MCMC sweep.
+"""Pallas TPU kernel: fused multi-step dual-mode MCMC sweep (production backend).
 
 TPU analogue of the paper's on-chip local-field memory (§IV-B2b): the FPGA
 keeps u in BRAM and read-modify-writes it after every flip. A literal
@@ -8,13 +8,25 @@ in VMEM across ``T`` consecutive MCMC steps, so per-step HBM traffic drops to
 zero for N ≤ ~2800 (f32 J; 16 MiB VMEM) — the same "compute-bound, not
 memory-bound" crossover the paper demonstrates in Fig. 14.
 
-Asynchronous single-spin semantics are preserved exactly: each step selects at
-most one spin per replica, flips it, and applies the incremental update
-u ← u − 2 J[j,:] s_j_old before the next selection (Eq. 27/31).
+Per-step work is O(br·N) (DESIGN.md §Backends): the incremental update
+u ← u − 2 J[j,:] s_j_old (Eq. 27/31) fetches row J[j] with one per-replica
+``pl.ds`` dynamic slice of the VMEM-resident J. The historical one-hot × J
+MXU gather — an O(br·N²) contraction per step — survives only as the opt-in
+``gather="onehot"`` heuristic for tiny N, where a single small matmul beats
+``br`` sequential DMA-issued row reads.
 
-Randomness is supplied as a precomputed (T, R, 3) tensor of uniforms from the
-stateless threefry streams (site, accept, roulette) — the kernel itself stays
-deterministic and replayable, mirroring the paper's stateless-RNG design.
+Feature parity with ``core.mcmc``: both modes (RSA random-scan, RWA
+roulette-wheel with hierarchical lane-scan selection), the uniformized-RWA
+null-transition variant, the PWL LUT flip probability (passed as a small VMEM
+table), per-replica temperature ladders (``temps`` is (T, R) — parallel
+tempering runs a constant ladder, annealing a broadcast schedule), and
+``num_flips`` tracking.
+
+Asynchronous single-spin semantics are preserved exactly: each step selects at
+most one spin per replica, flips it, and applies the incremental update before
+the next selection. Randomness is supplied as a precomputed (T, R, 4) tensor
+of uniforms — (site, accept, roulette, uniformize) streams — from the
+stateless threefry RNG, so the kernel stays deterministic and replayable.
 
 Grid: replica blocks; J is broadcast (index_map pins block 0) so the pipeline
 loads it once per program.
@@ -22,113 +34,194 @@ loads it once per program.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-
-def _flip_prob(de, temp):
-    safe_t = jnp.where(temp > 0, temp, 1.0)
-    warm = jax.nn.sigmoid(-de / safe_t)
-    cold = jnp.where(de < 0, 1.0, jnp.where(de == 0, 0.5, 0.0))
-    return jnp.where(temp > 0, warm, cold).astype(jnp.float32)
+from . import common
 
 
-def _kernel(j_ref, u0_ref, s0_ref, e0_ref, unif_ref, temp_ref,
-            u_out, s_out, e_out, be_out, bs_out, *, num_steps: int, mode: str):
+def _gather_scalars(x: jax.Array, sites: jax.Array, br: int) -> jax.Array:
+    """vals[r] = x[r, sites[r]] via per-replica (1, 1) dynamic slices — O(br)
+    work in place of a (br, N) one-hot masked reduction."""
+
+    def body(rix, vals):
+        v = jax.lax.dynamic_slice(x, (rix, sites[rix]), (1, 1))
+        return jax.lax.dynamic_update_slice(vals, v[0], (rix,))
+
+    return jax.lax.fori_loop(0, br, body, jnp.zeros((br,), x.dtype))
+
+
+def _gather_scalar_pair(a: jax.Array, b: jax.Array, sites: jax.Array,
+                        br: int) -> tuple[jax.Array, jax.Array]:
+    """(a[r, sites[r]], b[r, sites[r]]) for every replica in one loop."""
+
+    def body(rix, carry):
+        va, vb = carry
+        av = jax.lax.dynamic_slice(a, (rix, sites[rix]), (1, 1))
+        bv = jax.lax.dynamic_slice(b, (rix, sites[rix]), (1, 1))
+        return (jax.lax.dynamic_update_slice(va, av[0], (rix,)),
+                jax.lax.dynamic_update_slice(vb, bv[0], (rix,)))
+
+    init = (jnp.zeros((br,), a.dtype), jnp.zeros((br,), b.dtype))
+    return jax.lax.fori_loop(0, br, body, init)
+
+
+def _kernel(*refs, num_steps: int, mode: str, uniformized: bool,
+            gather: str, lane: int, has_pwl: bool):
+    if has_pwl:
+        (j_ref, u0_ref, s0_ref, e0_ref, unif_ref, temp_ref, pwl_ref,
+         u_out, s_out, e_out, be_out, bs_out, nf_out) = refs
+        tbl = pwl_ref[...].astype(jnp.float32)
+    else:
+        (j_ref, u0_ref, s0_ref, e0_ref, unif_ref, temp_ref,
+         u_out, s_out, e_out, be_out, bs_out, nf_out) = refs
+        tbl = None
     n = j_ref.shape[0]
-    J = j_ref[...].astype(jnp.float32)  # (N, N) VMEM-resident
-    u = u0_ref[...].astype(jnp.float32)  # (br, N)
-    s = s0_ref[...].astype(jnp.float32)  # (br, N) ±1
+    br = u0_ref.shape[0]
+    # Only the opt-in MXU path materializes J as a value; the default O(N)
+    # path reads single rows straight off the ref.
+    J = j_ref[...].astype(jnp.float32) if gather == "onehot" else None
+    u = u0_ref[...].astype(jnp.float32)     # (br, N)
+    s = s0_ref[...].astype(jnp.float32)     # (br, N) ±1
     e = e0_ref[...].astype(jnp.float32)[:, 0]  # (br,)
-    be = e
-    bs = s
 
     def step(t, carry):
-        u, s, e, be, bs = carry
-        u01 = unif_ref[t]  # (br, 3)... sliced below
-        temp = temp_ref[t, 0]
-        de_all = 2.0 * s * u
-        p_all = _flip_prob(de_all, temp)
+        u, s, e, be, bs, nf = carry
+        temp = temp_ref[t]                  # (br,) per-replica ladder rung
         u_site = unif_ref[t, :, 0]
         u_acc = unif_ref[t, :, 1]
         u_rou = unif_ref[t, :, 2]
+        u_uni = unif_ref[t, :, 3]
         if mode == "rsa":
-            j = jnp.minimum((u_site * n).astype(jnp.int32), n - 1)  # (br,)
-            onehot = (jax.lax.broadcasted_iota(jnp.int32, p_all.shape, 1)
-                      == j[:, None]).astype(jnp.float32)
-            p_j = jnp.sum(p_all * onehot, axis=1)
-            accept = (u_acc < p_j).astype(jnp.float32)
+            j = common.site_from_uniform(u_site, n)
+            s_old, u_j = _gather_scalar_pair(s, u, j, br)
+            de = 2.0 * s_old * u_j
+            p_j = common.flip_probability(de, temp, tbl)
+            accept_b = u_acc < p_j
         else:
-            wheel = jnp.cumsum(p_all, axis=1)
-            total = wheel[:, -1]
-            degenerate = (total <= 0) | ~jnp.isfinite(total)
-            r = u_rou * jnp.where(degenerate, 1.0, total)
-            j_rw = jnp.minimum(jnp.sum((wheel <= r[:, None]).astype(jnp.int32), axis=1),
-                               n - 1)
-            j_fb = jnp.minimum((u_site * n).astype(jnp.int32), n - 1)
-            onehot_fb = (jax.lax.broadcasted_iota(jnp.int32, p_all.shape, 1)
-                         == j_fb[:, None]).astype(jnp.float32)
-            p_fb = jnp.sum(p_all * onehot_fb, axis=1)
-            accept_fb = u_acc < p_fb
-            j = jnp.where(degenerate, j_fb, j_rw)
-            accept = jnp.where(degenerate, accept_fb, True).astype(jnp.float32)
-            onehot = (jax.lax.broadcasted_iota(jnp.int32, p_all.shape, 1)
-                      == j[:, None]).astype(jnp.float32)
-        s_old = jnp.sum(s * onehot, axis=1)  # (br,)
-        de = jnp.sum(de_all * onehot, axis=1)
-        # Incremental update: rows J[j] gathered via one-hot matmul (MXU-friendly,
-        # avoids per-replica dynamic gathers from VMEM).
-        rows = jax.lax.dot_general(onehot, J, (((1,), (0,)), ((), ())),
-                                   preferred_element_type=jnp.float32)  # (br, N)
-        u = u - (2.0 * accept * s_old)[:, None] * rows
-        s = s * (1.0 - 2.0 * accept[:, None] * onehot)
+            de_all = 2.0 * s * u
+            p_all = common.flip_probability(de_all, temp[:, None], tbl)
+            j_rw, total, degenerate = common.roulette_pick(p_all, u_rou, lane)
+            if uniformized:
+                # Null transition with prob 1 − W/W*, W* = N (§IV-B3c).
+                accept_b = jnp.where(degenerate, False,
+                                     u_uni * jnp.float32(n) < total)
+                j = j_rw
+            else:
+                # Degenerate-W fallback: one random-scan update (Alg. 1 l. 10-14).
+                j_fb = common.site_from_uniform(u_site, n)
+                p_fb = _gather_scalars(p_all, j_fb, br)
+                accept_b = jnp.where(degenerate, u_acc < p_fb, True)
+                j = jnp.where(degenerate, j_fb, j_rw)
+            de, s_old = _gather_scalar_pair(de_all, s, j, br)
+        accept = accept_b.astype(jnp.float32)
         e = e + accept * de
+        nf = nf + accept_b.astype(jnp.int32)
         better = e < be
         be = jnp.where(better, e, be)
-        bs = jnp.where(better[:, None], s, bs)
-        return (u, s, e, be, bs)
+        if gather == "onehot":
+            iota = jax.lax.broadcasted_iota(jnp.int32, (br, n), 1)
+            onehot = (iota == j[:, None]).astype(jnp.float32)
+            rows = jax.lax.dot_general(onehot, J, (((1,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+            u = u - (2.0 * accept * s_old)[:, None] * rows
+            s = s * (1.0 - 2.0 * accept[:, None] * onehot)
+            bs = jnp.where(better[:, None], s, bs)
+        else:
+            # Asynchronous apply, one replica at a time: an O(N) row FMA
+            # straight off the J ref, a scalar spin flip, and a
+            # copy-on-improve of best_spins (lax.cond so the (1, N) copy is
+            # only paid when the replica actually improved).
+            def apply_one(rix, carry):
+                u, s, bs = carry
+                jr = j[rix]
+                coef = 2.0 * accept[rix] * s_old[rix]
+                row = j_ref[pl.ds(jr, 1), :].astype(jnp.float32)  # (1, N)
+                u_row = jax.lax.dynamic_slice(u, (rix, 0), (1, n))
+                u = jax.lax.dynamic_update_slice(u, u_row - coef * row,
+                                                 (rix, 0))
+                new_sj = (s_old[rix] * (1.0 - 2.0 * accept[rix])).reshape(1, 1)
+                s = jax.lax.dynamic_update_slice(s, new_sj, (rix, jr))
+                bs = jax.lax.cond(
+                    better[rix],
+                    lambda b, s=s: jax.lax.dynamic_update_slice(
+                        b, jax.lax.dynamic_slice(s, (rix, 0), (1, n)),
+                        (rix, 0)),
+                    lambda b: b, bs)
+                return (u, s, bs)
 
-    u, s, e, be, bs = jax.lax.fori_loop(0, num_steps, step, (u, s, e, be, bs))
+            u, s, bs = jax.lax.fori_loop(0, br, apply_one, (u, s, bs))
+        return (u, s, e, be, bs, nf)
+
+    init = (u, s, e, e, s, jnp.zeros((br,), jnp.int32))
+    u, s, e, be, bs, nf = jax.lax.fori_loop(0, num_steps, step, init)
     u_out[...] = u
     s_out[...] = s.astype(s_out.dtype)
     e_out[...] = e[:, None]
     be_out[...] = be[:, None]
     bs_out[...] = bs.astype(bs_out.dtype)
+    nf_out[...] = nf[:, None]
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "block_r", "interpret"))
+@functools.partial(jax.jit, static_argnames=(
+    "mode", "uniformized", "gather", "block_r", "lane", "interpret"))
 def mcmc_sweep(couplings: jax.Array, fields0: jax.Array, spins0: jax.Array,
                energy0: jax.Array, uniforms: jax.Array, temps: jax.Array,
-               *, mode: str = "rsa", block_r: int = 8, interpret: bool = False):
-    """T fused MCMC steps for R replicas. Returns (fields, spins, energy,
-    best_energy, best_spins); see ``ref.mcmc_sweep`` for exact semantics."""
+               pwl_table: Optional[jax.Array] = None, *, mode: str = "rsa",
+               uniformized: bool = False, gather: str = "dynamic",
+               block_r: int = 8, lane: Optional[int] = None,
+               interpret: bool = False):
+    """T fused MCMC steps for R replicas.
+
+    couplings (N, N); fields0/spins0 (R, N); energy0 (R,); uniforms (T, R, 4)
+    [site, accept, roulette, uniformize] in [0,1); temps (T, R) per-replica
+    temperatures; pwl_table optional (S+1, 3) LUT from ``core.pwl.pwl_table``
+    (None = exact sigmoid). ``gather``: "dynamic" (default, O(N)/step row
+    fetch) or "onehot" (opt-in O(N²)/step MXU contraction for tiny N).
+    Returns (fields, spins, energy, best_energy, best_spins, num_flips); see
+    ``ref.mcmc_sweep`` for the exact-semantics oracle.
+    """
     r, n = fields0.shape
     t = uniforms.shape[0]
     assert couplings.shape == (n, n) and spins0.shape == (r, n)
-    assert uniforms.shape == (t, r, 3) and temps.shape == (t,)
+    assert uniforms.shape == (t, r, 4) and temps.shape == (t, r)
+    if gather not in ("dynamic", "onehot"):
+        raise ValueError(f"gather must be 'dynamic' or 'onehot', got {gather!r}")
     br = min(block_r, r)
     if r % br:
         raise ValueError(f"R={r} not divisible by block_r={br}")
+    lane = common.default_lane(n) if lane is None else lane
+    if n % lane:
+        raise ValueError(f"N={n} not divisible by lane={lane}")
     grid = (r // br,)
+    in_specs = [
+        pl.BlockSpec((n, n), lambda i: (0, 0)),        # J broadcast
+        pl.BlockSpec((br, n), lambda i: (i, 0)),       # u0
+        pl.BlockSpec((br, n), lambda i: (i, 0)),       # s0
+        pl.BlockSpec((br, 1), lambda i: (i, 0)),       # e0
+        pl.BlockSpec((t, br, 4), lambda i: (0, i, 0)),  # uniforms
+        pl.BlockSpec((t, br), lambda i: (0, i)),       # temps
+    ]
+    args = [couplings, fields0, spins0, energy0.reshape(r, 1), uniforms, temps]
+    if pwl_table is not None:
+        in_specs.append(pl.BlockSpec(pwl_table.shape, lambda i: (0, 0)))
+        args.append(pwl_table)
     outs = pl.pallas_call(
-        functools.partial(_kernel, num_steps=t, mode=mode),
+        functools.partial(_kernel, num_steps=t, mode=mode,
+                          uniformized=uniformized, gather=gather, lane=lane,
+                          has_pwl=pwl_table is not None),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((n, n), lambda i: (0, 0)),        # J broadcast
-            pl.BlockSpec((br, n), lambda i: (i, 0)),       # u0
-            pl.BlockSpec((br, n), lambda i: (i, 0)),       # s0
-            pl.BlockSpec((br, 1), lambda i: (i, 0)),       # e0
-            pl.BlockSpec((t, br, 3), lambda i: (0, i, 0)),  # uniforms
-            pl.BlockSpec((t, 1), lambda i: (0, 0)),        # temps
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((br, n), lambda i: (i, 0)),
             pl.BlockSpec((br, n), lambda i: (i, 0)),
             pl.BlockSpec((br, 1), lambda i: (i, 0)),
             pl.BlockSpec((br, 1), lambda i: (i, 0)),
             pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((r, n), jnp.float32),
@@ -136,9 +229,9 @@ def mcmc_sweep(couplings: jax.Array, fields0: jax.Array, spins0: jax.Array,
             jax.ShapeDtypeStruct((r, 1), jnp.float32),
             jax.ShapeDtypeStruct((r, 1), jnp.float32),
             jax.ShapeDtypeStruct((r, n), spins0.dtype),
+            jax.ShapeDtypeStruct((r, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(couplings, fields0, spins0, energy0.reshape(r, 1), uniforms,
-      temps.reshape(t, 1))
-    u, s, e, be, bs = outs
-    return u, s, e[:, 0], be[:, 0], bs
+    )(*args)
+    u, s, e, be, bs, nf = outs
+    return u, s, e[:, 0], be[:, 0], bs, nf[:, 0]

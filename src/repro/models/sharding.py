@@ -67,6 +67,11 @@ class ShardingRules:
                 ax = tuple(a for a in ax
                            if a not in used and (mesh_axes is None or a in mesh_axes))
                 ax = ax or None
+                if ax is not None and len(ax) == 1:
+                    # Normalize 1-tuples to the bare axis name (newer
+                    # PartitionSpec does this itself; old JAX keeps the tuple,
+                    # which breaks spec equality and dedup bookkeeping).
+                    ax = ax[0]
             elif ax in used or (mesh_axes is not None and ax is not None
                                 and ax not in mesh_axes):
                 ax = None

@@ -1,0 +1,33 @@
+"""Import shim: property tests skip — individually — when hypothesis is absent.
+
+``from hypothesis_compat import given, settings, st`` instead of importing
+hypothesis directly. With hypothesis installed this re-exports the real API;
+without it, ``@given`` replaces the test with a skip-marked stub so only the
+property tests skip and the rest of the module still runs (a module-level
+``pytest.importorskip`` would silently drop every test in the file).
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:  # pragma: no cover - exercised on hypothesis-less hosts
+
+    class _AnyStrategy:
+        """Accepts any strategy construction (st.integers(...), st.floats(...))."""
+
+        def __getattr__(self, name):
+            return lambda *args, **kwargs: None
+
+    st = _AnyStrategy()
+
+    def given(*args, **kwargs):
+        def decorate(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def stub():
+                pass
+            stub.__name__ = fn.__name__
+            return stub
+        return decorate
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn

@@ -1,0 +1,198 @@
+"""Backend-parity suite: the fused Pallas sweep is the production engine and
+must agree with its jnp oracle *exactly* (shared selection math ⇒ identical
+trajectories), and the fused drivers (solve / tempering / distributed) must
+return finite, monotone-nonincreasing best-energy traces with reference-
+identical trace shape/dtype/cadence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ising, rng
+from repro.core.pwl import pwl_table
+from repro.core.schedules import geometric
+from repro.core.solver import SolverConfig, solve
+from repro.core.tempering import TemperingConfig, solve_tempering
+from repro.kernels import ref
+from repro.kernels.sweep import mcmc_sweep as sweep_kernel
+
+
+def _sym(seed, n, integer=False, scale=1.0):
+    g = np.random.default_rng(seed)
+    J = g.normal(size=(n, n)) * scale
+    if integer:
+        J = np.rint(J)
+    J = np.triu(J, 1)
+    return (J + J.T).astype(np.float32)
+
+
+def _inputs(seed, r, n, t, temps=None):
+    g = np.random.default_rng(seed)
+    J = _sym(seed + 1, n)
+    s0 = np.where(g.random((r, n)) < 0.5, 1.0, -1.0).astype(np.float32)
+    u0 = (s0 @ J.T).astype(np.float32)
+    e0 = (-0.5 * np.einsum("ri,ri->r", s0, s0 @ J.T)).astype(np.float32)
+    unif = g.random((t, r, 4)).astype(np.float32)
+    if temps is None:
+        temps = np.broadcast_to(
+            np.geomspace(2.5, 0.05, t).astype(np.float32)[:, None], (t, r)).copy()
+    return tuple(map(jnp.asarray, (J, u0, s0, e0, unif, temps)))
+
+
+NAMES = ("fields", "spins", "energy", "best_energy", "best_spins", "num_flips")
+
+VARIANTS = {
+    "warm": dict(),                       # T > 0, exact sigmoid
+    "zero_t": dict(zero_t=True),          # greedy limit
+    "degenerate": dict(degenerate=True),  # W = 0 fallback / null transition
+    "uniformized": dict(uniformized=True),
+    "pwl": dict(pwl=True),
+}
+
+
+@pytest.mark.parametrize("mode", ["rsa", "rwa"])
+@pytest.mark.parametrize("variant", sorted(VARIANTS))
+def test_fused_matches_oracle_exactly(mode, variant):
+    opts = VARIANTS[variant]
+    if mode == "rsa" and variant in ("degenerate", "uniformized"):
+        pytest.skip("RWA-only variant")
+    r, n, t = 8, 96, 64
+    if opts.get("degenerate"):
+        # All-ferromagnetic at the all-up state, T=0 ⇒ every ΔE > 0 ⇒ W = 0.
+        J = np.ones((n, n), np.float32) - np.eye(n, dtype=np.float32)
+        s0 = np.ones((r, n), np.float32)
+        u0 = (s0 @ J.T).astype(np.float32)
+        e0 = (-0.5 * np.einsum("ri,ri->r", s0, s0 @ J.T)).astype(np.float32)
+        unif = np.random.default_rng(0).random((t, r, 4)).astype(np.float32)
+        temps = np.zeros((t, r), np.float32)
+        args = tuple(map(jnp.asarray, (J, u0, s0, e0, unif, temps)))
+    elif opts.get("zero_t"):
+        args = _inputs(7, r, n, t, temps=np.zeros((t, r), np.float32))
+    else:
+        args = _inputs(7, r, n, t)
+    tbl = pwl_table() if opts.get("pwl") else None
+    uniformized = bool(opts.get("uniformized")) and mode == "rwa"
+    got = sweep_kernel(*args, tbl, mode=mode, uniformized=uniformized,
+                       block_r=4, interpret=True)
+    want = ref.mcmc_sweep(*args, tbl, mode=mode, uniformized=uniformized)
+    for name, a, b in zip(NAMES, got, want):
+        # Shared selection math ⇒ trajectory-exact agreement, not just close.
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32),
+                                      err_msg=f"{mode}/{variant}:{name}")
+
+
+def test_site_index_derivation_is_canonical():
+    """Kernel/oracle site picks route through core.rng's canonical helper."""
+    keys = [jax.random.fold_in(jax.random.key(0), i) for i in range(64)]
+    for n in (7, 96, 4096):
+        via_index = np.array([int(rng.uniform_index(k, n)) for k in keys])
+        via_uniform = np.array(
+            [int(rng.index_from_uniform(rng.uniform01(k), n)) for k in keys])
+        np.testing.assert_array_equal(via_index, via_uniform)
+        assert via_index.min() >= 0 and via_index.max() < n
+
+
+def test_sweep_salt_is_disjoint():
+    """The fused chunk stream must not collide with any sequential-engine salt."""
+    assert rng.Salt.SWEEP not in {rng.Salt.SITE, rng.Salt.ACCEPT,
+                                  rng.Salt.ROULETTE, rng.Salt.UNIFORMIZE,
+                                  rng.Salt.INIT, rng.Salt.REPLICA,
+                                  rng.Salt.PROBLEM}
+    base = jax.random.key(1)
+    a = rng.uniform01(rng.stream(base, rng.Salt.SWEEP, 0), (8,))
+    b = rng.uniform01(rng.stream(base, rng.Salt.ROULETTE, 0), (8,))
+    assert not np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("mode,uniformized,use_pwl", [
+    ("rsa", False, False), ("rwa", False, True), ("rwa", True, False),
+])
+def test_solve_fused_backend_quality_and_trace(mode, uniformized, use_pwl):
+    prob = ising.IsingProblem.create(J=_sym(5, 12, integer=True, scale=2.0))
+    e_star, _, _ = ising.brute_force_ground_state(prob)
+    cfg = SolverConfig(num_steps=2048, schedule=geometric(6.0, 0.02, 2048),
+                       mode=mode, uniformized=uniformized, use_pwl=use_pwl,
+                       num_replicas=8, trace_every=256)
+    fused = solve(prob, 3, cfg, backend="fused")
+    reference = solve(prob, 3, cfg, backend="reference")
+    # Identical trace contract across backends (shape, dtype, cadence).
+    assert fused.trace_energy.shape == reference.trace_energy.shape == (8, 8)
+    assert fused.trace_energy.dtype == reference.trace_energy.dtype == jnp.float32
+    trace = np.asarray(fused.trace_energy)
+    assert np.isfinite(trace).all()
+    assert (np.diff(trace, axis=0) <= 1e-6).all(), "best-energy trace must be monotone"
+    assert float(jnp.min(fused.best_energy)) == pytest.approx(e_star, abs=1e-2)
+    # Bookkeeping: reported energies match the spins they claim.
+    recomputed = np.asarray(ising.energy(prob, fused.best_spins))
+    np.testing.assert_allclose(np.asarray(fused.best_energy), recomputed, atol=1e-2)
+    assert np.all(np.asarray(fused.num_flips) >= 0)
+
+
+def test_solve_fused_trace_disabled_matches_reference_contract():
+    prob = ising.IsingProblem.create(J=_sym(6, 10, integer=True, scale=2.0))
+    cfg = SolverConfig(num_steps=512, schedule=geometric(4.0, 0.05, 512),
+                       mode="rwa", num_replicas=4, trace_every=0)
+    fused = solve(prob, 0, cfg, backend="fused")
+    reference = solve(prob, 0, cfg, backend="reference")
+    assert fused.trace_energy.shape == reference.trace_energy.shape == (0, 4)
+    assert fused.trace_energy.dtype == reference.trace_energy.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("num_steps", [100, 600])
+def test_solve_fused_runs_exactly_num_steps(num_steps):
+    """Untraced fused runs must not round num_steps to a chunk multiple —
+    RWA at T>0 is rejection-free, so num_flips counts executed steps."""
+    prob = ising.IsingProblem.create(J=_sym(2, 10, integer=True, scale=2.0))
+    cfg = SolverConfig(num_steps=num_steps,
+                       schedule=geometric(6.0, 0.5, num_steps),
+                       mode="rwa", num_replicas=4, trace_every=0)
+    fused = solve(prob, 0, cfg, backend="fused")
+    np.testing.assert_array_equal(np.asarray(fused.num_flips),
+                                  np.full(4, num_steps))
+
+
+def test_solve_rejects_unknown_backend():
+    prob = ising.IsingProblem.create(J=_sym(6, 8))
+    cfg = SolverConfig(num_steps=8, schedule=geometric(1.0, 0.1, 8))
+    with pytest.raises(ValueError, match="backend"):
+        solve(prob, 0, cfg, backend="mystery")
+
+
+def test_tempering_fused_backend():
+    prob = ising.IsingProblem.create(J=_sym(1, 12, integer=True, scale=2.0))
+    e_star, _, _ = ising.brute_force_ground_state(prob)
+    cfg = TemperingConfig(num_steps=4000, t_min=0.05, t_max=8.0,
+                          num_replicas=8, swap_every=10, backend="fused")
+    res = solve_tempering(prob, 0, cfg)
+    assert float(jnp.min(res.best_energy)) == pytest.approx(e_star, abs=1e-2)
+    recomputed = np.asarray(ising.energy(prob, res.best_spins))
+    np.testing.assert_allclose(np.asarray(res.best_energy), recomputed, atol=1e-2)
+    assert 0.0 <= float(res.swap_acceptance) <= 1.0
+    assert np.all(np.asarray(res.num_flips) > 0)
+    assert np.isfinite(np.asarray(res.final_energy)).all()
+
+
+def test_distributed_fused_backend_single_device():
+    """Fused chunked sweeps inside shard_map (single-device mesh in-process;
+    the multi-device path runs in test_distributed's subprocesses)."""
+    from jax.sharding import Mesh
+    from repro.distributed.solver_dist import DistSolverConfig, solve_distributed
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    prob = ising.IsingProblem.create(J=_sym(9, 32, integer=True, scale=1.5))
+    base = SolverConfig(num_steps=512, schedule=geometric(6.0, 0.05, 512),
+                        mode="rwa", num_replicas=1, trace_every=64)
+    cfg = DistSolverConfig(base=base, replicas_per_device=4,
+                           exchange_every=4, backend="fused")
+    r1 = solve_distributed(prob, 7, cfg, mesh)
+    r2 = solve_distributed(prob, 7, cfg, mesh)
+    np.testing.assert_array_equal(np.asarray(r1.best_energy),
+                                  np.asarray(r2.best_energy))
+    recomputed = np.asarray(ising.energy(prob, r1.best_spins))
+    np.testing.assert_allclose(np.asarray(r1.best_energy), recomputed, atol=1e-2)
+    trace = np.asarray(r1.trace_energy)
+    assert trace.shape == (8, 4) and np.isfinite(trace).all()
+    assert (np.diff(trace, axis=0) <= 1e-6).all()

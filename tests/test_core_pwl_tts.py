@@ -4,7 +4,7 @@ import math
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # skips only @given tests when absent
 
 from repro.core import pwl, tts
 

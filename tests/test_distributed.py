@@ -52,14 +52,17 @@ def test_distributed_solver_matches_quality_and_is_deterministic():
         prob = maxcut_to_ising(inst)
         base = SolverConfig(num_steps=1024, schedule=geometric(8.0, 0.05, 1024),
                             mode='rwa', num_replicas=1, trace_every=64)
-        cfg = DistSolverConfig(base=base, replicas_per_device=2, exchange_every=4)
-        r1 = solve_distributed(prob, 7, cfg, mesh)
-        r2 = solve_distributed(prob, 7, cfg, mesh)
-        assert r1.best_energy.shape == (16,)   # 8 devices x 2 replicas
-        np.testing.assert_array_equal(np.asarray(r1.best_energy), np.asarray(r2.best_energy))
-        # energies bookkeeping exact
-        e = ising.energy(prob, r1.best_spins)
-        np.testing.assert_allclose(np.asarray(r1.best_energy), np.asarray(e), atol=1e-2)
+        for backend in ('reference', 'fused'):
+            cfg = DistSolverConfig(base=base, replicas_per_device=2,
+                                   exchange_every=4, backend=backend)
+            r1 = solve_distributed(prob, 7, cfg, mesh)
+            r2 = solve_distributed(prob, 7, cfg, mesh)
+            assert r1.best_energy.shape == (16,)   # 8 devices x 2 replicas
+            np.testing.assert_array_equal(np.asarray(r1.best_energy), np.asarray(r2.best_energy))
+            # energies bookkeeping exact
+            e = ising.energy(prob, r1.best_spins)
+            np.testing.assert_allclose(np.asarray(r1.best_energy), np.asarray(e), atol=1e-2)
+            assert float(r1.ensemble_best) < 0
         print('BEST', float(r1.ensemble_best))
     """)
     best = float(out.strip().split()[-1])
@@ -70,6 +73,7 @@ def test_compressed_training_matches_uncompressed_loss():
     out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.distributed import shard_map_compat
         from repro.distributed.compress import init_compression, compressed_psum_grads
 
         mesh = jax.make_mesh((8,), ('data',))
@@ -92,9 +96,9 @@ def test_compressed_training_matches_uncompressed_loss():
                             {'w': g}, ef_buf, axis='data')
                         return gg['w'], new_ef
                     return jax.lax.pmean(g, 'data'), ef_buf
-                fn = jax.jit(jax.shard_map(local, mesh=mesh,
+                fn = jax.jit(shard_map_compat(local, mesh=mesh,
                     in_specs=(P('data'), P('data'), P(), P()),
-                    out_specs=(P(), P()), check_vma=False))
+                    out_specs=(P(), P())))
                 g, ef = fn(X, y, w, ef)
                 w = w - 0.1 * g
             return float(loss(w, X, y))
@@ -112,6 +116,7 @@ def test_pipeline_matches_sequential():
     run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.distributed import shard_map_compat
         from repro.distributed.pipeline import pipeline_apply, bubble_fraction
 
         P_STAGES, M, MB, D = 4, 8, 2, 16
@@ -126,9 +131,8 @@ def test_pipeline_matches_sequential():
         def pipelined(stage_w, x):
             return pipeline_apply(stage_fn, stage_w[0], x, axis='pp')
 
-        fn = jax.jit(jax.shard_map(pipelined, mesh=mesh,
-                                   in_specs=(P('pp'), P()), out_specs=P(),
-                                   check_vma=False))
+        fn = jax.jit(shard_map_compat(pipelined, mesh=mesh,
+                                      in_specs=(P('pp'), P()), out_specs=P()))
         got = fn(stage_w, x)
         want = x
         for i in range(P_STAGES):

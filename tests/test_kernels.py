@@ -72,23 +72,59 @@ def test_bitplane_kernel_matches_oracle_and_dense(n, b, r):
     np.testing.assert_allclose(np.asarray(got), s.astype(np.float64) @ J.T, atol=1e-3)
 
 
+def _sweep_inputs(rng, J, r, n, t):
+    s0 = np.where(rng.random((r, n)) < 0.5, 1.0, -1.0).astype(np.float32)
+    u0 = (s0 @ J.T).astype(np.float32)
+    e0 = (-0.5 * np.einsum("ri,ri->r", s0, s0 @ J.T)).astype(np.float32)
+    unif = rng.random((t, r, 4)).astype(np.float32)
+    temps = np.broadcast_to(np.geomspace(3.0, 0.05, t).astype(np.float32)[:, None],
+                            (t, r)).copy()
+    return tuple(map(jnp.asarray, (J, u0, s0, e0, unif, temps)))
+
+
 @pytest.mark.parametrize("mode", ["rsa", "rwa"])
 @pytest.mark.parametrize("r,n,t,br", [(8, 128, 64, 8), (16, 64, 128, 4), (4, 256, 32, 4)])
 def test_sweep_kernel_matches_oracle(mode, r, n, t, br):
     rng = np.random.default_rng(r + n + t)
-    J = _sym(rng, n)
-    s0 = np.where(rng.random((r, n)) < 0.5, 1.0, -1.0).astype(np.float32)
-    u0 = (s0 @ J.T).astype(np.float32)
-    e0 = (-0.5 * np.einsum("ri,ri->r", s0, s0 @ J.T)).astype(np.float32)
-    unif = rng.random((t, r, 3)).astype(np.float32)
-    temps = np.geomspace(3.0, 0.05, t).astype(np.float32)
-    args = tuple(map(jnp.asarray, (J, u0, s0, e0, unif, temps)))
+    args = _sweep_inputs(rng, _sym(rng, n), r, n, t)
     got = sweep_kernel(*args, mode=mode, block_r=br, interpret=True)
     want = ref.mcmc_sweep(*args, mode=mode)
-    names = ("fields", "spins", "energy", "best_energy", "best_spins")
+    names = ("fields", "spins", "energy", "best_energy", "best_spins", "num_flips")
     for name, a, b in zip(names, got, want):
         np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32),
                                    rtol=1e-5, atol=1e-3, err_msg=f"{mode}:{name}")
+
+
+def test_sweep_onehot_gather_matches_dynamic():
+    """The opt-in MXU gather heuristic is a pure perf choice — same trajectory."""
+    rng = np.random.default_rng(11)
+    r, n, t = 8, 64, 48
+    args = _sweep_inputs(rng, _sym(rng, n), r, n, t)
+    got_dyn = sweep_kernel(*args, mode="rwa", block_r=4, interpret=True)
+    got_oh = sweep_kernel(*args, mode="rwa", block_r=4, gather="onehot",
+                          interpret=True)
+    for name, a, b in zip(("fields", "spins", "energy", "best_energy",
+                           "best_spins", "num_flips"), got_dyn, got_oh):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-4, err_msg=name)
+
+
+def test_sweep_kernel_step_has_no_quadratic_contraction():
+    """Acceptance gate for the O(N²)→O(N) gather fix: the default kernel's
+    jaxpr must contain no dot_general at all (the one-hot × J contraction was
+    the only matmul in the step loop); the opt-in MXU path must contain it."""
+    rng = np.random.default_rng(0)
+    r, n, t = 4, 128, 8
+    args = _sweep_inputs(rng, _sym(rng, n), r, n, t)
+
+    def trace(gather):
+        return str(jax.make_jaxpr(
+            lambda *a: sweep_kernel(*a, mode="rwa", block_r=4, gather=gather,
+                                    interpret=True))(*args))
+
+    assert "dot_general" not in trace("dynamic")
+    assert "dot_general" in trace("onehot")
 
 
 def test_sweep_handles_zero_temperature_degenerate():
@@ -98,12 +134,13 @@ def test_sweep_handles_zero_temperature_degenerate():
     s0 = np.ones((r, n), np.float32)
     u0 = (s0 @ J.T).astype(np.float32)
     e0 = (-0.5 * np.einsum("ri,ri->r", s0, s0 @ J.T)).astype(np.float32)
-    unif = np.random.default_rng(0).random((t, r, 3)).astype(np.float32)
-    temps = np.zeros(t, np.float32)
+    unif = np.random.default_rng(0).random((t, r, 4)).astype(np.float32)
+    temps = np.zeros((t, r), np.float32)
     got = sweep_kernel(*map(jnp.asarray, (J, u0, s0, e0, unif, temps)),
                        mode="rwa", block_r=4, interpret=True)
     assert np.all(np.asarray(got[1]) == 1.0)
     assert np.all(np.isfinite(np.asarray(got[2])))
+    assert np.all(np.asarray(got[5]) == 0)  # zero accepted flips tracked
 
 
 def test_fused_anneal_solves_and_matches_reference_quality():
@@ -121,5 +158,7 @@ def test_fused_anneal_solves_and_matches_reference_quality():
     # Energy bookkeeping inside the kernel is exact:
     recomputed = np.asarray(ising.energy(prob, fused.best_spins))
     np.testing.assert_allclose(np.asarray(fused.best_energy), recomputed, atol=1e-2)
+    # num_flips is tracked (RWA at T>0 flips nearly every step).
+    assert np.all(np.asarray(fused.num_flips) > 0)
     baseline = solve(prob, 3, cfg)
     assert float(jnp.min(baseline.best_energy)) == pytest.approx(e_star, abs=1e-2)
