@@ -1,14 +1,26 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+#
+# ``--run-id <stamp>`` labels this run in BENCH_solver_perf.json's history
+# (e.g. ``python -m benchmarks.run --run-id pr2-2026-07-26``). The stamp is a
+# CLI argument by design — no in-process clock read — so benchmark output is
+# a pure function of code + inputs and reruns stay byte-reproducible.
 from __future__ import annotations
 
+import argparse
 import sys
 import time
+from functools import partial
 
 
-def main() -> None:
+def main(argv=None) -> None:
     from . import (bench_fig14_incremental, bench_fig15_bitplane,
                    bench_roofline, bench_solver_perf, bench_table2_gset,
                    bench_table3_tts)
+
+    parser = argparse.ArgumentParser(prog="benchmarks.run")
+    parser.add_argument("--run-id", default=None,
+                        help="history stamp for BENCH_solver_perf.json")
+    args = parser.parse_args(argv)
 
     print("name,us_per_call,derived")
     suites = [
@@ -16,7 +28,8 @@ def main() -> None:
         ("table3_tts", bench_table3_tts.main),         # Table III TTS(0.99)
         ("fig14_incremental", bench_fig14_incremental.main),  # Fig 14
         ("fig15_bitplane", bench_fig15_bitplane.main),        # Fig 15 + Fig 8
-        ("solver_perf", bench_solver_perf.main),       # §Perf solver engines
+        ("solver_perf",                                 # §Perf solver engines
+         partial(bench_solver_perf.main, run_id=args.run_id)),
         ("roofline", bench_roofline.main),             # §Roofline table
     ]
     for name, fn in suites:

@@ -19,6 +19,7 @@ Pallas/TPU kernel that tiles the same math through VMEM.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -78,11 +79,28 @@ def encode_couplings(J: np.ndarray, num_planes: int) -> BitPlanes:
 
     Requires |J_ij| < 2**num_planes; raises otherwise (the hardware would
     saturate — we refuse instead so tests catch precision misconfiguration).
+    Requires J symmetric: :class:`BitPlanes` stores rows only and every
+    consumer (the streaming init and the fused sweep's incremental row fetch)
+    reads row j where the math wants column j — an asymmetric J would encode
+    fine and then silently produce wrong incremental updates, so we validate
+    here. A nonzero diagonal merely warns (self-coupling J_ii contributes a
+    spin-independent constant to ΔE bookkeeping but is almost always a
+    problem-construction bug).
     """
     J = np.asarray(J)
     Ji = np.rint(J).astype(np.int64)
     if not np.array_equal(Ji, J):
         raise ValueError("bit-plane encoding requires integer couplings (pre-scale first)")
+    if Ji.ndim != 2 or Ji.shape[0] != Ji.shape[1]:
+        raise ValueError(f"J must be square, got {Ji.shape}")
+    if not np.array_equal(Ji, Ji.T):
+        raise ValueError(
+            "bit-plane encoding requires a symmetric J: packed planes store "
+            "rows that double as columns in the incremental update")
+    if np.any(np.diag(Ji) != 0):
+        warnings.warn("bit-plane encoding of a J with nonzero diagonal "
+                      "(self-couplings); flip updates will fold J_ii into u",
+                      stacklevel=2)
     limit = 1 << num_planes
     if np.abs(Ji).max(initial=0) >= limit:
         raise ValueError(f"|J|max={np.abs(Ji).max()} needs more than {num_planes} planes")
@@ -118,8 +136,14 @@ def decode_couplings(planes: BitPlanes) -> np.ndarray:
 
 
 def pack_spins(spins: jax.Array) -> jax.Array:
-    """Encode ±1 spins as bits x_j=(s_j+1)/2 packed into uint32 words (§IV-B)."""
-    x = ((spins + 1) // 2).astype(jnp.uint32)
+    """Encode ±1 spins as bits x_j=(s_j+1)/2 packed into uint32 words (§IV-B).
+
+    The bit is derived with an explicit ``s_j > 0`` predicate rather than
+    ``(s_j + 1) // 2``: floor division is not dtype-uniform for ±1 spins
+    (float ``//`` yields floats and int rounding conventions differ), while
+    the predicate is exact for every spin dtype in use (int8/int32/f32/bf16).
+    """
+    x = (spins > 0).astype(jnp.uint32)
     n = x.shape[-1]
     pad = (-n) % WORD_BITS
     if pad:

@@ -22,6 +22,16 @@ from .pwl import make_flip_probability, make_pwl_sigmoid
 from .schedules import Schedule
 
 
+#: Valid values of the ``CouplingFormat`` knob (``SolverConfig.coupling_format``
+#: / ``TemperingConfig.coupling_format``): how the *fused* backend stores J in
+#: VMEM. "dense" = (N, N) f32; "bitplane" = packed signed planes
+#: (``core.bitplane``, 2·B bits/coupler — the paper's §IV-B1 memory lever);
+#: "auto" = bitplane exactly when J is integral and N exceeds the f32 VMEM
+#: crossover (``kernels.ops.DENSE_COUPLING_MAX_N``). The reference backend
+#: always consumes the dense J.
+COUPLING_FORMATS = ("auto", "dense", "bitplane")
+
+
 @dataclasses.dataclass(frozen=True)
 class SolverConfig:
     """Hashable (static) solver configuration."""
@@ -35,6 +45,7 @@ class SolverConfig:
     pwl_zmax: float = 8.0
     num_replicas: int = 8
     trace_every: int = 0            # 0 disables the energy trace
+    coupling_format: str = "auto"   # fused-backend J store; see COUPLING_FORMATS
 
 
 class SolveResult(NamedTuple):
@@ -98,16 +109,21 @@ def _run(problem: ising.IsingProblem, seed: jax.Array, config: SolverConfig) -> 
     )
 
 
-@partial(jax.jit, static_argnames=("config", "backend"))
+_run_jit = partial(jax.jit, static_argnames=("config",))(_run)
+
+
 def solve(problem: ising.IsingProblem, seed, config: SolverConfig,
           backend: str = "reference") -> SolveResult:
-    """Jitted entry point. ``seed`` is a dynamic int32 (host 64-bit seed).
+    """Entry point; the engines underneath are jitted. ``seed`` is a dynamic
+    int32 (host 64-bit seed).
 
     ``backend`` selects the engine: "reference" is the paper-faithful
     one-flip-per-XLA-op scan (the semantic oracle); "fused" is the production
     VMEM-resident Pallas sweep (``kernels.ops.fused_anneal``) — same modes,
     schedule, PWL/uniformized options, and trace shape/dtype/cadence, O(N)
-    per-step work, different (documented) RNG stream layout.
+    per-step work, different (documented) RNG stream layout. Dispatch happens
+    on the host (not under jit) so the fused path can resolve
+    ``config.coupling_format`` and pack bit-planes from the concrete J.
     """
     if backend == "fused":
         # Lazy import: kernels.ops imports this module for SolverConfig.
@@ -115,7 +131,7 @@ def solve(problem: ising.IsingProblem, seed, config: SolverConfig,
         return _ops.fused_anneal(problem, seed, config)
     if backend != "reference":
         raise ValueError(f"backend must be 'reference' or 'fused', got {backend!r}")
-    return _run(problem, jnp.asarray(seed, jnp.uint32), config)
+    return _run_jit(problem, jnp.asarray(seed, jnp.uint32), config)
 
 
 def solve_many(problem: ising.IsingProblem, seeds, config: SolverConfig,

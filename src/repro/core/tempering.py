@@ -42,6 +42,7 @@ class TemperingConfig:
     mode: str = "rsa"            # kernel for within-chain moves
     use_pwl: bool = True
     backend: str = "reference"   # "reference" | "fused"
+    coupling_format: str = "auto"  # fused-backend J store; COUPLING_FORMATS
 
     @property
     def ladder(self) -> np.ndarray:
@@ -132,9 +133,11 @@ def _solve_tempering_reference(problem: ising.IsingProblem, seed,
 
 
 def _solve_tempering_fused(problem: ising.IsingProblem, seed,
-                           config: TemperingConfig) -> TemperingResult:
+                           config: TemperingConfig, planes) -> TemperingResult:
     """Fused backend: each between-swap phase is one VMEM-resident sweep with
-    the temperature ladder as the kernel's per-replica ``(T, R)`` tensor."""
+    the temperature ladder as the kernel's per-replica ``(T, R)`` tensor.
+    ``planes`` is the packed bit-plane J (or None for dense), resolved and
+    encoded by the host-level dispatcher."""
     from ..kernels import ops as _ops  # lazy: kernels.ops imports core.solver
 
     r = config.num_replicas
@@ -143,14 +146,16 @@ def _solve_tempering_fused(problem: ising.IsingProblem, seed,
     interpret = _ops.auto_interpret(None)
     block_r = _ops.fit_block(r, 8)
     base = jax.random.fold_in(jax.random.key(0), jnp.asarray(seed, jnp.uint32))
-    init_state = _ops.fused_init_state(problem, base, r, interpret=interpret)
+    init_state = _ops.fused_init_state(problem, base, r, interpret=interpret,
+                                       planes=planes)
+    sweep_couplings = problem.couplings if planes is None else planes
     temps_trs = jnp.broadcast_to(temps[None, :], (config.swap_every, r))
     num_rounds = max(config.num_steps // config.swap_every, 1)
 
     def round_body(carry, round_idx):
         state, acc, tot = carry
         state = _ops.fused_sweep_chunk(
-            problem.couplings, state, rng.stream(base, rng.Salt.SWEEP, round_idx),
+            sweep_couplings, state, rng.stream(base, rng.Salt.SWEEP, round_idx),
             config.swap_every, temps_trs, mode=config.mode, pwl_table=tbl,
             block_r=block_r, interpret=interpret)
         state, (a, t) = _swap_phase(state, lambda st: st[2], temps,
@@ -169,12 +174,25 @@ def _solve_tempering_fused(problem: ising.IsingProblem, seed,
     )
 
 
-@partial(jax.jit, static_argnames=("config",))
+_solve_tempering_reference_jit = partial(
+    jax.jit, static_argnames=("config",))(_solve_tempering_reference)
+_solve_tempering_fused_jit = partial(
+    jax.jit, static_argnames=("config",))(_solve_tempering_fused)
+
+
 def solve_tempering(problem: ising.IsingProblem, seed,
                     config: TemperingConfig) -> TemperingResult:
+    """Host-level dispatcher (the engines underneath are jitted): the fused
+    path resolves ``config.coupling_format`` and packs bit-planes from the
+    concrete J before entering jit."""
     if config.backend == "fused":
-        return _solve_tempering_fused(problem, seed, config)
+        from ..kernels import ops as _ops  # lazy: kernels.ops imports core.solver
+        fmt = _ops.resolve_coupling_format(
+            config.coupling_format, problem.couplings, problem.num_spins)
+        planes = (_ops.encode_for_sweep(problem.couplings)
+                  if fmt == "bitplane" else None)
+        return _solve_tempering_fused_jit(problem, seed, config, planes)
     if config.backend != "reference":
         raise ValueError(
             f"backend must be 'reference' or 'fused', got {config.backend!r}")
-    return _solve_tempering_reference(problem, seed, config)
+    return _solve_tempering_reference_jit(problem, seed, config)

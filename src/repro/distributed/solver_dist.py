@@ -56,14 +56,16 @@ def _chunk_runner(problem, mc, schedule, chunk_steps):
 
 
 def _fused_chunk_runner(base_cfg: SolverConfig, chunk_steps: int, r_local: int,
-                        interpret: bool):
+                        interpret: bool, planes=None):
     """Run `chunk_steps` steps as one VMEM-resident fused sweep per shard.
 
     Replica chains stay in ``mcmc.ChainState`` so the elitist-exchange logic
     is backend-agnostic; the sweep kernel consumes/produces the state arrays
     directly. Per-device RNG: chunk uniforms come from the dedicated
     ``Salt.SWEEP`` stream folded with the device index, so shards draw
-    disjoint streams by construction.
+    disjoint streams by construction. ``planes`` is the packed bit-plane J
+    (``base_cfg.coupling_format``, resolved by ``solve_distributed``) —
+    replicated to every shard like the dense J it replaces in the kernel.
     """
     from ..kernels import ops as _ops
 
@@ -78,7 +80,7 @@ def _fused_chunk_runner(base_cfg: SolverConfig, chunk_steps: int, r_local: int,
                  states.energy, states.best_energy,
                  states.best_spins.astype(jnp.float32), states.num_flips)
         u, s, e, be, bs, nf = _ops.fused_sweep_chunk(
-            problem.couplings, state,
+            problem.couplings if planes is None else planes, state,
             rng.stream(base, rng.Salt.SWEEP, device_idx, chunk_idx),
             chunk_steps, temps, mode=base_cfg.mode,
             uniformized=base_cfg.uniformized, pwl_table=tbl,
@@ -110,9 +112,13 @@ def solve_distributed(problem: ising.IsingProblem, seed, config: DistSolverConfi
     chunk = max(base_cfg.trace_every, 1) if base_cfg.trace_every else 64
     num_chunks = max(base_cfg.num_steps // chunk, 1)
     if config.backend == "fused":
-        from ..kernels.ops import auto_interpret
+        from ..kernels.ops import (auto_interpret, encode_for_sweep,
+                                   resolve_coupling_format)
+        fmt = resolve_coupling_format(base_cfg.coupling_format,
+                                      problem.couplings, n)
+        planes = encode_for_sweep(problem.couplings) if fmt == "bitplane" else None
         runner_fused = _fused_chunk_runner(base_cfg, chunk, r_local,
-                                           auto_interpret(None))
+                                           auto_interpret(None), planes)
     elif config.backend == "reference":
         runner = _chunk_runner(problem, mc, base_cfg.schedule, chunk)
     else:

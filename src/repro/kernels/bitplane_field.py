@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from . import common
+
 
 def _kernel(pos_ref, neg_ref, x_ref, out_ref, *, num_planes: int):
     x = x_ref[...]  # (br, W) uint32
@@ -40,15 +42,18 @@ def _kernel(pos_ref, neg_ref, x_ref, out_ref, *, num_planes: int):
 def bitplane_field_init(pos: jax.Array, neg: jax.Array, spin_words: jax.Array,
                         *, block_r: int = 8, block_n: int = 256,
                         interpret: bool = False) -> jax.Array:
-    """u^(J)[r, i] from packed planes (Eq. 14-16). Returns (R, N) f32."""
+    """u^(J)[r, i] from packed planes (Eq. 14-16). Returns (R, N) f32.
+
+    ``block_r``/``block_n`` clamp to the largest divisors of R/N ≤ the
+    requested sizes (BlockSpec grids need exact tiling; a non-dividing
+    request falls back instead of erroring).
+    """
     num_planes, n, w = pos.shape
     assert neg.shape == pos.shape
     r = spin_words.shape[0]
     assert spin_words.shape == (r, w)
-    br = min(block_r, r)
-    bn = min(block_n, n)
-    if r % br or n % bn:
-        raise ValueError(f"(R={r}, N={n}) not divisible by blocks ({br},{bn})")
+    br = common.fit_block(r, block_r)
+    bn = common.fit_block(n, block_n)
     grid = (n // bn, r // br)
     return pl.pallas_call(
         functools.partial(_kernel, num_planes=num_planes),

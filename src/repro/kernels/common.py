@@ -14,10 +14,48 @@ import jax
 import jax.numpy as jnp
 
 from ..core import rng
+from ..core.bitplane import WORD_BITS
 
 #: Widest lane block considered for the hierarchical roulette scan. 128 is the
 #: TPU lane count — a within-block cumsum over ≤128 lanes stays in-register.
 MAX_LANE = 128
+
+
+def fit_block(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is ≤ target (BlockSpec grids need exact
+    tiling, so block knobs clamp to the nearest feasible size instead of
+    erroring on e.g. R=12 with block_r=8)."""
+    for b in range(min(target, n), 0, -1):
+        if n % b == 0:
+            return b
+    return 1
+
+
+def decode_bitplane_rows(pos: jax.Array, neg: jax.Array, n: int) -> jax.Array:
+    """Decode packed signed bit-plane words into f32 coupling rows (Eq. 13).
+
+    ``pos``/``neg``: (B, ..., W) uint32 — the W packed words of one J row per
+    plane (kernel: a (B, 1, W) ``pl.ds`` slice of the VMEM-resident planes;
+    oracle: a (B, R, W) ``jnp.take`` gather). Returns (..., n) float32 via
+    J_row = Σ_b 2^b (bits(pos_b) − bits(neg_b)). The expansion is a plain
+    shift-and-mask over the 32 bit positions plus an unrolled weighted sum
+    over the B planes — O(B·N) VPU work, no ``dot_general`` (the fused
+    sweep's jaxpr pin covers this path too) and no ``population_count``
+    (the row update needs the individual coupler bits, not their weight).
+    Plane values are small integers, so the f32 row is exact.
+    """
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+
+    def expand(words):  # (..., W) uint32 -> (..., W·32) {0,1} int32, LSB-first
+        bits = (words[..., :, None] >> shifts) & jnp.uint32(1)
+        return bits.reshape(words.shape[:-1] + (-1,)).astype(jnp.int32)
+
+    num_planes = pos.shape[0]
+    row = jnp.zeros(pos.shape[1:-1] + (pos.shape[-1] * WORD_BITS,), jnp.float32)
+    for b in range(num_planes):  # static unroll: B is small (≤ 16)
+        diff = expand(pos[b]) - expand(neg[b])
+        row = row + jnp.float32(1 << b) * diff.astype(jnp.float32)
+    return row[..., :n]
 
 
 def default_lane(n: int) -> int:

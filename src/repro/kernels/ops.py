@@ -14,23 +14,35 @@ the target); ``interpret=None`` auto-detects.
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core import ising, rng
-from ..core.bitplane import BitPlanes, pack_spins
+from ..core.bitplane import (BitPlanes, encode_couplings,
+                             local_fields_from_planes, pack_spins)
 from ..core.pwl import pwl_table as _pwl_table
-from ..core.solver import SolverConfig, SolveResult
+from ..core.solver import COUPLING_FORMATS, SolverConfig, SolveResult
 from . import bitplane_field as _bitplane_field
 from . import local_field as _local_field
 from . import sweep as _sweep
+from .common import fit_block  # noqa: F401  (canonical home is kernels.common)
 
 #: N at or below which the one-hot MXU row gather beats per-replica dynamic
 #: slices (one small matmul vs br sequential row DMAs) — the opt-in heuristic
 #: resolved by ``gather="auto"``.
 ONEHOT_GATHER_MAX_N = 128
+
+#: The f32 VMEM wall (DESIGN.md §Backends): above this N a dense f32 J no
+#: longer fits VMEM alongside the sweep state, so ``coupling_format="auto"``
+#: switches integral-J problems to the packed bit-plane store.
+DENSE_COUPLING_MAX_N = 2000
+
+#: What the fused sweep holds per coupler: dense f32 = 32 bits; bit-planes =
+#: 2·B bits (pos + neg planes). Used for the benchmark's J-bytes accounting.
+DENSE_COUPLING_BITS = 32
 
 
 def auto_interpret(interpret: Optional[bool]) -> bool:
@@ -39,12 +51,49 @@ def auto_interpret(interpret: Optional[bool]) -> bool:
     return interpret
 
 
-def fit_block(n: int, target: int) -> int:
-    """Largest divisor of n that is ≤ target (BlockSpec grids need exact tiling)."""
-    for b in range(min(target, n), 0, -1):
-        if n % b == 0:
-            return b
-    return 1
+def resolve_coupling_format(fmt: Optional[str], couplings, n: int) -> str:
+    """Resolve the ``CouplingFormat`` knob to "dense" | "bitplane".
+
+    "auto" (or None) selects "bitplane" exactly when the couplings are
+    concrete (host-inspectable — encoding runs in numpy), integral, N is
+    past the f32 VMEM crossover (:data:`DENSE_COUPLING_MAX_N`), **and** the
+    packed store is actually smaller — 2·B bits per coupler must beat the 32
+    of dense f32, so integer magnitudes needing B ≥ 16 planes stay dense;
+    everything else stays dense. An explicit "bitplane" under a jax trace
+    raises — the planes cannot be packed from a tracer; encode first and
+    pass them in.
+    """
+    traced = isinstance(couplings, jax.core.Tracer)
+    if fmt in (None, "auto"):
+        if traced or n <= DENSE_COUPLING_MAX_N:
+            return "dense"
+        J = np.asarray(couplings)
+        if not np.array_equal(J, np.rint(J)):
+            return "dense"
+        num_planes = max(1, int(np.abs(J).max(initial=0)).bit_length())
+        return ("bitplane" if 2 * num_planes < DENSE_COUPLING_BITS
+                else "dense")
+    if fmt not in ("dense", "bitplane"):
+        raise ValueError(
+            f"coupling format must be one of {COUPLING_FORMATS}, got {fmt!r}")
+    if fmt == "bitplane" and traced:
+        raise ValueError("coupling_format='bitplane' needs concrete couplings "
+                         "(plane packing happens on the host, outside jit)")
+    return fmt
+
+
+def encode_for_sweep(couplings, num_planes: Optional[int] = None) -> BitPlanes:
+    """Pack a concrete integral J for the fused sweep's bit-plane path.
+
+    ``num_planes`` defaults to the fewest planes that represent |J|max
+    (B = bit_length(|J|max), ≥ 1) — memory is linear in B, so auto-selection
+    never over-allocates precision (paper §IV-B1).
+    """
+    J = np.asarray(couplings)
+    if num_planes is None:
+        amax = int(np.abs(np.rint(J)).max(initial=0))
+        num_planes = max(1, amax.bit_length())
+    return encode_couplings(J, num_planes)
 
 
 def local_field_init(spins: jax.Array, couplings: jax.Array, bias: jax.Array,
@@ -73,11 +122,22 @@ def _resolve_gather(gather: str, n: int) -> str:
 
 
 def init_fields(problem: ising.IsingProblem, spins0: jax.Array, *,
-                interpret: bool, block_r: int = 8) -> jax.Array:
-    """One-time u₀ = J s + h init for the fused drivers. The tiled Pallas MXU
-    kernel only wins on real TPUs; interpret mode emulates it tile-by-tile at
-    a huge constant factor, so there the init goes through XLA's native
-    matmul instead."""
+                interpret: bool, block_r: int = 8,
+                planes: Optional[BitPlanes] = None) -> jax.Array:
+    """One-time u₀ = J s + h init for the fused drivers. With packed
+    ``planes`` the J-term comes from the Hamming-weight accumulation
+    (Eq. 14-16) — the popcount Pallas kernel on real TPUs, its jnp oracle in
+    interpret mode (tile-by-tile interpret emulation has a huge constant
+    factor; same reason the dense init uses XLA's native matmul there)."""
+    if planes is not None:
+        if interpret:
+            u_j = local_fields_from_planes(planes, spins0)
+        else:
+            r, n = spins0.shape
+            u_j = bitplane_field_init(planes, spins0, interpret=False,
+                                      block_r=fit_block(r, block_r),
+                                      block_n=fit_block(n, 256))
+        return (u_j + problem.fields[None, :]).astype(jnp.float32)
     if interpret:
         return ising.local_fields(problem, spins0).astype(jnp.float32)
     r = spins0.shape[0]
@@ -86,18 +146,21 @@ def init_fields(problem: ising.IsingProblem, spins0: jax.Array, *,
 
 
 def fused_init_state(problem: ising.IsingProblem, base: jax.Array, r: int, *,
-                     interpret: bool, block_r: int = 8):
+                     interpret: bool, block_r: int = 8,
+                     planes: Optional[BitPlanes] = None):
     """Replica init for the fused drivers: the ``(u, s, e, best_e, best_s,
     num_flips)`` state tuple. Key derivation (``Salt.REPLICA`` → ``Salt.INIT``)
     is exactly the reference engine's, so both backends start every replica
     from the identical spin configuration — a single definition keeps that
-    parity contract in one place."""
+    parity contract in one place. With ``planes`` the u₀ init runs off the
+    packed store (integer J ⇒ bit-identical to the dense matmul in f32)."""
     n = problem.num_spins
     replica_keys = jax.vmap(lambda i: rng.stream(base, rng.Salt.REPLICA, i))(jnp.arange(r))
     spins0 = jax.vmap(lambda k: ising.random_spins(
         rng.stream(k, rng.Salt.INIT), (n,)))(replica_keys)
     spins0 = spins0.astype(jnp.float32)
-    u0 = init_fields(problem, spins0, interpret=interpret, block_r=block_r)
+    u0 = init_fields(problem, spins0, interpret=interpret, block_r=block_r,
+                     planes=planes)
     e0 = ising.energy(problem, spins0)
     return (u0, spins0, e0, e0, spins0, jnp.zeros((r,), jnp.int32))
 
@@ -109,9 +172,9 @@ def solver_pwl_table(config: SolverConfig) -> Optional[jax.Array]:
     return _pwl_table(config.pwl_segments, config.pwl_zmax)
 
 
-def fused_sweep_chunk(couplings: jax.Array, state, chunk_key: jax.Array,
-                      num_steps: int, temps: jax.Array, *, mode: str,
-                      uniformized: bool = False,
+def fused_sweep_chunk(couplings: Union[jax.Array, BitPlanes], state,
+                      chunk_key: jax.Array, num_steps: int, temps: jax.Array,
+                      *, mode: str, uniformized: bool = False,
                       pwl_table: Optional[jax.Array] = None,
                       gather: str = "dynamic", block_r: int = 8,
                       interpret: bool = False):
@@ -119,18 +182,21 @@ def fused_sweep_chunk(couplings: jax.Array, state, chunk_key: jax.Array,
     shared by ``fused_anneal``, fused tempering, and the fused distributed
     runner, so kernel-signature changes happen in exactly one place.
 
-    ``state`` is the 6-tuple ``(u, s, e, best_e, best_s, num_flips)`` with a
-    leading replica axis; ``chunk_key`` is the chunk's ``Salt.SWEEP`` stream;
-    ``temps`` is the (num_steps, R) per-replica temperature tensor. Returns
-    the updated state tuple.
+    ``couplings`` is the dense (N, N) J or a packed ``BitPlanes`` (the
+    kernel's ``coupling`` mode follows the type). ``state`` is the 6-tuple
+    ``(u, s, e, best_e, best_s, num_flips)`` with a leading replica axis;
+    ``chunk_key`` is the chunk's ``Salt.SWEEP`` stream; ``temps`` is the
+    (num_steps, R) per-replica temperature tensor. Returns the updated state
+    tuple.
     """
     u, s, e, be, bs, nf = state
     r = e.shape[0]
+    coupling = "bitplane" if isinstance(couplings, BitPlanes) else "dense"
     uniforms = rng.uniform01(chunk_key, (num_steps, r, 4))
     u, s, e, ce, cs, cf = _sweep.mcmc_sweep(
         couplings, u, s, e, uniforms, temps, pwl_table, mode=mode,
-        uniformized=uniformized, gather=gather, block_r=block_r,
-        interpret=interpret)
+        uniformized=uniformized, gather=gather, coupling=coupling,
+        block_r=block_r, interpret=interpret)
     better = ce < be
     return (u, s, e, jnp.where(better, ce, be),
             jnp.where(better[:, None], cs, bs), nf + cf)
@@ -140,14 +206,22 @@ def fused_sweep_chunk(couplings: jax.Array, state, chunk_key: jax.Array,
                                    "gather", "interpret"))
 def _fused_anneal_impl(problem: ising.IsingProblem, seed: jax.Array,
                        config: SolverConfig, chunk_steps: int, block_r: int,
-                       gather: str, interpret: bool) -> SolveResult:
+                       gather: str, interpret: bool,
+                       planes: Optional[BitPlanes]) -> SolveResult:
     n = problem.num_spins
     r = config.num_replicas
     base = jax.random.fold_in(jax.random.key(0), seed)
     init = fused_init_state(problem, base, r, interpret=interpret,
-                            block_r=block_r)
+                            block_r=block_r, planes=planes)
     tbl = solver_pwl_table(config)
-    gather = _resolve_gather(gather, n)
+    sweep_couplings = problem.couplings if planes is None else planes
+    if planes is not None:
+        # "auto"/"dynamic" resolve to the O(N) row fetch; an explicit
+        # "onehot" flows through so the kernel raises its dense-only error
+        # rather than being silently overridden here.
+        gather = gather if gather == "onehot" else "dynamic"
+    else:
+        gather = _resolve_gather(gather, n)
 
     # Trace cadence is identical to the reference backend: with tracing on,
     # kernel chunks are exactly ``trace_every`` steps and the trace records
@@ -169,7 +243,7 @@ def _fused_anneal_impl(problem: ising.IsingProblem, seed: jax.Array,
         temps = jax.vmap(config.schedule)(steps).astype(jnp.float32)
         temps = jnp.broadcast_to(temps[:, None], (clen, r))
         state = fused_sweep_chunk(
-            problem.couplings, carry, rng.stream(base, rng.Salt.SWEEP, c),
+            sweep_couplings, carry, rng.stream(base, rng.Salt.SWEEP, c),
             clen, temps, mode=config.mode, uniformized=config.uniformized,
             pwl_table=tbl, gather=gather, block_r=fit_block(r, block_r),
             interpret=interpret)
@@ -193,6 +267,8 @@ def _fused_anneal_impl(problem: ising.IsingProblem, seed: jax.Array,
 def fused_anneal(problem: ising.IsingProblem, seed, config: SolverConfig,
                  *, chunk_steps: int = 256, block_r: int = 8,
                  gather: str = "dynamic",
+                 coupling: Union[str, BitPlanes, None] = None,
+                 num_planes: Optional[int] = None,
                  interpret: Optional[bool] = None) -> SolveResult:
     """Production annealing driver on the fused sweep kernel.
 
@@ -202,7 +278,24 @@ def fused_anneal(problem: ising.IsingProblem, seed, config: SolverConfig,
     its chunk uniforms from the dedicated ``Salt.SWEEP`` stream). ``gather``
     is "dynamic" (O(N)/step), "onehot" (O(N²)/step MXU contraction), or
     "auto" (onehot only for N ≤ ONEHOT_GATHER_MAX_N, i.e. 128).
+
+    ``coupling`` overrides ``config.coupling_format`` ("auto" picks the
+    packed bit-plane store when J is integral, N is past the f32 VMEM
+    crossover, and packing actually shrinks J); plane packing happens here,
+    on the host, so the jitted impl only ever sees ready arrays. Callers
+    that already hold packed planes (benchmarks, repeated solves of one
+    instance) pass the ``BitPlanes`` itself as ``coupling`` to skip the
+    O(N²·B) re-encode. ``num_planes`` forces the precision B (default:
+    fewest planes covering |J|max).
     """
+    if isinstance(coupling, BitPlanes):
+        planes = coupling
+    else:
+        fmt = resolve_coupling_format(
+            coupling if coupling is not None else config.coupling_format,
+            problem.couplings, problem.num_spins)
+        planes = (encode_for_sweep(problem.couplings, num_planes)
+                  if fmt == "bitplane" else None)
     return _fused_anneal_impl(problem, jnp.asarray(seed, jnp.uint32), config,
                               chunk_steps, block_r, gather,
-                              auto_interpret(interpret))
+                              auto_interpret(interpret), planes)

@@ -33,7 +33,7 @@ def bitplane_field_init(pos: jax.Array, neg: jax.Array, spin_words: jax.Array,
     return jnp.einsum("b,rbn->rn", w, contrib.astype(jnp.float32))
 
 
-def mcmc_sweep(couplings: jax.Array, fields0: jax.Array, spins0: jax.Array,
+def mcmc_sweep(couplings, fields0: jax.Array, spins0: jax.Array,
                energy0: jax.Array, uniforms: jax.Array, temps: jax.Array,
                pwl_table: jax.Array | None = None, *, mode: str = "rsa",
                uniformized: bool = False, lane: int | None = None):
@@ -42,16 +42,32 @@ def mcmc_sweep(couplings: jax.Array, fields0: jax.Array, spins0: jax.Array,
     Exact-semantics oracle for ``kernels.sweep.mcmc_sweep``: identical
     signature (minus blocking knobs) and identical per-step arithmetic via the
     shared ``kernels.common`` selection math, so parity tests can require
-    trajectory-exact agreement. couplings (N, N); fields0/spins0 (R, N);
+    trajectory-exact agreement. couplings (N, N) dense — or a packed
+    ``core.bitplane.BitPlanes``, mirroring the kernel's
+    ``coupling="bitplane"`` path: rows are gathered from the planes and
+    decoded through the same ``common.decode_bitplane_rows`` bit expansion,
+    so the bit-plane trajectories are exact too. fields0/spins0 (R, N);
     energy0 (R,); uniforms (T, R, 4) f32 in [0,1) — (site, accept, roulette,
     uniformize) streams; temps (T, R) f32 per-replica temperatures;
     ``pwl_table`` optional (S+1, 3) LUT (None = exact sigmoid). Returns
     (fields, spins, energy, best_energy, best_spins, num_flips).
     """
     from . import common  # local import: ref stays importable standalone
+    from ..core.bitplane import BitPlanes
 
-    n = couplings.shape[0]
-    J = couplings.astype(jnp.float32)
+    if isinstance(couplings, BitPlanes):
+        n = couplings.num_spins
+        pos, neg = couplings.pos, couplings.neg
+
+        def fetch_rows(j):  # (R,) sites -> (R, N) f32 decoded coupling rows
+            return common.decode_bitplane_rows(
+                jnp.take(pos, j, axis=1), jnp.take(neg, j, axis=1), n)
+    else:
+        n = couplings.shape[0]
+        J = couplings.astype(jnp.float32)
+
+        def fetch_rows(j):
+            return jnp.take(J, j, axis=0)
     lane = common.default_lane(n) if lane is None else lane
 
     def body(carry, xs):
@@ -81,7 +97,7 @@ def mcmc_sweep(couplings: jax.Array, fields0: jax.Array, spins0: jax.Array,
             de = jnp.take_along_axis(de_all, j[:, None], axis=1)[:, 0]
         s_old = jnp.take_along_axis(sf, j[:, None], axis=1)[:, 0]
         acc_f = accept.astype(jnp.float32)
-        rows = jnp.take(J, j, axis=0)  # (R, N)
+        rows = fetch_rows(j)  # (R, N)
         u = u - (2.0 * acc_f * s_old)[:, None] * rows
         onehot = jax.nn.one_hot(j, n, dtype=s.dtype)
         s = jnp.where(accept[:, None], (s * (1 - 2 * onehot)).astype(s.dtype), s)

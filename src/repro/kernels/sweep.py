@@ -15,6 +15,19 @@ MXU gather — an O(br·N²) contraction per step — survives only as the opt-i
 ``gather="onehot"`` heuristic for tiny N, where a single small matmul beats
 ``br`` sequential DMA-issued row reads.
 
+Coupling storage is selectable (``coupling="dense"|"bitplane"``): the dense
+path holds J as (N, N) f32 — 16 MiB of VMEM at N=2048, the f32 wall — while
+the bit-plane path (paper §IV-B1, Eq. 13) holds the (B, N, W) uint32
+``pos``/``neg`` planes of an integer J, 2·B bits per coupler instead of 32.
+At the paper's B=2 that is 8× smaller, moving the VMEM wall from N≈2000 to
+N≈5–11k (DESIGN.md §Backends). Row j is fetched as a (B, 1, W) ``pl.ds``
+slice per sign — O(B·N/32) word reads — and decoded in-register by
+``common.decode_bitplane_rows`` (shift-and-mask expansion + unrolled plane
+sum, O(B·N) VPU work, no ``dot_general``); the O(N) FMA into u is unchanged,
+so the O(N)/step contract and the no-``dot_general`` jaxpr pin both hold.
+Local-field *initialization* from planes is the separate popcount kernel
+(``kernels/bitplane_field.py``); this kernel only consumes u₀.
+
 Feature parity with ``core.mcmc``: both modes (RSA random-scan, RWA
 roulette-wheel with hierarchical lane-scan selection), the uniformized-RWA
 null-transition variant, the PWL LUT flip probability (passed as a small VMEM
@@ -40,6 +53,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..core.bitplane import BitPlanes
 from . import common
 
 
@@ -70,20 +84,30 @@ def _gather_scalar_pair(a: jax.Array, b: jax.Array, sites: jax.Array,
 
 
 def _kernel(*refs, num_steps: int, mode: str, uniformized: bool,
-            gather: str, lane: int, has_pwl: bool):
+            gather: str, lane: int, has_pwl: bool, coupling: str):
+    num_j = 2 if coupling == "bitplane" else 1
+    j_refs = refs[:num_j]
+    (u0_ref, s0_ref, e0_ref, unif_ref, temp_ref) = refs[num_j:num_j + 5]
     if has_pwl:
-        (j_ref, u0_ref, s0_ref, e0_ref, unif_ref, temp_ref, pwl_ref,
-         u_out, s_out, e_out, be_out, bs_out, nf_out) = refs
+        pwl_ref = refs[num_j + 5]
         tbl = pwl_ref[...].astype(jnp.float32)
     else:
-        (j_ref, u0_ref, s0_ref, e0_ref, unif_ref, temp_ref,
-         u_out, s_out, e_out, be_out, bs_out, nf_out) = refs
         tbl = None
-    n = j_ref.shape[0]
+    (u_out, s_out, e_out, be_out, bs_out, nf_out) = refs[num_j + 5 + int(has_pwl):]
+    n = u0_ref.shape[1]
     br = u0_ref.shape[0]
     # Only the opt-in MXU path materializes J as a value; the default O(N)
-    # path reads single rows straight off the ref.
-    J = j_ref[...].astype(jnp.float32) if gather == "onehot" else None
+    # path reads single rows straight off the ref(s).
+    J = j_refs[0][...].astype(jnp.float32) if gather == "onehot" else None
+
+    def fetch_row(jr):
+        """(1, N) f32 coupling row jr — `pl.ds` off the VMEM-resident store."""
+        if coupling == "bitplane":
+            pos_ref, neg_ref = j_refs
+            pr = pos_ref[:, pl.ds(jr, 1), :]  # (B, 1, W) packed words
+            nr = neg_ref[:, pl.ds(jr, 1), :]
+            return common.decode_bitplane_rows(pr, nr, n)
+        return j_refs[0][pl.ds(jr, 1), :].astype(jnp.float32)
     u = u0_ref[...].astype(jnp.float32)     # (br, N)
     s = s0_ref[...].astype(jnp.float32)     # (br, N) ±1
     e = e0_ref[...].astype(jnp.float32)[:, 0]  # (br,)
@@ -139,7 +163,7 @@ def _kernel(*refs, num_steps: int, mode: str, uniformized: bool,
                 u, s, bs = carry
                 jr = j[rix]
                 coef = 2.0 * accept[rix] * s_old[rix]
-                row = j_ref[pl.ds(jr, 1), :].astype(jnp.float32)  # (1, N)
+                row = fetch_row(jr)  # (1, N)
                 u_row = jax.lax.dynamic_slice(u, (rix, 0), (1, n))
                 u = jax.lax.dynamic_update_slice(u, u_row - coef * row,
                                                  (rix, 0))
@@ -167,52 +191,78 @@ def _kernel(*refs, num_steps: int, mode: str, uniformized: bool,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "mode", "uniformized", "gather", "block_r", "lane", "interpret"))
-def mcmc_sweep(couplings: jax.Array, fields0: jax.Array, spins0: jax.Array,
+    "mode", "uniformized", "gather", "coupling", "block_r", "lane",
+    "interpret"))
+def mcmc_sweep(couplings, fields0: jax.Array, spins0: jax.Array,
                energy0: jax.Array, uniforms: jax.Array, temps: jax.Array,
                pwl_table: Optional[jax.Array] = None, *, mode: str = "rsa",
                uniformized: bool = False, gather: str = "dynamic",
-               block_r: int = 8, lane: Optional[int] = None,
-               interpret: bool = False):
+               coupling: str = "dense", block_r: int = 8,
+               lane: Optional[int] = None, interpret: bool = False):
     """T fused MCMC steps for R replicas.
 
-    couplings (N, N); fields0/spins0 (R, N); energy0 (R,); uniforms (T, R, 4)
-    [site, accept, roulette, uniformize] in [0,1); temps (T, R) per-replica
-    temperatures; pwl_table optional (S+1, 3) LUT from ``core.pwl.pwl_table``
-    (None = exact sigmoid). ``gather``: "dynamic" (default, O(N)/step row
-    fetch) or "onehot" (opt-in O(N²)/step MXU contraction for tiny N).
-    Returns (fields, spins, energy, best_energy, best_spins, num_flips); see
-    ``ref.mcmc_sweep`` for the exact-semantics oracle.
+    couplings: (N, N) f32 with ``coupling="dense"``, or a packed
+    ``core.bitplane.BitPlanes`` of an integer J with ``coupling="bitplane"``
+    (2·B bits per coupler in VMEM instead of 32 — the N≈2000 → N≈11k wall
+    move, DESIGN.md §Backends). fields0/spins0 (R, N); energy0 (R,);
+    uniforms (T, R, 4) [site, accept, roulette, uniformize] in [0,1); temps
+    (T, R) per-replica temperatures; pwl_table optional (S+1, 3) LUT from
+    ``core.pwl.pwl_table`` (None = exact sigmoid). ``gather``: "dynamic"
+    (default, O(N)/step row fetch) or "onehot" (opt-in O(N²)/step MXU
+    contraction for tiny N; dense-only). ``block_r`` clamps to the largest
+    divisor of R. Returns (fields, spins, energy, best_energy, best_spins,
+    num_flips); see ``ref.mcmc_sweep`` for the exact-semantics oracle.
     """
     r, n = fields0.shape
     t = uniforms.shape[0]
-    assert couplings.shape == (n, n) and spins0.shape == (r, n)
+    assert spins0.shape == (r, n)
     assert uniforms.shape == (t, r, 4) and temps.shape == (t, r)
     if gather not in ("dynamic", "onehot"):
         raise ValueError(f"gather must be 'dynamic' or 'onehot', got {gather!r}")
-    br = min(block_r, r)
-    if r % br:
-        raise ValueError(f"R={r} not divisible by block_r={br}")
+    if coupling not in ("dense", "bitplane"):
+        raise ValueError(
+            f"coupling must be 'dense' or 'bitplane', got {coupling!r}")
+    if coupling == "bitplane":
+        if not isinstance(couplings, BitPlanes):
+            raise TypeError("coupling='bitplane' needs a BitPlanes couplings "
+                            f"argument, got {type(couplings).__name__}")
+        if couplings.num_spins != n:
+            raise ValueError(f"BitPlanes N={couplings.num_spins} != state N={n}")
+        if gather == "onehot":
+            raise ValueError("gather='onehot' requires a dense J (the MXU "
+                             "contraction cannot consume packed planes)")
+    else:
+        assert couplings.shape == (n, n)
+    br = common.fit_block(r, block_r)
     lane = common.default_lane(n) if lane is None else lane
     if n % lane:
         raise ValueError(f"N={n} not divisible by lane={lane}")
     grid = (r // br,)
-    in_specs = [
-        pl.BlockSpec((n, n), lambda i: (0, 0)),        # J broadcast
+    if coupling == "bitplane":
+        bp, _, w = couplings.pos.shape
+        in_specs = [
+            pl.BlockSpec((bp, n, w), lambda i: (0, 0, 0)),  # pos planes bcast
+            pl.BlockSpec((bp, n, w), lambda i: (0, 0, 0)),  # neg planes bcast
+        ]
+        j_args = [couplings.pos, couplings.neg]
+    else:
+        in_specs = [pl.BlockSpec((n, n), lambda i: (0, 0))]  # J broadcast
+        j_args = [couplings]
+    in_specs += [
         pl.BlockSpec((br, n), lambda i: (i, 0)),       # u0
         pl.BlockSpec((br, n), lambda i: (i, 0)),       # s0
         pl.BlockSpec((br, 1), lambda i: (i, 0)),       # e0
         pl.BlockSpec((t, br, 4), lambda i: (0, i, 0)),  # uniforms
         pl.BlockSpec((t, br), lambda i: (0, i)),       # temps
     ]
-    args = [couplings, fields0, spins0, energy0.reshape(r, 1), uniforms, temps]
+    args = j_args + [fields0, spins0, energy0.reshape(r, 1), uniforms, temps]
     if pwl_table is not None:
         in_specs.append(pl.BlockSpec(pwl_table.shape, lambda i: (0, 0)))
         args.append(pwl_table)
     outs = pl.pallas_call(
         functools.partial(_kernel, num_steps=t, mode=mode,
                           uniformized=uniformized, gather=gather, lane=lane,
-                          has_pwl=pwl_table is not None),
+                          has_pwl=pwl_table is not None, coupling=coupling),
         grid=grid,
         in_specs=in_specs,
         out_specs=[

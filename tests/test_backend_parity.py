@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import ising, rng
+from repro.core import bitplane, ising, rng
 from repro.core.pwl import pwl_table
 from repro.core.schedules import geometric
 from repro.core.solver import SolverConfig, solve
@@ -55,10 +55,13 @@ VARIANTS = {
 @pytest.mark.parametrize("mode", ["rsa", "rwa"])
 @pytest.mark.parametrize("variant", sorted(VARIANTS))
 def test_fused_matches_oracle_exactly(mode, variant):
+    # Trajectory-exactness is size-independent, so the default tier runs a
+    # small instance; the full-size sweep lives in
+    # test_fused_matches_oracle_exactly_large behind -m slow.
     opts = VARIANTS[variant]
     if mode == "rsa" and variant in ("degenerate", "uniformized"):
         pytest.skip("RWA-only variant")
-    r, n, t = 8, 96, 64
+    r, n, t = 8, 64, 48
     if opts.get("degenerate"):
         # All-ferromagnetic at the all-up state, T=0 ⇒ every ΔE > 0 ⇒ W = 0.
         J = np.ones((n, n), np.float32) - np.eye(n, dtype=np.float32)
@@ -82,6 +85,103 @@ def test_fused_matches_oracle_exactly(mode, variant):
         np.testing.assert_array_equal(np.asarray(a, np.float32),
                                       np.asarray(b, np.float32),
                                       err_msg=f"{mode}/{variant}:{name}")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["rsa", "rwa"])
+def test_fused_matches_oracle_exactly_large(mode):
+    """Full-size parity sweep (N=512, multi-block R) — slow tier."""
+    r, n, t = 16, 512, 64
+    args = _inputs(7, r, n, t)
+    got = sweep_kernel(*args, mode=mode, block_r=8, interpret=True)
+    want = ref.mcmc_sweep(*args, mode=mode)
+    for name, a, b in zip(NAMES, got, want):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32),
+                                      err_msg=f"{mode}:{name}")
+
+
+BITPLANE_VARIANTS = {
+    "warm": dict(),
+    "zero_t": dict(zero_t=True),
+    "uniformized": dict(uniformized=True),
+    "pwl": dict(pwl=True),
+}
+
+
+@pytest.mark.parametrize("mode", ["rsa", "rwa"])
+@pytest.mark.parametrize("variant", sorted(BITPLANE_VARIANTS))
+def test_fused_bitplane_matches_oracle_exactly(mode, variant):
+    """The packed bit-plane coupling path (kernel `coupling="bitplane"`) is
+    trajectory-exact against the jnp oracle fed the same planes, and the
+    planes-fed oracle is trajectory-exact against the dense-J oracle — so
+    the packed store changes memory layout only, never the chain."""
+    opts = BITPLANE_VARIANTS[variant]
+    if mode == "rsa" and variant == "uniformized":
+        pytest.skip("RWA-only variant")
+    r, n, t, b = 8, 96, 48, 3
+    g = np.random.default_rng(13)
+    J = np.clip(np.rint(g.normal(size=(n, n)) * 2.0), -7, 7)
+    J = np.triu(J, 1)
+    J = J + J.T
+    planes = bitplane.encode_couplings(J, b)
+    s0 = np.where(g.random((r, n)) < 0.5, 1.0, -1.0).astype(np.float32)
+    u0 = (s0 @ J.T).astype(np.float32)
+    e0 = (-0.5 * np.einsum("ri,ri->r", s0, s0 @ J.T)).astype(np.float32)
+    unif = g.random((t, r, 4)).astype(np.float32)
+    temps = (np.zeros((t, r), np.float32) if opts.get("zero_t") else
+             np.broadcast_to(np.geomspace(2.5, 0.05, t).astype(np.float32)[:, None],
+                             (t, r)).copy())
+    state = tuple(map(jnp.asarray, (u0, s0, e0, unif, temps)))
+    tbl = pwl_table() if opts.get("pwl") else None
+    uniformized = bool(opts.get("uniformized"))
+    got = sweep_kernel(planes, *state, tbl, mode=mode, uniformized=uniformized,
+                       coupling="bitplane", block_r=4, interpret=True)
+    want = ref.mcmc_sweep(planes, *state, tbl, mode=mode,
+                          uniformized=uniformized)
+    want_dense = ref.mcmc_sweep(jnp.asarray(J, jnp.float32), *state, tbl,
+                                mode=mode, uniformized=uniformized)
+    for name, a, b_, c in zip(NAMES, got, want, want_dense):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b_, np.float32),
+                                      err_msg=f"{mode}/{variant}:{name} kernel-vs-oracle")
+        np.testing.assert_array_equal(np.asarray(b_, np.float32),
+                                      np.asarray(c, np.float32),
+                                      err_msg=f"{mode}/{variant}:{name} planes-vs-dense")
+
+
+def test_sweep_bitplane_rejects_mismatches():
+    r, n, t = 4, 64, 8
+    g = np.random.default_rng(3)
+    J = np.rint(np.triu(g.normal(size=(n, n)), 1))
+    J = J + J.T
+    planes = bitplane.encode_couplings(J, 4)
+    s0 = jnp.ones((r, n), jnp.float32)
+    u0 = jnp.asarray(s0 @ jnp.asarray(J, jnp.float32).T)
+    e0 = jnp.zeros((r,), jnp.float32)
+    unif = jnp.zeros((t, r, 4), jnp.float32)
+    temps = jnp.ones((t, r), jnp.float32)
+    with pytest.raises(ValueError, match="onehot"):
+        sweep_kernel(planes, u0, s0, e0, unif, temps, coupling="bitplane",
+                     gather="onehot", interpret=True)
+    with pytest.raises(TypeError, match="BitPlanes"):
+        sweep_kernel(jnp.asarray(J, jnp.float32), u0, s0, e0, unif, temps,
+                     coupling="bitplane", interpret=True)
+    with pytest.raises(ValueError, match="coupling"):
+        sweep_kernel(planes, u0, s0, e0, unif, temps, coupling="packed",
+                     interpret=True)
+
+
+def test_sweep_block_r_clamps_to_divisor():
+    """R=12 with block_r=8 must fall back to the largest divisor (6), not
+    raise — and the clamped run stays trajectory-exact vs the oracle."""
+    r, n, t = 12, 64, 16
+    args = _inputs(21, r, n, t)
+    got = sweep_kernel(*args, mode="rwa", block_r=8, interpret=True)
+    want = ref.mcmc_sweep(*args, mode="rwa")
+    for name, a, b in zip(NAMES, got, want):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32), err_msg=name)
 
 
 def test_site_index_derivation_is_canonical():
@@ -113,9 +213,9 @@ def test_sweep_salt_is_disjoint():
 def test_solve_fused_backend_quality_and_trace(mode, uniformized, use_pwl):
     prob = ising.IsingProblem.create(J=_sym(5, 12, integer=True, scale=2.0))
     e_star, _, _ = ising.brute_force_ground_state(prob)
-    cfg = SolverConfig(num_steps=2048, schedule=geometric(6.0, 0.02, 2048),
+    cfg = SolverConfig(num_steps=1024, schedule=geometric(6.0, 0.02, 1024),
                        mode=mode, uniformized=uniformized, use_pwl=use_pwl,
-                       num_replicas=8, trace_every=256)
+                       num_replicas=8, trace_every=128)
     fused = solve(prob, 3, cfg, backend="fused")
     reference = solve(prob, 3, cfg, backend="reference")
     # Identical trace contract across backends (shape, dtype, cadence).
@@ -133,7 +233,7 @@ def test_solve_fused_backend_quality_and_trace(mode, uniformized, use_pwl):
 
 def test_solve_fused_trace_disabled_matches_reference_contract():
     prob = ising.IsingProblem.create(J=_sym(6, 10, integer=True, scale=2.0))
-    cfg = SolverConfig(num_steps=512, schedule=geometric(4.0, 0.05, 512),
+    cfg = SolverConfig(num_steps=128, schedule=geometric(4.0, 0.05, 128),
                        mode="rwa", num_replicas=4, trace_every=0)
     fused = solve(prob, 0, cfg, backend="fused")
     reference = solve(prob, 0, cfg, backend="reference")
@@ -141,7 +241,7 @@ def test_solve_fused_trace_disabled_matches_reference_contract():
     assert fused.trace_energy.dtype == reference.trace_energy.dtype == jnp.float32
 
 
-@pytest.mark.parametrize("num_steps", [100, 600])
+@pytest.mark.parametrize("num_steps", [100, 360])
 def test_solve_fused_runs_exactly_num_steps(num_steps):
     """Untraced fused runs must not round num_steps to a chunk multiple —
     RWA at T>0 is rejection-free, so num_flips counts executed steps."""
@@ -164,7 +264,7 @@ def test_solve_rejects_unknown_backend():
 def test_tempering_fused_backend():
     prob = ising.IsingProblem.create(J=_sym(1, 12, integer=True, scale=2.0))
     e_star, _, _ = ising.brute_force_ground_state(prob)
-    cfg = TemperingConfig(num_steps=4000, t_min=0.05, t_max=8.0,
+    cfg = TemperingConfig(num_steps=1600, t_min=0.05, t_max=8.0,
                           num_replicas=8, swap_every=10, backend="fused")
     res = solve_tempering(prob, 0, cfg)
     assert float(jnp.min(res.best_energy)) == pytest.approx(e_star, abs=1e-2)
@@ -183,7 +283,7 @@ def test_distributed_fused_backend_single_device():
 
     mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
     prob = ising.IsingProblem.create(J=_sym(9, 32, integer=True, scale=1.5))
-    base = SolverConfig(num_steps=512, schedule=geometric(6.0, 0.05, 512),
+    base = SolverConfig(num_steps=256, schedule=geometric(6.0, 0.05, 256),
                         mode="rwa", num_replicas=1, trace_every=64)
     cfg = DistSolverConfig(base=base, replicas_per_device=4,
                            exchange_every=4, backend="fused")
@@ -194,5 +294,107 @@ def test_distributed_fused_backend_single_device():
     recomputed = np.asarray(ising.energy(prob, r1.best_spins))
     np.testing.assert_allclose(np.asarray(r1.best_energy), recomputed, atol=1e-2)
     trace = np.asarray(r1.trace_energy)
-    assert trace.shape == (8, 4) and np.isfinite(trace).all()
+    assert trace.shape == (4, 4) and np.isfinite(trace).all()
     assert (np.diff(trace, axis=0) <= 1e-6).all()
+
+
+def test_solve_fused_bitplane_format_matches_dense_exactly():
+    """`coupling_format="bitplane"` changes the J store, not the chain: the
+    fused driver returns bit-identical results for an integer-J problem
+    (plane-decoded rows and the popcount u₀ init are exact in f32)."""
+    prob = ising.IsingProblem.create(J=_sym(5, 12, integer=True, scale=2.0))
+    cfg = SolverConfig(num_steps=1024, schedule=geometric(6.0, 0.02, 1024),
+                       mode="rwa", num_replicas=8, trace_every=128)
+    dense = solve(prob, 3, dataclasses.replace(cfg, coupling_format="dense"),
+                  backend="fused")
+    packed = solve(prob, 3, dataclasses.replace(cfg, coupling_format="bitplane"),
+                   backend="fused")
+    for name in ("best_energy", "best_spins", "final_energy", "num_flips",
+                 "trace_energy"):
+        np.testing.assert_array_equal(np.asarray(getattr(dense, name)),
+                                      np.asarray(getattr(packed, name)),
+                                      err_msg=name)
+
+
+def test_coupling_format_auto_resolution():
+    """"auto" packs only past the f32 VMEM crossover and only for integral J;
+    explicit "bitplane" under a jax trace (no host J to encode) raises."""
+    from repro.kernels import ops
+
+    J_int = np.asarray(_sym(8, 16, integer=True, scale=2.0))
+    J_frac = J_int + np.triu(np.full((16, 16), 0.5), 1) + np.tril(np.full((16, 16), 0.5), -1)
+    assert ops.resolve_coupling_format("auto", J_int, 16) == "dense"
+    assert ops.resolve_coupling_format(
+        "auto", J_int, ops.DENSE_COUPLING_MAX_N + 1) == "bitplane"
+    assert ops.resolve_coupling_format(
+        "auto", J_frac, ops.DENSE_COUPLING_MAX_N + 1) == "dense"
+    # Integral but huge magnitudes: 2·B ≥ 32 bits/coupler would not shrink J,
+    # so "auto" must stay dense rather than pack a bigger-than-f32 store.
+    assert ops.resolve_coupling_format(
+        "auto", J_int * np.float32(2.0 ** 15),
+        ops.DENSE_COUPLING_MAX_N + 1) == "dense"
+    assert ops.resolve_coupling_format("dense", J_int, 4096) == "dense"
+    with pytest.raises(ValueError, match="coupling"):
+        ops.resolve_coupling_format("packed", J_int, 16)
+
+    def traced(J):
+        return ops.resolve_coupling_format("bitplane", J, 4096)
+
+    with pytest.raises(ValueError, match="concrete"):
+        jax.make_jaxpr(traced)(jnp.asarray(J_int))
+    # "auto" under trace quietly stays dense (never inspects values).
+    assert jax.make_jaxpr(
+        lambda J: jnp.zeros(()) if ops.resolve_coupling_format(
+            "auto", J, 4096) == "dense" else jnp.ones(()))(
+        jnp.asarray(J_int)) is not None
+
+
+def test_fused_anneal_accepts_prepacked_planes_and_rejects_onehot():
+    """Callers may pass ready BitPlanes as `coupling` (skips the O(N²·B)
+    re-encode — the benchmark path), and an explicit onehot gather on the
+    packed store surfaces the kernel's dense-only error instead of being
+    silently overridden."""
+    from repro.kernels import ops
+
+    prob = ising.IsingProblem.create(J=_sym(5, 12, integer=True, scale=2.0))
+    cfg = SolverConfig(num_steps=256, schedule=geometric(6.0, 0.05, 256),
+                       mode="rwa", num_replicas=4)
+    planes = ops.encode_for_sweep(prob.couplings)
+    via_planes = ops.fused_anneal(prob, 3, cfg, coupling=planes)
+    via_format = ops.fused_anneal(prob, 3, cfg, coupling="bitplane")
+    np.testing.assert_array_equal(np.asarray(via_planes.best_energy),
+                                  np.asarray(via_format.best_energy))
+    with pytest.raises(ValueError, match="onehot"):
+        ops.fused_anneal(prob, 3, cfg, coupling="bitplane", gather="onehot")
+
+
+def test_tempering_fused_bitplane_matches_dense():
+    prob = ising.IsingProblem.create(J=_sym(1, 12, integer=True, scale=2.0))
+    base = dict(num_steps=1200, t_min=0.05, t_max=8.0, num_replicas=8,
+                swap_every=10, backend="fused")
+    dense = solve_tempering(prob, 0, TemperingConfig(**base, coupling_format="dense"))
+    packed = solve_tempering(prob, 0, TemperingConfig(**base, coupling_format="bitplane"))
+    np.testing.assert_array_equal(np.asarray(dense.best_energy),
+                                  np.asarray(packed.best_energy))
+    np.testing.assert_array_equal(np.asarray(dense.num_flips),
+                                  np.asarray(packed.num_flips))
+
+
+def test_distributed_fused_bitplane_matches_dense():
+    from jax.sharding import Mesh
+    from repro.distributed.solver_dist import DistSolverConfig, solve_distributed
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    prob = ising.IsingProblem.create(J=_sym(9, 32, integer=True, scale=1.5))
+    base = SolverConfig(num_steps=256, schedule=geometric(6.0, 0.05, 256),
+                        mode="rwa", num_replicas=1, trace_every=64)
+    results = {}
+    for fmt in ("dense", "bitplane"):
+        cfg = DistSolverConfig(
+            base=dataclasses.replace(base, coupling_format=fmt),
+            replicas_per_device=4, exchange_every=4, backend="fused")
+        results[fmt] = solve_distributed(prob, 7, cfg, mesh)
+    np.testing.assert_array_equal(np.asarray(results["dense"].best_energy),
+                                  np.asarray(results["bitplane"].best_energy))
+    np.testing.assert_array_equal(np.asarray(results["dense"].trace_energy),
+                                  np.asarray(results["bitplane"].trace_energy))

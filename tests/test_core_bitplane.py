@@ -30,6 +30,38 @@ def test_encode_rejects_overflow():
         bitplane.encode_couplings(J * 0.3, 8)
 
 
+def test_encode_rejects_asymmetric():
+    """BitPlanes rows double as columns in the incremental update, so an
+    asymmetric J must be refused at encode time — not silently produce wrong
+    u updates downstream."""
+    J = np.zeros((4, 4))
+    J[0, 1] = 2  # J[1, 0] left at 0
+    with pytest.raises(ValueError, match="symmetric"):
+        bitplane.encode_couplings(J, 3)
+    with pytest.raises(ValueError, match="square"):
+        bitplane.encode_couplings(np.zeros((3, 4)), 3)
+
+
+def test_encode_warns_on_nonzero_diagonal():
+    J = np.eye(4) * 2
+    with pytest.warns(UserWarning, match="diagonal"):
+        planes = bitplane.encode_couplings(J, 3)
+    np.testing.assert_array_equal(bitplane.decode_couplings(planes), J)
+
+
+@pytest.mark.parametrize("dtype", [np.int8, np.int32, np.float32, np.float64,
+                                   jnp.bfloat16])
+def test_pack_spins_dtype_roundtrip(dtype):
+    """The `spins > 0` bit derivation is exact for every spin dtype in use
+    (float floor-division semantics must never leak into the packing)."""
+    g = np.random.default_rng(7)
+    s = np.where(g.random(70) < 0.5, 1, -1)
+    packed = np.asarray(bitplane.pack_spins(jnp.asarray(s).astype(dtype)))
+    assert packed.dtype == np.uint32 and packed.shape == (3,)
+    bits = (packed[np.arange(70) // 32] >> (np.arange(70) % 32)) & 1
+    np.testing.assert_array_equal(bits, (s + 1) // 2)
+
+
 def test_pack_spins_bits():
     s = np.array([1, -1, 1, 1] + [-1] * 60 + [1, 1], np.int8)  # 66 spins -> 3 words
     packed = np.asarray(bitplane.pack_spins(jnp.asarray(s)))

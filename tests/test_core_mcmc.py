@@ -65,6 +65,7 @@ def test_rsa_converges_to_gibbs(temperature):
     assert tv < 0.05, f"total variation {tv:.3f} too large"
 
 
+@pytest.mark.slow
 def test_uniformized_rwa_converges_to_gibbs():
     """Uniformized roulette-wheel chain leaves π_T invariant (§IV-B3c)."""
     problem = _tiny_problem(seed=2, n=4)
@@ -75,6 +76,7 @@ def test_uniformized_rwa_converges_to_gibbs():
     assert tv < 0.06, f"total variation {tv:.3f} too large"
 
 
+@pytest.mark.slow
 def test_rwa_is_rejection_free_when_weights_positive():
     """Plain roulette-wheel flips exactly one spin per step (W > 0 at T > 0)."""
     problem = _tiny_problem(seed=3, n=6)

@@ -38,6 +38,7 @@ def test_sharding_rules_spec_dedup_and_mesh_filter():
     assert spec2 == P("data")
 
 
+@pytest.mark.slow
 def test_distributed_solver_matches_quality_and_is_deterministic():
     out = run_with_devices("""
         import jax, numpy as np
@@ -69,6 +70,7 @@ def test_distributed_solver_matches_quality_and_is_deterministic():
     assert best < 0  # found a negative-energy (positive-cut) state
 
 
+@pytest.mark.slow
 def test_compressed_training_matches_uncompressed_loss():
     out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
@@ -143,6 +145,7 @@ def test_pipeline_matches_sequential():
     """, n_devices=4)
 
 
+@pytest.mark.slow
 def test_sharded_model_forward_matches_single_device():
     """GSPMD-distributed forward == single-device forward (same params/tokens)."""
     out = run_with_devices("""
@@ -171,6 +174,7 @@ def test_sharded_model_forward_matches_single_device():
     assert "ERR" in out
 
 
+@pytest.mark.slow
 def test_decode_with_seq_sharded_cache_matches_unsharded():
     """Flash-decoding analogue: KV cache length sharded over `model`;
     distributed softmax combine must equal single-device attention."""

@@ -7,6 +7,8 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -35,6 +37,7 @@ def test_mesh_constructors():
     assert "MESH OK" in out
 
 
+@pytest.mark.slow
 def test_abstract_lowering_all_kinds():
     out = _run("""
         import dataclasses, jax
@@ -68,6 +71,7 @@ def test_abstract_lowering_all_kinds():
     assert "LOWERING OK" in out
 
 
+@pytest.mark.slow
 def test_moe_and_hybrid_cells_lower():
     out = _run("""
         import jax

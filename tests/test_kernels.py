@@ -25,9 +25,9 @@ def _sym(rng, n, dtype=np.float32, integer=False, scale=1.0):
 
 @pytest.mark.parametrize("r,n,br,bn,bk", [
     (8, 256, 8, 128, 128),
-    (16, 512, 8, 256, 512),
+    pytest.param(16, 512, 8, 256, 512, marks=pytest.mark.slow),
     (4, 128, 4, 128, 64),
-    (32, 384, 16, 128, 128),
+    pytest.param(32, 384, 16, 128, 128, marks=pytest.mark.slow),
 ])
 @pytest.mark.parametrize("sdtype,jdtype", [
     (jnp.int8, jnp.float32),
@@ -55,7 +55,11 @@ def test_local_field_kernel_rejects_bad_blocks():
                   jnp.zeros(128), block_r=4, interpret=True)
 
 
-@pytest.mark.parametrize("n,b,r", [(64, 1, 4), (128, 2, 8), (256, 8, 8), (96, 4, 16)])
+@pytest.mark.parametrize("n,b,r", [
+    (64, 1, 4), (128, 2, 8),
+    pytest.param(256, 8, 8, marks=pytest.mark.slow),
+    pytest.param(96, 4, 16, marks=pytest.mark.slow),
+])
 def test_bitplane_kernel_matches_oracle_and_dense(n, b, r):
     rng = np.random.default_rng(n + b)
     limit = (1 << b) - 1
@@ -83,7 +87,11 @@ def _sweep_inputs(rng, J, r, n, t):
 
 
 @pytest.mark.parametrize("mode", ["rsa", "rwa"])
-@pytest.mark.parametrize("r,n,t,br", [(8, 128, 64, 8), (16, 64, 128, 4), (4, 256, 32, 4)])
+@pytest.mark.parametrize("r,n,t,br", [
+    (8, 128, 64, 8),
+    pytest.param(16, 64, 128, 4, marks=pytest.mark.slow),
+    pytest.param(4, 256, 32, 4, marks=pytest.mark.slow),
+])
 def test_sweep_kernel_matches_oracle(mode, r, n, t, br):
     rng = np.random.default_rng(r + n + t)
     args = _sweep_inputs(rng, _sym(rng, n), r, n, t)
@@ -98,7 +106,7 @@ def test_sweep_kernel_matches_oracle(mode, r, n, t, br):
 def test_sweep_onehot_gather_matches_dynamic():
     """The opt-in MXU gather heuristic is a pure perf choice — same trajectory."""
     rng = np.random.default_rng(11)
-    r, n, t = 8, 64, 48
+    r, n, t = 8, 64, 32
     args = _sweep_inputs(rng, _sym(rng, n), r, n, t)
     got_dyn = sweep_kernel(*args, mode="rwa", block_r=4, interpret=True)
     got_oh = sweep_kernel(*args, mode="rwa", block_r=4, gather="onehot",
@@ -127,6 +135,39 @@ def test_sweep_kernel_step_has_no_quadratic_contraction():
     assert "dot_general" in trace("onehot")
 
 
+def test_sweep_bitplane_step_has_no_quadratic_contraction():
+    """The bit-plane coupling path keeps the O(N)/step contract: its row
+    decode is shift-and-mask bit expansion, so the default step jaxpr must
+    contain no dot_general either."""
+    rng = np.random.default_rng(0)
+    r, n, t = 4, 128, 8
+    J = _sym(rng, n, integer=True, scale=2.0)
+    planes = bitplane.encode_couplings(np.clip(J, -7, 7), 3)
+    _, u0, s0, e0, unif, temps = _sweep_inputs(rng, np.clip(J, -7, 7), r, n, t)
+    trace = str(jax.make_jaxpr(
+        lambda *a: sweep_kernel(planes, *a, mode="rwa", block_r=4,
+                                coupling="bitplane", interpret=True))(
+        u0, s0, e0, unif, temps))
+    assert "dot_general" not in trace
+
+
+def test_bitplane_field_kernel_clamps_blocks():
+    """Non-dividing block_r/block_n fall back to the largest divisors
+    (R=12/block_r=8 → 6; N=96/block_n=64 → 48) instead of raising."""
+    rng = np.random.default_rng(4)
+    n, b, r = 96, 2, 12
+    J = rng.integers(-3, 4, size=(n, n))
+    J = np.triu(J, 1)
+    J = J + J.T
+    planes = bitplane.encode_couplings(J, b)
+    s = np.where(rng.random((r, n)) < 0.5, 1, -1).astype(np.int8)
+    words = bitplane.pack_spins(jnp.asarray(s))
+    got = bp_kernel(planes.pos, planes.neg, words, block_r=8, block_n=64,
+                    interpret=True)
+    want = ref.bitplane_field_init(planes.pos, planes.neg, words, n)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_sweep_handles_zero_temperature_degenerate():
     """T=0 at a local optimum ⇒ W=0 ⇒ fallback path must not flip or NaN."""
     n, r, t = 32, 4, 16
@@ -151,7 +192,7 @@ def test_fused_anneal_solves_and_matches_reference_quality():
     J = _sym(rng, n, integer=True, scale=2.0)
     prob = ising.IsingProblem.create(J=J)
     e_star, _, _ = ising.brute_force_ground_state(prob)
-    cfg = SolverConfig(num_steps=2048, schedule=geometric(6.0, 0.02, 2048),
+    cfg = SolverConfig(num_steps=1024, schedule=geometric(6.0, 0.02, 1024),
                        mode="rwa", num_replicas=8)
     fused = ops.fused_anneal(prob, 3, cfg, chunk_steps=256, interpret=True)
     assert float(jnp.min(fused.best_energy)) == pytest.approx(e_star, abs=1e-2)

@@ -45,6 +45,7 @@ def test_benchmark_instance_catalogue_matches_table1():
     assert K2000.target_cut == 33000.0
 
 
+@pytest.mark.slow
 def test_lm_train_then_serve_roundtrip(tmp_path):
     """Framework pipeline: train a smoke model with checkpointing, restore,
     then decode from the trained weights."""

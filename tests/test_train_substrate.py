@@ -98,6 +98,7 @@ def test_encoder_data_has_masked_labels():
 # Train step & loop
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_microbatching_matches_full_batch_grads():
     cfg = _tiny_cfg()
     params = init_params(model_specs(cfg), jax.random.key(0))
@@ -129,6 +130,7 @@ def test_train_loop_loss_decreases(tmp_path):
     assert last < first, f"loss did not decrease: {first} -> {last}"
 
 
+@pytest.mark.slow
 def test_checkpoint_restart_resumes_identically(tmp_path):
     """Simulated preemption: crash at step 12, resume, final state must equal
     an uninterrupted run bit-for-bit (deterministic data + stateless RNG)."""
