@@ -7,16 +7,19 @@ DESIGN.md §Backends from its VMEM-resident design: per-step HBM traffic → 0
 for N ≤ ~2800, leaving the O(N) VPU work after the O(N²)→O(N) gather fix).
 
 Emits ``BENCH_solver_perf.json`` at the repo root — µs/step for both
-backends at N ∈ {512, 2000} × {rsa, rwa}, plus the N=4096 packed bit-plane
-point the dense f32 path cannot hold in VMEM at all (DESIGN.md §Backends) —
-so subsequent PRs have a perf trajectory to regress against. The JSON keeps
-a ``history`` list (one entry per recorded run, stamped via the
-``--run-id`` CLI arg of ``benchmarks.run`` — never from an in-process
-clock) alongside the latest ``results``, so the trajectory accrues across
-PRs instead of being overwritten wholesale.
+backends at N ∈ {512, 2000} × {rsa, rwa}, the N=4096 packed bit-plane point
+the dense f32 path cannot hold in VMEM at all, and the N=16384 HBM-streamed
+point past even the packed-VMEM wall (DESIGN.md §Backends) — so subsequent
+PRs have a perf trajectory to regress against. The JSON keeps a ``history``
+list (one entry per recorded run, stamped via the ``--run-id`` CLI arg of
+``benchmarks.run`` — never from an in-process clock) alongside the latest
+``results``, so the trajectory accrues across PRs instead of being
+overwritten wholesale. ``benchmarks.run --check`` validates the file's
+schema and gates fused-vs-baseline regressions.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import platform
@@ -37,6 +40,16 @@ REPLICAS = 8
 #: 4× the 16 MiB budget — while the packed ±1-coupling planes need N²/4 B.
 BITPLANE_N = 4096
 BITPLANE_STEPS = 96
+#: The HBM-streamed-only size: at N=16384 even the packed B=1 planes are
+#: 64 MiB — 4× VMEM — so neither the dense f32 J (1 GiB) nor the VMEM
+#: bit-plane store can run; only ``coupling="bitplane_hbm"`` fits (planes in
+#: HBM, selected rows double-buffered through a 2-slot VMEM scratch).
+HBM_N = 16384
+HBM_STEPS = 48
+#: Fewer replicas for the streamed point: each interpret-mode step decodes an
+#: O(B·N) row per replica, and the point exists for the per-step trajectory
+#: anchor + J-bytes accounting, not replica statistics.
+HBM_REPLICAS = 4
 BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                           "BENCH_solver_perf.json")
 
@@ -60,6 +73,7 @@ def run(emit: CsvEmitter) -> dict:
             emit.add(f"solver/N{n}/{mode}/fused_interpret", us, f"best_E={best:.0f}")
             out[(n, mode, "fused")] = us
     out["bitplane"] = run_bitplane_point(emit)
+    out["bitplane_hbm"] = run_bitplane_hbm_point(emit)
     return out
 
 
@@ -102,6 +116,53 @@ def run_bitplane_point(emit: CsvEmitter) -> dict:
     }
 
 
+def run_bitplane_hbm_point(emit: CsvEmitter) -> dict:
+    """N=16384 fused sweep streaming the packed planes from HBM (§IV-B1 +
+    the reuse-aware near-memory streaming axis of the related all-digital
+    machines).
+
+    This size exists *only* on the HBM-streamed path: the dense f32 J is
+    1 GiB and even the B=1 bit-plane store is 64 MiB against 16 MiB of VMEM,
+    so neither VMEM-resident tier can run — the entry records the J-bytes
+    accounting for all three tiers plus the µs/step anchor for the
+    DMA-stream + decode cost (interpret mode; relative signal).
+    """
+    from repro.kernels.ops import encode_for_sweep
+
+    n = HBM_N
+    inst = complete_bipolar(n, seed=n)
+    prob = maxcut_to_ising(inst)
+    planes = encode_for_sweep(prob.couplings, fmt="bitplane_hbm")
+    dense_bytes = n * n * 4
+    # nbytes of an unpadded VMEM store (the tier the wall excludes).
+    vmem_plane_bytes = 2 * planes.num_planes * n * (-(-n // 32)) * 4
+    cfg = dataclasses.replace(
+        default_solver(n, HBM_STEPS, mode="rsa", num_replicas=HBM_REPLICAS),
+        coupling_format="bitplane_hbm")
+    # Pre-packed planes keep the timed region the streamed sweep itself.
+    res, secs = time_call(fused_anneal, prob, 0, cfg, coupling=planes,
+                          repeats=2)
+    us = secs / HBM_STEPS * 1e6
+    best = float(np.min(np.asarray(res.best_energy)))
+    emit.add(f"solver/N{n}/rsa/fused_bitplane_hbm", us,
+             f"best_E={best:.0f};J_bytes={planes.nbytes};"
+             f"dense_J_bytes={dense_bytes};vmem_plane_bytes={vmem_plane_bytes}")
+    return {
+        "n": n,
+        "mode": "rsa",
+        "num_planes": planes.num_planes,
+        "num_replicas": HBM_REPLICAS,
+        "bitplane_hbm_us_per_step": us,
+        "j_bytes_hbm_planes": planes.nbytes,
+        "j_bytes_vmem_planes": vmem_plane_bytes,
+        "j_bytes_dense_f32": dense_bytes,
+        "dense_path": "cannot allocate: 1 GiB f32 J vs 16 MiB VMEM",
+        "bitplane_vmem_path": "cannot allocate: 64 MiB B=1 planes vs 16 MiB VMEM",
+        "hbm_stream": "planes in HBM; (B,1,W) row tiles double-buffered "
+                      "through VMEM scratch via make_async_copy",
+    }
+
+
 def write_bench_json(out: dict, run_id: str | None = None) -> None:
     """Persist the backend perf table (the cross-PR regression anchor).
 
@@ -125,6 +186,8 @@ def write_bench_json(out: dict, run_id: str | None = None) -> None:
             }
     if out.get("bitplane"):
         results[f"N{BITPLANE_N}"] = {"rsa": out["bitplane"]}
+    if out.get("bitplane_hbm"):
+        results[f"N{HBM_N}"] = {"rsa": out["bitplane_hbm"]}
     history = []
     if os.path.exists(BENCH_JSON):
         try:
@@ -136,8 +199,14 @@ def write_bench_json(out: dict, run_id: str | None = None) -> None:
                 history = [{"run_id": "pre-history", "results": prev["results"]}]
         except (OSError, ValueError):
             history = []
+    # Re-recording a stamp (or another unstamped scratch run) replaces the
+    # prior entry instead of appending a duplicate — ``--check`` enforces
+    # unique stamps, so a legal rerun must never corrupt the history.
+    stamp = run_id or "unstamped"
+    history = [h for h in history
+               if not (isinstance(h, dict) and h.get("run_id") == stamp)]
     history.append({
-        "run_id": run_id or "unstamped",
+        "run_id": stamp,
         "host": platform.node(),
         "jax_backend": jax.default_backend(),
         "results": results,

@@ -4,23 +4,127 @@
 # (e.g. ``python -m benchmarks.run --run-id pr2-2026-07-26``). The stamp is a
 # CLI argument by design — no in-process clock read — so benchmark output is
 # a pure function of code + inputs and reruns stay byte-reproducible.
+#
+# ``--suite <name>`` runs a single suite (e.g. ``--suite solver_perf`` to
+# refresh the perf anchor without the full table sweep).
+#
+# ``--check`` validates BENCH_solver_perf.json instead of running anything:
+# history schema (unique run-id stamps, required fields, latest history entry
+# mirroring the top-level results) plus the perf gate — in the latest run the
+# fused engine must not be more than ``CHECK_MAX_FUSED_REGRESSION``× slower
+# than the paper-faithful baseline at any matched (N, mode). The gate is
+# within-run by design: both engines are timed in the same session, so the
+# ratio is robust to machine-load noise that makes cross-run wall-clock
+# comparisons meaningless (the recorded history shows ~3× swings between
+# otherwise identical runs). Exits non-zero on violations; a tier-1 test
+# runs the same function, so perf-touching PRs cannot silently regress.
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 from functools import partial
 
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                          "BENCH_solver_perf.json")
+
+#: --check gate: fused µs/step may be at most this multiple of the baseline's
+#: at the same (N, mode) in the same recorded run.
+CHECK_MAX_FUSED_REGRESSION = 1.3
+
+
+def check_bench_history(payload: dict,
+                        max_ratio: float = CHECK_MAX_FUSED_REGRESSION) -> list[str]:
+    """Validate the solver-perf JSON; returns a list of violations (empty =
+    healthy). Pure function of the payload so the tier-1 test can exercise
+    both the repo's committed file and synthetic failure cases."""
+    errors = []
+    for field in ("bench", "units", "results", "history"):
+        if field not in payload:
+            errors.append(f"missing required top-level field {field!r}")
+    history = payload.get("history") or []
+    if not isinstance(history, list) or not history:
+        errors.append("history must be a non-empty list")
+        history = []
+    run_ids = []
+    for i, entry in enumerate(history):
+        if not isinstance(entry, dict):
+            errors.append(f"history[{i}] is not an object "
+                          f"({type(entry).__name__})")
+            continue
+        rid = entry.get("run_id")
+        if not isinstance(rid, str) or not rid:
+            errors.append(f"history[{i}] missing a non-empty run_id stamp")
+        else:
+            run_ids.append(rid)
+        if not isinstance(entry.get("results"), dict) or not entry["results"]:
+            errors.append(f"history[{i}] ({rid!r}) missing results")
+    if len(set(run_ids)) != len(run_ids):
+        dupes = sorted({r for r in run_ids if run_ids.count(r) > 1})
+        errors.append(f"duplicate run_id stamps {dupes} — every recorded run "
+                      "must be uniquely stamped (append, never overwrite)")
+    last = history[-1] if history and isinstance(history[-1], dict) else {}
+    if last and isinstance(payload.get("results"), dict):
+        if last.get("results") != payload["results"]:
+            errors.append("top-level results must mirror the latest history "
+                          "entry (the file is append-only)")
+    # Perf gate on the latest run: fused vs baseline at matched (N, mode).
+    latest = last.get("results") or {}
+    for n_key, modes in sorted(latest.items()):
+        if not isinstance(modes, dict):
+            continue
+        for mode, cell in sorted(modes.items()):
+            if not isinstance(cell, dict):
+                continue
+            base = cell.get("baseline_us_per_step")
+            fused = cell.get("fused_us_per_step")
+            if base is None or fused is None:
+                continue  # single-engine points (e.g. bit-plane-only sizes)
+            if base <= 0:
+                errors.append(f"{n_key}/{mode}: non-positive baseline timing")
+                continue
+            if fused > max_ratio * base:
+                errors.append(
+                    f"{n_key}/{mode}: fused {fused:.1f} µs/step is "
+                    f"{fused / base:.2f}x the baseline's {base:.1f} — over "
+                    f"the {max_ratio}x regression gate")
+    return errors
+
+
+def run_check(path: str = BENCH_JSON) -> int:
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"# CHECK-ERROR cannot read {path}: {e}")
+        return 1
+    errors = check_bench_history(payload)
+    for err in errors:
+        print(f"# CHECK-FAIL {err}")
+    if not errors:
+        print(f"# CHECK-OK {path} ({len(payload.get('history', []))} history "
+              "entries)")
+    return 1 if errors else 0
+
 
 def main(argv=None) -> None:
-    from . import (bench_fig14_incremental, bench_fig15_bitplane,
-                   bench_roofline, bench_solver_perf, bench_table2_gset,
-                   bench_table3_tts)
-
     parser = argparse.ArgumentParser(prog="benchmarks.run")
     parser.add_argument("--run-id", default=None,
                         help="history stamp for BENCH_solver_perf.json")
+    parser.add_argument("--suite", default=None,
+                        help="run only the named suite (default: all)")
+    parser.add_argument("--check", action="store_true",
+                        help="validate BENCH_solver_perf.json and exit")
     args = parser.parse_args(argv)
+
+    if args.check:
+        sys.exit(run_check())
+
+    from . import (bench_fig14_incremental, bench_fig15_bitplane,
+                   bench_roofline, bench_solver_perf, bench_table2_gset,
+                   bench_table3_tts)
 
     print("name,us_per_call,derived")
     suites = [
@@ -32,6 +136,10 @@ def main(argv=None) -> None:
          partial(bench_solver_perf.main, run_id=args.run_id)),
         ("roofline", bench_roofline.main),             # §Roofline table
     ]
+    if args.suite is not None:
+        suites = [s for s in suites if s[0] == args.suite]
+        if not suites:
+            parser.error(f"unknown suite {args.suite!r}")
     for name, fn in suites:
         t0 = time.time()
         print(f"# ==== {name} ====", flush=True)

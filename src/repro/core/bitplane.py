@@ -63,10 +63,19 @@ class BitPlanes:
         return int(self.pos.size + self.neg.size) * 4
 
 
-def _pack_bits(bits: np.ndarray) -> np.ndarray:
-    """Pack a (..., N) {0,1} array into (..., ceil(N/32)) uint32, LSB-first."""
+def _pack_bits(bits: np.ndarray, num_words: int | None = None) -> np.ndarray:
+    """Pack a (..., N) {0,1} array into (..., W) uint32, LSB-first.
+
+    ``num_words`` pads the packed axis with zero words beyond ceil(N/32) —
+    tile alignment for the HBM-streamed row DMAs; zero words decode to zero
+    couplers, so padding never changes the represented matrix."""
     n = bits.shape[-1]
-    pad = (-n) % WORD_BITS
+    w = -(-n // WORD_BITS)
+    if num_words is None:
+        num_words = w
+    elif num_words < w:
+        raise ValueError(f"num_words={num_words} < ceil({n}/32)={w}")
+    pad = num_words * WORD_BITS - n
     if pad:
         bits = np.concatenate([bits, np.zeros(bits.shape[:-1] + (pad,), bits.dtype)], axis=-1)
     words = bits.reshape(bits.shape[:-1] + (-1, WORD_BITS)).astype(np.uint64)
@@ -74,7 +83,8 @@ def _pack_bits(bits: np.ndarray) -> np.ndarray:
     return (words * shifts).sum(axis=-1).astype(np.uint32)
 
 
-def encode_couplings(J: np.ndarray, num_planes: int) -> BitPlanes:
+def encode_couplings(J: np.ndarray, num_planes: int,
+                     align_words: int = 1) -> BitPlanes:
     """Sign-magnitude bit-plane encoding of an integer matrix (Eq. 13).
 
     Requires |J_ij| < 2**num_planes; raises otherwise (the hardware would
@@ -86,6 +96,11 @@ def encode_couplings(J: np.ndarray, num_planes: int) -> BitPlanes:
     here. A nonzero diagonal merely warns (self-coupling J_ii contributes a
     spin-independent constant to ΔE bookkeeping but is almost always a
     problem-construction bug).
+
+    ``align_words`` rounds the packed word axis W up to a multiple (zero-bit
+    padding): the HBM-streamed sweep path DMAs whole (B, 1, W) rows per step,
+    so W should land on the TPU lane tile (128 words) for full-width copies.
+    Padding is representation-invisible — every decoder truncates to N.
     """
     J = np.asarray(J)
     Ji = np.rint(J).astype(np.int64)
@@ -104,7 +119,11 @@ def encode_couplings(J: np.ndarray, num_planes: int) -> BitPlanes:
     limit = 1 << num_planes
     if np.abs(Ji).max(initial=0) >= limit:
         raise ValueError(f"|J|max={np.abs(Ji).max()} needs more than {num_planes} planes")
+    if align_words < 1:
+        raise ValueError(f"align_words must be >= 1, got {align_words}")
     n = Ji.shape[0]
+    w = -(-n // WORD_BITS)
+    num_words = -(-w // align_words) * align_words
     mag = np.abs(Ji)
     sign_pos = Ji > 0
     sign_neg = Ji < 0
@@ -112,8 +131,8 @@ def encode_couplings(J: np.ndarray, num_planes: int) -> BitPlanes:
     neg_planes = []
     for b in range(num_planes):
         bit = ((mag >> b) & 1).astype(np.uint8)
-        pos_planes.append(_pack_bits(bit * sign_pos))
-        neg_planes.append(_pack_bits(bit * sign_neg))
+        pos_planes.append(_pack_bits(bit * sign_pos, num_words))
+        neg_planes.append(_pack_bits(bit * sign_neg, num_words))
     return BitPlanes(
         pos=jnp.asarray(np.stack(pos_planes)),
         neg=jnp.asarray(np.stack(neg_planes)),
@@ -135,17 +154,26 @@ def decode_couplings(planes: BitPlanes) -> np.ndarray:
     return out
 
 
-def pack_spins(spins: jax.Array) -> jax.Array:
+def pack_spins(spins: jax.Array, num_words: int | None = None) -> jax.Array:
     """Encode ±1 spins as bits x_j=(s_j+1)/2 packed into uint32 words (§IV-B).
 
     The bit is derived with an explicit ``s_j > 0`` predicate rather than
     ``(s_j + 1) // 2``: floor division is not dtype-uniform for ±1 spins
     (float ``//`` yields floats and int rounding conventions differ), while
     the predicate is exact for every spin dtype in use (int8/int32/f32/bf16).
+
+    ``num_words`` pads with zero words past ceil(N/32) so spin words line up
+    with tile-aligned (padded) coupling planes in the Hamming-weight math —
+    a zero spin word ANDed against a zero plane word contributes nothing.
     """
     x = (spins > 0).astype(jnp.uint32)
     n = x.shape[-1]
-    pad = (-n) % WORD_BITS
+    w = -(-n // WORD_BITS)
+    if num_words is None:
+        num_words = w
+    elif num_words < w:
+        raise ValueError(f"num_words={num_words} < ceil({n}/32)={w}")
+    pad = num_words * WORD_BITS - n
     if pad:
         x = jnp.concatenate([x, jnp.zeros(x.shape[:-1] + (pad,), jnp.uint32)], axis=-1)
     words = x.reshape(x.shape[:-1] + (-1, WORD_BITS))
@@ -158,8 +186,9 @@ def local_fields_from_planes(planes: BitPlanes, spins: jax.Array) -> jax.Array:
 
     ``spins``: (..., N) ±1. Returns (..., N) float32. Pure-jnp oracle for the
     Pallas kernel; also the reference implementation for the popcount math.
+    Spin words are packed to the planes' (possibly tile-padded) word count.
     """
-    xw = pack_spins(spins)  # (..., W)
+    xw = pack_spins(spins, planes.num_words)  # (..., W)
     popc = jax.lax.population_count
     # (B, N, W) plane words against (..., 1, W) spin words.
     xw_b = xw[..., None, :]

@@ -23,13 +23,16 @@ from .schedules import Schedule
 
 
 #: Valid values of the ``CouplingFormat`` knob (``SolverConfig.coupling_format``
-#: / ``TemperingConfig.coupling_format``): how the *fused* backend stores J in
-#: VMEM. "dense" = (N, N) f32; "bitplane" = packed signed planes
+#: / ``TemperingConfig.coupling_format``): how the *fused* backend stores J.
+#: "dense" = (N, N) f32 in VMEM; "bitplane" = packed signed planes in VMEM
 #: (``core.bitplane``, 2·B bits/coupler — the paper's §IV-B1 memory lever);
-#: "auto" = bitplane exactly when J is integral and N exceeds the f32 VMEM
-#: crossover (``kernels.ops.DENSE_COUPLING_MAX_N``). The reference backend
-#: always consumes the dense J.
-COUPLING_FORMATS = ("auto", "dense", "bitplane")
+#: "bitplane_hbm" = the same planes resident in HBM with selected rows
+#: streamed through a double-buffered VMEM scratch (the past-the-packed-wall
+#: tier); "auto" = packed exactly when J is integral and N exceeds the f32
+#: VMEM crossover (``kernels.ops.DENSE_COUPLING_MAX_N``), escalating to
+#: "bitplane_hbm" past ``kernels.ops.BITPLANE_VMEM_MAX_N``. The reference
+#: backend always consumes the dense J.
+COUPLING_FORMATS = ("auto", "dense", "bitplane", "bitplane_hbm")
 
 
 @dataclasses.dataclass(frozen=True)

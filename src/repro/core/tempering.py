@@ -133,11 +133,13 @@ def _solve_tempering_reference(problem: ising.IsingProblem, seed,
 
 
 def _solve_tempering_fused(problem: ising.IsingProblem, seed,
-                           config: TemperingConfig, planes) -> TemperingResult:
+                           config: TemperingConfig, planes,
+                           fmt: str = "dense") -> TemperingResult:
     """Fused backend: each between-swap phase is one VMEM-resident sweep with
     the temperature ladder as the kernel's per-replica ``(T, R)`` tensor.
-    ``planes`` is the packed bit-plane J (or None for dense), resolved and
-    encoded by the host-level dispatcher."""
+    ``planes`` is the packed bit-plane J (or None for dense) and ``fmt`` the
+    resolved coupling store ("dense" | "bitplane" | "bitplane_hbm"), both
+    produced by the host-level dispatcher."""
     from ..kernels import ops as _ops  # lazy: kernels.ops imports core.solver
 
     r = config.num_replicas
@@ -157,7 +159,7 @@ def _solve_tempering_fused(problem: ising.IsingProblem, seed,
         state = _ops.fused_sweep_chunk(
             sweep_couplings, state, rng.stream(base, rng.Salt.SWEEP, round_idx),
             config.swap_every, temps_trs, mode=config.mode, pwl_table=tbl,
-            block_r=block_r, interpret=interpret)
+            block_r=block_r, coupling=fmt, interpret=interpret)
         state, (a, t) = _swap_phase(state, lambda st: st[2], temps,
                                     base, round_idx, r)
         return (state, acc + a, tot + t), None
@@ -177,7 +179,7 @@ def _solve_tempering_fused(problem: ising.IsingProblem, seed,
 _solve_tempering_reference_jit = partial(
     jax.jit, static_argnames=("config",))(_solve_tempering_reference)
 _solve_tempering_fused_jit = partial(
-    jax.jit, static_argnames=("config",))(_solve_tempering_fused)
+    jax.jit, static_argnames=("config", "fmt"))(_solve_tempering_fused)
 
 
 def solve_tempering(problem: ising.IsingProblem, seed,
@@ -189,9 +191,10 @@ def solve_tempering(problem: ising.IsingProblem, seed,
         from ..kernels import ops as _ops  # lazy: kernels.ops imports core.solver
         fmt = _ops.resolve_coupling_format(
             config.coupling_format, problem.couplings, problem.num_spins)
-        planes = (_ops.encode_for_sweep(problem.couplings)
-                  if fmt == "bitplane" else None)
-        return _solve_tempering_fused_jit(problem, seed, config, planes)
+        planes = (_ops.encode_for_sweep(problem.couplings, fmt=fmt)
+                  if fmt in ("bitplane", "bitplane_hbm") else None)
+        return _solve_tempering_fused_jit(problem, seed, config, planes,
+                                          fmt=fmt)
     if config.backend != "reference":
         raise ValueError(
             f"backend must be 'reference' or 'fused', got {config.backend!r}")

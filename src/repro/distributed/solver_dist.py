@@ -56,7 +56,7 @@ def _chunk_runner(problem, mc, schedule, chunk_steps):
 
 
 def _fused_chunk_runner(base_cfg: SolverConfig, chunk_steps: int, r_local: int,
-                        interpret: bool, planes=None):
+                        interpret: bool, planes=None, fmt: str = "dense"):
     """Run `chunk_steps` steps as one VMEM-resident fused sweep per shard.
 
     Replica chains stay in ``mcmc.ChainState`` so the elitist-exchange logic
@@ -64,8 +64,11 @@ def _fused_chunk_runner(base_cfg: SolverConfig, chunk_steps: int, r_local: int,
     directly. Per-device RNG: chunk uniforms come from the dedicated
     ``Salt.SWEEP`` stream folded with the device index, so shards draw
     disjoint streams by construction. ``planes`` is the packed bit-plane J
-    (``base_cfg.coupling_format``, resolved by ``solve_distributed``) —
-    replicated to every shard like the dense J it replaces in the kernel.
+    and ``fmt`` the resolved coupling store ("dense" | "bitplane" |
+    "bitplane_hbm", per ``base_cfg.coupling_format`` via
+    ``solve_distributed``) — planes are replicated to every shard like the
+    dense J they replace; in the HBM tier each shard streams rows from its
+    own HBM-resident copy.
     """
     from ..kernels import ops as _ops
 
@@ -84,7 +87,7 @@ def _fused_chunk_runner(base_cfg: SolverConfig, chunk_steps: int, r_local: int,
             rng.stream(base, rng.Salt.SWEEP, device_idx, chunk_idx),
             chunk_steps, temps, mode=base_cfg.mode,
             uniformized=base_cfg.uniformized, pwl_table=tbl,
-            block_r=block_r, interpret=interpret)
+            block_r=block_r, coupling=fmt, interpret=interpret)
         return mcmc.ChainState(
             spins=s.astype(ising.SPIN_DTYPE),
             fields=u,
@@ -116,9 +119,10 @@ def solve_distributed(problem: ising.IsingProblem, seed, config: DistSolverConfi
                                    resolve_coupling_format)
         fmt = resolve_coupling_format(base_cfg.coupling_format,
                                       problem.couplings, n)
-        planes = encode_for_sweep(problem.couplings) if fmt == "bitplane" else None
+        planes = (encode_for_sweep(problem.couplings, fmt=fmt)
+                  if fmt in ("bitplane", "bitplane_hbm") else None)
         runner_fused = _fused_chunk_runner(base_cfg, chunk, r_local,
-                                           auto_interpret(None), planes)
+                                           auto_interpret(None), planes, fmt)
     elif config.backend == "reference":
         runner = _chunk_runner(problem, mc, base_cfg.schedule, chunk)
     else:

@@ -40,6 +40,18 @@ ONEHOT_GATHER_MAX_N = 128
 #: switches integral-J problems to the packed bit-plane store.
 DENSE_COUPLING_MAX_N = 2000
 
+#: The packed-VMEM wall: above this N even the bit-plane store (2·B bits per
+#: coupler; pos+neg = N²·B/4 bytes ≈ 16 MiB at N=8k, B=1) no longer fits VMEM
+#: alongside the sweep state, so ``coupling_format="auto"`` switches to the
+#: HBM-streamed plane store (``coupling="bitplane_hbm"``: planes stay in HBM,
+#: selected rows double-buffer through a 2-slot VMEM scratch).
+BITPLANE_VMEM_MAX_N = 8000
+
+#: Word-axis alignment for HBM-resident planes: the streamed path DMAs whole
+#: (B, 1, W) row tiles per step, so W is padded to the 128-word TPU lane tile
+#: (zero bits — decode truncates to N, so padding is representation-invisible).
+STREAM_ALIGN_WORDS = 128
+
 #: What the fused sweep holds per coupler: dense f32 = 32 bits; bit-planes =
 #: 2·B bits (pos + neg planes). Used for the benchmark's J-bytes accounting.
 DENSE_COUPLING_BITS = 32
@@ -52,16 +64,18 @@ def auto_interpret(interpret: Optional[bool]) -> bool:
 
 
 def resolve_coupling_format(fmt: Optional[str], couplings, n: int) -> str:
-    """Resolve the ``CouplingFormat`` knob to "dense" | "bitplane".
+    """Resolve the ``CouplingFormat`` knob to "dense" | "bitplane" |
+    "bitplane_hbm".
 
-    "auto" (or None) selects "bitplane" exactly when the couplings are
+    "auto" (or None) selects a packed store exactly when the couplings are
     concrete (host-inspectable — encoding runs in numpy), integral, N is
     past the f32 VMEM crossover (:data:`DENSE_COUPLING_MAX_N`), **and** the
     packed store is actually smaller — 2·B bits per coupler must beat the 32
-    of dense f32, so integer magnitudes needing B ≥ 16 planes stay dense;
-    everything else stays dense. An explicit "bitplane" under a jax trace
-    raises — the planes cannot be packed from a tracer; encode first and
-    pass them in.
+    of dense f32, so integer magnitudes needing B ≥ 16 planes stay dense.
+    Past the packed-VMEM wall (:data:`BITPLANE_VMEM_MAX_N`) "auto" escalates
+    to "bitplane_hbm": planes in HBM, rows streamed through VMEM scratch.
+    An explicit plane format under a jax trace raises — the planes cannot be
+    packed from a tracer; encode first and pass them in.
     """
     traced = isinstance(couplings, jax.core.Tracer)
     if fmt in (None, "auto"):
@@ -71,29 +85,34 @@ def resolve_coupling_format(fmt: Optional[str], couplings, n: int) -> str:
         if not np.array_equal(J, np.rint(J)):
             return "dense"
         num_planes = max(1, int(np.abs(J).max(initial=0)).bit_length())
-        return ("bitplane" if 2 * num_planes < DENSE_COUPLING_BITS
-                else "dense")
-    if fmt not in ("dense", "bitplane"):
+        if 2 * num_planes >= DENSE_COUPLING_BITS:
+            return "dense"
+        return "bitplane" if n <= BITPLANE_VMEM_MAX_N else "bitplane_hbm"
+    if fmt not in ("dense", "bitplane", "bitplane_hbm"):
         raise ValueError(
             f"coupling format must be one of {COUPLING_FORMATS}, got {fmt!r}")
-    if fmt == "bitplane" and traced:
-        raise ValueError("coupling_format='bitplane' needs concrete couplings "
+    if fmt != "dense" and traced:
+        raise ValueError(f"coupling_format={fmt!r} needs concrete couplings "
                          "(plane packing happens on the host, outside jit)")
     return fmt
 
 
-def encode_for_sweep(couplings, num_planes: Optional[int] = None) -> BitPlanes:
-    """Pack a concrete integral J for the fused sweep's bit-plane path.
+def encode_for_sweep(couplings, num_planes: Optional[int] = None,
+                     fmt: str = "bitplane") -> BitPlanes:
+    """Pack a concrete integral J for the fused sweep's bit-plane paths.
 
     ``num_planes`` defaults to the fewest planes that represent |J|max
     (B = bit_length(|J|max), ≥ 1) — memory is linear in B, so auto-selection
-    never over-allocates precision (paper §IV-B1).
+    never over-allocates precision (paper §IV-B1). ``fmt="bitplane_hbm"``
+    pads the word axis to :data:`STREAM_ALIGN_WORDS` so each streamed row
+    tile is a full-lane-width DMA (padding is zero bits; decode truncates).
     """
     J = np.asarray(couplings)
     if num_planes is None:
         amax = int(np.abs(np.rint(J)).max(initial=0))
         num_planes = max(1, amax.bit_length())
-    return encode_couplings(J, num_planes)
+    align = STREAM_ALIGN_WORDS if fmt == "bitplane_hbm" else 1
+    return encode_couplings(J, num_planes, align_words=align)
 
 
 def local_field_init(spins: jax.Array, couplings: jax.Array, bias: jax.Array,
@@ -109,8 +128,12 @@ def local_field_init(spins: jax.Array, couplings: jax.Array, bias: jax.Array,
 
 def bitplane_field_init(planes: BitPlanes, spins: jax.Array,
                         *, interpret: Optional[bool] = None, **kw) -> jax.Array:
-    """Batched u^(J) from packed bit-planes via the popcount kernel."""
-    words = pack_spins(spins)
+    """Batched u^(J) from packed bit-planes via the popcount kernel.
+
+    Spin words are packed to the planes' word count so tile-padded (HBM-
+    streamed) plane stores line up — padding words are zero on both sides.
+    """
+    words = pack_spins(spins, planes.num_words)
     return _bitplane_field.bitplane_field_init(
         planes.pos, planes.neg, words, interpret=auto_interpret(interpret), **kw)
 
@@ -177,21 +200,26 @@ def fused_sweep_chunk(couplings: Union[jax.Array, BitPlanes], state,
                       *, mode: str, uniformized: bool = False,
                       pwl_table: Optional[jax.Array] = None,
                       gather: str = "dynamic", block_r: int = 8,
+                      coupling: Optional[str] = None,
                       interpret: bool = False):
     """One fused sweep chunk + best-so-far merge — the single chunk driver
     shared by ``fused_anneal``, fused tempering, and the fused distributed
     runner, so kernel-signature changes happen in exactly one place.
 
-    ``couplings`` is the dense (N, N) J or a packed ``BitPlanes`` (the
-    kernel's ``coupling`` mode follows the type). ``state`` is the 6-tuple
-    ``(u, s, e, best_e, best_s, num_flips)`` with a leading replica axis;
-    ``chunk_key`` is the chunk's ``Salt.SWEEP`` stream; ``temps`` is the
-    (num_steps, R) per-replica temperature tensor. Returns the updated state
-    tuple.
+    ``couplings`` is the dense (N, N) J or a packed ``BitPlanes``.
+    ``coupling`` selects the kernel's J store ("dense" | "bitplane" |
+    "bitplane_hbm"); None infers from the type — a ``BitPlanes`` defaults to
+    the VMEM-resident "bitplane" path, so the HBM-streamed tier must be
+    requested explicitly (the drivers pass their resolved format through).
+    ``state`` is the 6-tuple ``(u, s, e, best_e, best_s, num_flips)`` with a
+    leading replica axis; ``chunk_key`` is the chunk's ``Salt.SWEEP`` stream;
+    ``temps`` is the (num_steps, R) per-replica temperature tensor. Returns
+    the updated state tuple.
     """
     u, s, e, be, bs, nf = state
     r = e.shape[0]
-    coupling = "bitplane" if isinstance(couplings, BitPlanes) else "dense"
+    if coupling is None:
+        coupling = "bitplane" if isinstance(couplings, BitPlanes) else "dense"
     uniforms = rng.uniform01(chunk_key, (num_steps, r, 4))
     u, s, e, ce, cs, cf = _sweep.mcmc_sweep(
         couplings, u, s, e, uniforms, temps, pwl_table, mode=mode,
@@ -203,11 +231,12 @@ def fused_sweep_chunk(couplings: Union[jax.Array, BitPlanes], state,
 
 
 @partial(jax.jit, static_argnames=("config", "chunk_steps", "block_r",
-                                   "gather", "interpret"))
+                                   "gather", "interpret", "fmt"))
 def _fused_anneal_impl(problem: ising.IsingProblem, seed: jax.Array,
                        config: SolverConfig, chunk_steps: int, block_r: int,
                        gather: str, interpret: bool,
-                       planes: Optional[BitPlanes]) -> SolveResult:
+                       planes: Optional[BitPlanes],
+                       fmt: str = "dense") -> SolveResult:
     n = problem.num_spins
     r = config.num_replicas
     base = jax.random.fold_in(jax.random.key(0), seed)
@@ -246,7 +275,7 @@ def _fused_anneal_impl(problem: ising.IsingProblem, seed: jax.Array,
             sweep_couplings, carry, rng.stream(base, rng.Salt.SWEEP, c),
             clen, temps, mode=config.mode, uniformized=config.uniformized,
             pwl_table=tbl, gather=gather, block_r=fit_block(r, block_r),
-            interpret=interpret)
+            coupling=fmt, interpret=interpret)
         return state, state[3]  # best-so-far energy at chunk end
 
     (u, s, e, be, bs, nf), trace = jax.lax.scan(
@@ -281,21 +310,27 @@ def fused_anneal(problem: ising.IsingProblem, seed, config: SolverConfig,
 
     ``coupling`` overrides ``config.coupling_format`` ("auto" picks the
     packed bit-plane store when J is integral, N is past the f32 VMEM
-    crossover, and packing actually shrinks J); plane packing happens here,
-    on the host, so the jitted impl only ever sees ready arrays. Callers
-    that already hold packed planes (benchmarks, repeated solves of one
-    instance) pass the ``BitPlanes`` itself as ``coupling`` to skip the
-    O(N²·B) re-encode. ``num_planes`` forces the precision B (default:
-    fewest planes covering |J|max).
+    crossover, and packing actually shrinks J — escalating to the
+    HBM-streamed store past the packed-VMEM wall); plane packing happens
+    here, on the host, so the jitted impl only ever sees ready arrays.
+    Callers that already hold packed planes (benchmarks, repeated solves of
+    one instance) pass the ``BitPlanes`` itself as ``coupling`` to skip the
+    O(N²·B) re-encode — the store tier then follows
+    ``config.coupling_format`` when it names a plane format, else the
+    VMEM-resident "bitplane" path. ``num_planes`` forces the precision B
+    (default: fewest planes covering |J|max).
     """
     if isinstance(coupling, BitPlanes):
         planes = coupling
+        fmt = (config.coupling_format
+               if config.coupling_format in ("bitplane", "bitplane_hbm")
+               else "bitplane")
     else:
         fmt = resolve_coupling_format(
             coupling if coupling is not None else config.coupling_format,
             problem.couplings, problem.num_spins)
-        planes = (encode_for_sweep(problem.couplings, num_planes)
-                  if fmt == "bitplane" else None)
+        planes = (encode_for_sweep(problem.couplings, num_planes, fmt)
+                  if fmt in ("bitplane", "bitplane_hbm") else None)
     return _fused_anneal_impl(problem, jnp.asarray(seed, jnp.uint32), config,
                               chunk_steps, block_r, gather,
-                              auto_interpret(interpret), planes)
+                              auto_interpret(interpret), planes, fmt)

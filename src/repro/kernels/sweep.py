@@ -15,9 +15,9 @@ MXU gather — an O(br·N²) contraction per step — survives only as the opt-i
 ``gather="onehot"`` heuristic for tiny N, where a single small matmul beats
 ``br`` sequential DMA-issued row reads.
 
-Coupling storage is selectable (``coupling="dense"|"bitplane"``): the dense
-path holds J as (N, N) f32 — 16 MiB of VMEM at N=2048, the f32 wall — while
-the bit-plane path (paper §IV-B1, Eq. 13) holds the (B, N, W) uint32
+Coupling storage is selectable (``coupling="dense"|"bitplane"|"bitplane_hbm"``):
+the dense path holds J as (N, N) f32 — 16 MiB of VMEM at N=2048, the f32 wall
+— while the bit-plane path (paper §IV-B1, Eq. 13) holds the (B, N, W) uint32
 ``pos``/``neg`` planes of an integer J, 2·B bits per coupler instead of 32.
 At the paper's B=2 that is 8× smaller, moving the VMEM wall from N≈2000 to
 N≈5–11k (DESIGN.md §Backends). Row j is fetched as a (B, 1, W) ``pl.ds``
@@ -27,6 +27,21 @@ sum, O(B·N) VPU work, no ``dot_general``); the O(N) FMA into u is unchanged,
 so the O(N)/step contract and the no-``dot_general`` jaxpr pin both hold.
 Local-field *initialization* from planes is the separate popcount kernel
 (``kernels/bitplane_field.py``); this kernel only consumes u₀.
+
+``coupling="bitplane_hbm"`` breaks even the packed-VMEM wall (N ≈ 8–11k):
+the planes stay in HBM (``memory_space=ANY`` — never blocked into the
+pipeline) and each step's selected row streams into a 2-slot VMEM scratch via
+``pltpu.make_async_copy`` DMAs, double-buffered across the replica apply
+loop — while replica r's (B, 1, W) row tile is decoded and FMA'd, the DMA
+for replica r+1's row is already in flight. VMEM then holds only the sweep
+state plus two row tiles (O(B·N/32) words), so the N-ceiling is set by HBM
+capacity, not VMEM: N=16384 at B=1 is a 64 MiB plane store streamed at
+~2·B·N/32 words/step against the same O(N) VPU work. The decoded row goes
+through the identical ``common.decode_bitplane_rows`` expansion, so streamed
+trajectories are exactly equal to the VMEM-bitplane and dense paths (the
+parity tier asserts ``assert_array_equal``). The DMA pattern runs under
+interpret mode too (jax 0.4.37 emulates ``make_async_copy`` + semaphores),
+so the tested path on CPU is the compiled path on TPU.
 
 Feature parity with ``core.mcmc``: both modes (RSA random-scan, RWA
 roulette-wheel with hierarchical lane-scan selection), the uniformized-RWA
@@ -52,9 +67,15 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from ..core.bitplane import BitPlanes
+from ..core.bitplane import WORD_BITS, BitPlanes
 from . import common
+
+#: Coupling-store modes of the fused sweep (see module docstring).
+COUPLING_MODES = ("dense", "bitplane", "bitplane_hbm")
+#: Modes that consume a packed ``BitPlanes`` instead of a dense (N, N) J.
+PLANE_MODES = ("bitplane", "bitplane_hbm")
 
 
 def _gather_scalars(x: jax.Array, sites: jax.Array, br: int) -> jax.Array:
@@ -85,7 +106,13 @@ def _gather_scalar_pair(a: jax.Array, b: jax.Array, sites: jax.Array,
 
 def _kernel(*refs, num_steps: int, mode: str, uniformized: bool,
             gather: str, lane: int, has_pwl: bool, coupling: str):
-    num_j = 2 if coupling == "bitplane" else 1
+    streamed = coupling == "bitplane_hbm"
+    if streamed:
+        # HBM-streaming scratch: 2-slot (double-buffered) row tiles per sign
+        # plane plus one DMA semaphore per (slot, sign) in-flight copy.
+        pos_scr, neg_scr, row_sems = refs[-3:]
+        refs = refs[:-3]
+    num_j = 2 if coupling in PLANE_MODES else 1
     j_refs = refs[:num_j]
     (u0_ref, s0_ref, e0_ref, unif_ref, temp_ref) = refs[num_j:num_j + 5]
     if has_pwl:
@@ -108,6 +135,27 @@ def _kernel(*refs, num_steps: int, mode: str, uniformized: bool,
             nr = neg_ref[:, pl.ds(jr, 1), :]
             return common.decode_bitplane_rows(pr, nr, n)
         return j_refs[0][pl.ds(jr, 1), :].astype(jnp.float32)
+
+    def stream_dmas(slot, jr):
+        """The two (B, 1, W) HBM→VMEM row-tile copies for site jr into
+        double-buffer ``slot`` (descriptors are rebuilt for wait() — the
+        canonical make_async_copy pattern)."""
+        pos_ref, neg_ref = j_refs
+        return (pltpu.make_async_copy(pos_ref.at[:, pl.ds(jr, 1), :],
+                                      pos_scr.at[slot], row_sems.at[slot, 0]),
+                pltpu.make_async_copy(neg_ref.at[:, pl.ds(jr, 1), :],
+                                      neg_scr.at[slot], row_sems.at[slot, 1]))
+
+    def stream_start(slot, jr):
+        for dma in stream_dmas(slot, jr):
+            dma.start()
+
+    def stream_wait_decode(slot, jr):
+        """Block on slot's row DMAs, then the same in-register bit expansion
+        as the VMEM path — identical decode ⇒ identical trajectories."""
+        for dma in stream_dmas(slot, jr):
+            dma.wait()
+        return common.decode_bitplane_rows(pos_scr[slot], neg_scr[slot], n)
     u = u0_ref[...].astype(jnp.float32)     # (br, N)
     s = s0_ref[...].astype(jnp.float32)     # (br, N) ±1
     e = e0_ref[...].astype(jnp.float32)[:, 0]  # (br,)
@@ -159,11 +207,10 @@ def _kernel(*refs, num_steps: int, mode: str, uniformized: bool,
             # straight off the J ref, a scalar spin flip, and a
             # copy-on-improve of best_spins (lax.cond so the (1, N) copy is
             # only paid when the replica actually improved).
-            def apply_one(rix, carry):
-                u, s, bs = carry
-                jr = j[rix]
+            def apply_row(rix, jr, row, u, s, bs):
+                """Consume replica rix's (1, N) coupling row — the arithmetic
+                shared verbatim by the VMEM-fetch and HBM-streamed drivers."""
                 coef = 2.0 * accept[rix] * s_old[rix]
-                row = fetch_row(jr)  # (1, N)
                 u_row = jax.lax.dynamic_slice(u, (rix, 0), (1, n))
                 u = jax.lax.dynamic_update_slice(u, u_row - coef * row,
                                                  (rix, 0))
@@ -176,6 +223,33 @@ def _kernel(*refs, num_steps: int, mode: str, uniformized: bool,
                         (rix, 0)),
                     lambda b: b, bs)
                 return (u, s, bs)
+
+            if streamed:
+                # Double-buffered HBM streaming: replica r+1's row tiles are
+                # DMA'd into the other scratch slot while replica r's row is
+                # decoded and applied (sites j are all known before the apply
+                # loop, and replicas are independent, so the prefetch can
+                # never read a stale site).
+                def apply_one(rix, carry):
+                    u, s, bs = carry
+                    jr = j[rix]
+                    slot = jax.lax.rem(rix, 2)
+
+                    @pl.when(rix + 1 < br)
+                    def _():
+                        nxt = jnp.minimum(rix + 1, br - 1)
+                        stream_start(jax.lax.rem(rix + 1, 2), j[nxt])
+
+                    row = stream_wait_decode(slot, jr)  # (1, N)
+                    return apply_row(rix, jr, row, u, s, bs)
+
+                stream_start(0, j[0])
+            else:
+                def apply_one(rix, carry):
+                    u, s, bs = carry
+                    jr = j[rix]
+                    row = fetch_row(jr)  # (1, N)
+                    return apply_row(rix, jr, row, u, s, bs)
 
             u, s, bs = jax.lax.fori_loop(0, br, apply_one, (u, s, bs))
         return (u, s, e, be, bs, nf)
@@ -204,7 +278,9 @@ def mcmc_sweep(couplings, fields0: jax.Array, spins0: jax.Array,
     couplings: (N, N) f32 with ``coupling="dense"``, or a packed
     ``core.bitplane.BitPlanes`` of an integer J with ``coupling="bitplane"``
     (2·B bits per coupler in VMEM instead of 32 — the N≈2000 → N≈11k wall
-    move, DESIGN.md §Backends). fields0/spins0 (R, N); energy0 (R,);
+    move) or ``coupling="bitplane_hbm"`` (planes stay in HBM, selected rows
+    stream through a double-buffered VMEM scratch — the past-the-packed-wall
+    tier, DESIGN.md §Backends). fields0/spins0 (R, N); energy0 (R,);
     uniforms (T, R, 4) [site, accept, roulette, uniformize] in [0,1); temps
     (T, R) per-replica temperatures; pwl_table optional (S+1, 3) LUT from
     ``core.pwl.pwl_table`` (None = exact sigmoid). ``gather``: "dynamic"
@@ -219,15 +295,18 @@ def mcmc_sweep(couplings, fields0: jax.Array, spins0: jax.Array,
     assert uniforms.shape == (t, r, 4) and temps.shape == (t, r)
     if gather not in ("dynamic", "onehot"):
         raise ValueError(f"gather must be 'dynamic' or 'onehot', got {gather!r}")
-    if coupling not in ("dense", "bitplane"):
+    if coupling not in COUPLING_MODES:
         raise ValueError(
-            f"coupling must be 'dense' or 'bitplane', got {coupling!r}")
-    if coupling == "bitplane":
+            f"coupling must be one of {COUPLING_MODES}, got {coupling!r}")
+    if coupling in PLANE_MODES:
         if not isinstance(couplings, BitPlanes):
-            raise TypeError("coupling='bitplane' needs a BitPlanes couplings "
-                            f"argument, got {type(couplings).__name__}")
+            raise TypeError(f"coupling={coupling!r} needs a BitPlanes "
+                            f"couplings argument, got {type(couplings).__name__}")
         if couplings.num_spins != n:
             raise ValueError(f"BitPlanes N={couplings.num_spins} != state N={n}")
+        if couplings.num_words * WORD_BITS < n:
+            raise ValueError(f"BitPlanes W={couplings.num_words} words cannot "
+                             f"cover N={n} couplers")
         if gather == "onehot":
             raise ValueError("gather='onehot' requires a dense J (the MXU "
                              "contraction cannot consume packed planes)")
@@ -238,6 +317,7 @@ def mcmc_sweep(couplings, fields0: jax.Array, spins0: jax.Array,
     if n % lane:
         raise ValueError(f"N={n} not divisible by lane={lane}")
     grid = (r // br,)
+    scratch_shapes = []
     if coupling == "bitplane":
         bp, _, w = couplings.pos.shape
         in_specs = [
@@ -245,6 +325,20 @@ def mcmc_sweep(couplings, fields0: jax.Array, spins0: jax.Array,
             pl.BlockSpec((bp, n, w), lambda i: (0, 0, 0)),  # neg planes bcast
         ]
         j_args = [couplings.pos, couplings.neg]
+    elif coupling == "bitplane_hbm":
+        bp, _, w = couplings.pos.shape
+        # Planes never enter the block pipeline: ANY pins them to HBM and the
+        # kernel streams (B, 1, W) row tiles into the 2-slot VMEM scratch.
+        in_specs = [
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ]
+        j_args = [couplings.pos, couplings.neg]
+        scratch_shapes = [
+            pltpu.VMEM((2, bp, 1, w), jnp.uint32),   # pos row tiles
+            pltpu.VMEM((2, bp, 1, w), jnp.uint32),   # neg row tiles
+            pltpu.SemaphoreType.DMA((2, 2)),          # (slot, sign) DMAs
+        ]
     else:
         in_specs = [pl.BlockSpec((n, n), lambda i: (0, 0))]  # J broadcast
         j_args = [couplings]
@@ -281,6 +375,7 @@ def mcmc_sweep(couplings, fields0: jax.Array, spins0: jax.Array,
             jax.ShapeDtypeStruct((r, n), spins0.dtype),
             jax.ShapeDtypeStruct((r, 1), jnp.int32),
         ],
+        scratch_shapes=scratch_shapes,
         interpret=interpret,
     )(*args)
     u, s, e, be, bs, nf = outs

@@ -150,6 +150,88 @@ def test_fused_bitplane_matches_oracle_exactly(mode, variant):
                                       err_msg=f"{mode}/{variant}:{name} planes-vs-dense")
 
 
+def _three_way_matrix(n, r, t, *, b=2, block_r=4, warm_chunks=2):
+    """Dense-kernel vs VMEM-bitplane vs HBM-streamed-bitplane vs both oracles,
+    exercising warm-start (state threaded through ``warm_chunks`` consecutive
+    sweeps), the PWL LUT, and per-replica temperature ladders. Every pair must
+    agree trajectory-exactly (assert_array_equal) — the coupling store is a
+    memory-layout choice, never a chain change."""
+    g = np.random.default_rng(97)
+    J = np.clip(np.rint(g.normal(size=(n, n)) * 1.5), -(2 ** b - 1), 2 ** b - 1)
+    J = np.triu(J, 1)
+    J = (J + J.T).astype(np.float32)
+    planes = bitplane.encode_couplings(J, b)
+    planes_hbm = ops_mod().encode_for_sweep(J, b, fmt="bitplane_hbm")
+    s0 = np.where(g.random((r, n)) < 0.5, 1.0, -1.0).astype(np.float32)
+    u0 = (s0 @ J.T).astype(np.float32)
+    e0 = (-0.5 * np.einsum("ri,ri->r", s0, s0 @ J.T)).astype(np.float32)
+    # Per-replica geometric ladders, distinct per replica (tempering's shape).
+    ladder = np.geomspace(4.0, 0.1, r).astype(np.float32)
+    temps = np.broadcast_to(ladder[None, :], (t, r)).copy()
+    tbl = pwl_table()
+
+    backends = {
+        "dense": dict(couplings=jnp.asarray(J), coupling="dense"),
+        "bitplane": dict(couplings=planes, coupling="bitplane"),
+        "bitplane_hbm": dict(couplings=planes_hbm, coupling="bitplane_hbm"),
+    }
+    state0 = tuple(map(jnp.asarray, (u0, s0, e0)))
+    outs = {}
+    for name, kw in backends.items():
+        state = state0
+        for c in range(warm_chunks):  # chunk c>0 warm-starts from chunk c-1
+            unif = jnp.asarray(
+                np.random.default_rng(1000 + c).random((t, r, 4)), jnp.float32)
+            got = sweep_kernel(kw["couplings"], *state, unif,
+                               jnp.asarray(temps), tbl, mode="rwa",
+                               coupling=kw["coupling"], block_r=block_r,
+                               interpret=True)
+            state = got[:3]
+        outs[name] = got
+    oracle_state = state0
+    for c in range(warm_chunks):
+        unif = jnp.asarray(
+            np.random.default_rng(1000 + c).random((t, r, 4)), jnp.float32)
+        want = ref.mcmc_sweep(planes, *oracle_state, unif, jnp.asarray(temps),
+                              tbl, mode="rwa")
+        want_dense = ref.mcmc_sweep(jnp.asarray(J), *oracle_state, unif,
+                                    jnp.asarray(temps), tbl, mode="rwa")
+        oracle_state = want[:3]
+    for name in NAMES:
+        i = NAMES.index(name)
+        base = np.asarray(outs["dense"][i], np.float32)
+        for other in ("bitplane", "bitplane_hbm"):
+            np.testing.assert_array_equal(
+                base, np.asarray(outs[other][i], np.float32),
+                err_msg=f"dense-vs-{other}:{name}")
+        np.testing.assert_array_equal(base, np.asarray(want[i], np.float32),
+                                      err_msg=f"kernel-vs-planes-oracle:{name}")
+        np.testing.assert_array_equal(base, np.asarray(want_dense[i], np.float32),
+                                      err_msg=f"kernel-vs-dense-oracle:{name}")
+
+
+def ops_mod():
+    from repro.kernels import ops
+    return ops
+
+
+def test_three_way_coupling_parity_small():
+    """Default tier: the full dense/VMEM-plane/HBM-plane matrix at a shrunk
+    size (trajectory-exactness is size-independent; the full past-the-wall
+    size runs behind -m slow)."""
+    _three_way_matrix(n=640, r=8, t=16)
+
+
+@pytest.mark.slow
+def test_three_way_coupling_parity_past_vmem_wall():
+    """Full-size matrix at N just past BITPLANE_VMEM_MAX_N — the size class
+    where, on real TPUs, only the HBM-streamed store fits on-chip memory
+    (interpret mode has no VMEM ceiling, so all three paths still run and
+    must agree exactly)."""
+    n = ops_mod().BITPLANE_VMEM_MAX_N + 192  # 8192: past the wall, lane-tiled
+    _three_way_matrix(n=n, r=2, t=6, block_r=2, warm_chunks=2)
+
+
 def test_sweep_bitplane_rejects_mismatches():
     r, n, t = 4, 64, 8
     g = np.random.default_rng(3)
@@ -170,6 +252,13 @@ def test_sweep_bitplane_rejects_mismatches():
     with pytest.raises(ValueError, match="coupling"):
         sweep_kernel(planes, u0, s0, e0, unif, temps, coupling="packed",
                      interpret=True)
+    # The HBM-streamed tier enforces the same contracts as the VMEM tier.
+    with pytest.raises(TypeError, match="BitPlanes"):
+        sweep_kernel(jnp.asarray(J, jnp.float32), u0, s0, e0, unif, temps,
+                     coupling="bitplane_hbm", interpret=True)
+    with pytest.raises(ValueError, match="onehot"):
+        sweep_kernel(planes, u0, s0, e0, unif, temps, coupling="bitplane_hbm",
+                     gather="onehot", interpret=True)
 
 
 def test_sweep_block_r_clamps_to_divisor():
@@ -299,21 +388,23 @@ def test_distributed_fused_backend_single_device():
 
 
 def test_solve_fused_bitplane_format_matches_dense_exactly():
-    """`coupling_format="bitplane"` changes the J store, not the chain: the
-    fused driver returns bit-identical results for an integer-J problem
-    (plane-decoded rows and the popcount u₀ init are exact in f32)."""
+    """`coupling_format="bitplane"`/`"bitplane_hbm"` change the J store, not
+    the chain: the fused driver returns bit-identical results for an
+    integer-J problem (plane-decoded rows and the popcount u₀ init are exact
+    in f32, and the streamed rows decode through the same expansion)."""
     prob = ising.IsingProblem.create(J=_sym(5, 12, integer=True, scale=2.0))
     cfg = SolverConfig(num_steps=1024, schedule=geometric(6.0, 0.02, 1024),
                        mode="rwa", num_replicas=8, trace_every=128)
     dense = solve(prob, 3, dataclasses.replace(cfg, coupling_format="dense"),
                   backend="fused")
-    packed = solve(prob, 3, dataclasses.replace(cfg, coupling_format="bitplane"),
-                   backend="fused")
-    for name in ("best_energy", "best_spins", "final_energy", "num_flips",
-                 "trace_energy"):
-        np.testing.assert_array_equal(np.asarray(getattr(dense, name)),
-                                      np.asarray(getattr(packed, name)),
-                                      err_msg=name)
+    for fmt in ("bitplane", "bitplane_hbm"):
+        packed = solve(prob, 3, dataclasses.replace(cfg, coupling_format=fmt),
+                       backend="fused")
+        for name in ("best_energy", "best_spins", "final_energy", "num_flips",
+                     "trace_energy"):
+            np.testing.assert_array_equal(np.asarray(getattr(dense, name)),
+                                          np.asarray(getattr(packed, name)),
+                                          err_msg=f"{fmt}:{name}")
 
 
 def test_coupling_format_auto_resolution():
@@ -328,6 +419,12 @@ def test_coupling_format_auto_resolution():
         "auto", J_int, ops.DENSE_COUPLING_MAX_N + 1) == "bitplane"
     assert ops.resolve_coupling_format(
         "auto", J_frac, ops.DENSE_COUPLING_MAX_N + 1) == "dense"
+    # Past the packed-VMEM wall "auto" escalates to the HBM-streamed tier.
+    assert ops.resolve_coupling_format(
+        "auto", J_int, ops.BITPLANE_VMEM_MAX_N) == "bitplane"
+    assert ops.resolve_coupling_format(
+        "auto", J_int, ops.BITPLANE_VMEM_MAX_N + 1) == "bitplane_hbm"
+    assert ops.resolve_coupling_format("bitplane_hbm", J_int, 64) == "bitplane_hbm"
     # Integral but huge magnitudes: 2·B ≥ 32 bits/coupler would not shrink J,
     # so "auto" must stay dense rather than pack a bigger-than-f32 store.
     assert ops.resolve_coupling_format(

@@ -1,0 +1,113 @@
+"""Tier-1 wiring for ``benchmarks.run --check``: the committed perf anchor
+must always validate, and the checker must actually have teeth — perf-touching
+PRs regress ``BENCH_solver_perf.json`` and this gate is what stops a silently
+slower fused engine (or a hand-mangled history) from landing."""
+import copy
+import json
+import os
+
+import pytest
+
+from benchmarks.run import BENCH_JSON, check_bench_history
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(BENCH_JSON),
+    reason="BENCH_solver_perf.json not present (fresh checkout before any "
+           "benchmark run)")
+
+
+def _load():
+    with open(BENCH_JSON) as f:
+        return json.load(f)
+
+
+def test_committed_bench_json_is_healthy():
+    payload = _load()
+    assert check_bench_history(payload) == []
+
+
+def test_committed_history_has_hbm_streamed_point():
+    """The scaling story is anchored by recorded sizes each VMEM tier cannot
+    reach: the N=4096 packed point and the N=16384 HBM-streamed point."""
+    payload = _load()
+    results = payload["results"]
+    assert "N16384" in results, sorted(results)
+    point = results["N16384"]["rsa"]
+    assert point["num_planes"] >= 1
+    # The streamed store must be the only tier that fits: dense f32 is 1 GiB,
+    # VMEM planes 4x the 16 MiB budget.
+    assert point["j_bytes_dense_f32"] == 16384 * 16384 * 4
+    assert point["j_bytes_vmem_planes"] > 16 * 2 ** 20
+    assert point["bitplane_hbm_us_per_step"] > 0
+
+
+def test_check_flags_missing_fields():
+    payload = _load()
+    broken = copy.deepcopy(payload)
+    del broken["history"]
+    assert any("history" in e for e in check_bench_history(broken))
+    broken = copy.deepcopy(payload)
+    del broken["history"][-1]["run_id"]
+    assert any("run_id" in e for e in check_bench_history(broken))
+
+
+def test_check_flags_duplicate_run_ids():
+    payload = _load()
+    broken = copy.deepcopy(payload)
+    broken["history"].append(copy.deepcopy(broken["history"][-1]))
+    assert any("duplicate" in e for e in check_bench_history(broken))
+
+
+def test_check_reports_non_dict_history_entry_instead_of_crashing():
+    payload = _load()
+    broken = copy.deepcopy(payload)
+    broken["history"].insert(0, "oops")
+    errors = check_bench_history(broken)  # must not raise
+    assert any("not an object" in e for e in errors)
+
+
+def test_rerecording_a_stamp_replaces_instead_of_duplicating():
+    """A rerun with the same --run-id (or two unstamped scratch runs) must
+    keep the history --check-clean: write_bench_json replaces the prior
+    entry for that stamp rather than appending a colliding duplicate."""
+    import benchmarks.bench_solver_perf as bsp
+
+    out = {(512, "rsa", "baseline"): 10.0, (512, "rsa", "fused"): 5.0}
+    path = os.path.join(os.path.dirname(BENCH_JSON), "_tmp_bench_test.json")
+    orig = bsp.BENCH_JSON
+    bsp.BENCH_JSON = path
+    try:
+        bsp.write_bench_json(out, run_id=None)
+        bsp.write_bench_json(out, run_id=None)      # second unstamped run
+        bsp.write_bench_json(out, run_id="pr-x")
+        bsp.write_bench_json(out, run_id="pr-x")    # re-recorded stamp
+        with open(path) as f:
+            payload = json.load(f)
+        stamps = [h["run_id"] for h in payload["history"]]
+        assert stamps == ["unstamped", "pr-x"]
+        assert check_bench_history(payload) == []
+    finally:
+        bsp.BENCH_JSON = orig
+        if os.path.exists(path):
+            os.remove(path)
+
+
+def test_check_flags_diverged_top_level_results():
+    payload = _load()
+    broken = copy.deepcopy(payload)
+    broken["results"] = {"N1": {}}
+    assert any("mirror" in e for e in check_bench_history(broken))
+
+
+def test_check_flags_fused_regression():
+    payload = _load()
+    broken = copy.deepcopy(payload)
+    cell = {"baseline_us_per_step": 100.0, "fused_us_per_step": 131.0,
+            "fused_speedup": 100.0 / 131.0}
+    broken["history"][-1]["results"]["N512"]["rsa"] = cell
+    broken["results"] = broken["history"][-1]["results"]
+    errors = check_bench_history(broken)
+    assert any("regression gate" in e for e in errors), errors
+    # ...and the gate is a gate, not a tripwire for noise: 1.29x passes.
+    cell["fused_us_per_step"] = 129.0
+    assert check_bench_history(broken) == []

@@ -100,6 +100,45 @@ def test_local_fields_batched_replicas():
     np.testing.assert_allclose(u, s.astype(np.float64) @ J.T, atol=1e-3)
 
 
+def test_encode_align_words_pads_invisibly():
+    """Tile alignment for the HBM-streamed row DMAs: ``align_words`` rounds W
+    up with zero bits, and every consumer — decode round-trip, Hamming-weight
+    local fields, word-count bookkeeping — is padding-blind."""
+    rng = np.random.default_rng(3)
+    n, b = 70, 3  # ceil(70/32) = 3 words -> padded to 128
+    J = rng.integers(-7, 8, size=(n, n)).astype(np.int64)
+    J = np.triu(J, 1)
+    J = J + J.T
+    plain = bitplane.encode_couplings(J, b)
+    padded = bitplane.encode_couplings(J, b, align_words=128)
+    assert plain.num_words == 3 and padded.num_words == 128
+    assert padded.pos.shape == (b, n, 128)
+    np.testing.assert_array_equal(bitplane.decode_couplings(padded), J)
+    np.testing.assert_array_equal(np.asarray(padded.pos[..., :3]),
+                                  np.asarray(plain.pos))
+    assert not np.asarray(padded.pos[..., 3:]).any()
+    s = np.where(rng.random(n) < 0.5, 1, -1).astype(np.int8)
+    np.testing.assert_array_equal(
+        np.asarray(bitplane.local_fields_from_planes(padded, jnp.asarray(s))),
+        np.asarray(bitplane.local_fields_from_planes(plain, jnp.asarray(s))))
+
+
+def test_pack_spins_num_words_pads_with_zero_words():
+    s = np.where(np.random.default_rng(1).random(70) < 0.5, 1, -1)
+    base = np.asarray(bitplane.pack_spins(jnp.asarray(s)))
+    padded = np.asarray(bitplane.pack_spins(jnp.asarray(s), num_words=8))
+    assert padded.shape == (8,)
+    np.testing.assert_array_equal(padded[:3], base)
+    assert not padded[3:].any()
+    with pytest.raises(ValueError, match="num_words"):
+        bitplane.pack_spins(jnp.asarray(s), num_words=2)
+
+
+def test_encode_rejects_bad_alignment():
+    with pytest.raises(ValueError, match="align_words"):
+        bitplane.encode_couplings(np.zeros((4, 4)), 2, align_words=0)
+
+
 def test_memory_scales_linearly_in_planes():
     """Paper's scalability claim: bytes grow linearly with precision B."""
     J = np.zeros((64, 64))

@@ -151,6 +151,24 @@ def test_sweep_bitplane_step_has_no_quadratic_contraction():
     assert "dot_general" not in trace
 
 
+def test_sweep_bitplane_hbm_step_has_no_quadratic_contraction():
+    """The HBM-streamed coupling path keeps the O(N)/step contract too: rows
+    arrive by DMA and decode through the same shift-and-mask expansion, so
+    the step jaxpr must contain no dot_general — and must actually stream
+    (the copy primitive appears; the planes never enter a blocked load)."""
+    rng = np.random.default_rng(0)
+    r, n, t = 4, 128, 8
+    J = _sym(rng, n, integer=True, scale=2.0)
+    planes = bitplane.encode_couplings(np.clip(J, -7, 7), 3)
+    _, u0, s0, e0, unif, temps = _sweep_inputs(rng, np.clip(J, -7, 7), r, n, t)
+    trace = str(jax.make_jaxpr(
+        lambda *a: sweep_kernel(planes, *a, mode="rwa", block_r=4,
+                                coupling="bitplane_hbm", interpret=True))(
+        u0, s0, e0, unif, temps))
+    assert "dot_general" not in trace
+    assert "dma_start" in trace and "dma_wait" in trace
+
+
 def test_bitplane_field_kernel_clamps_blocks():
     """Non-dividing block_r/block_n fall back to the largest divisors
     (R=12/block_r=8 → 6; N=96/block_n=64 → 48) instead of raising."""

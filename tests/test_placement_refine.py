@@ -1,0 +1,161 @@
+"""Unit tier for ``core/placement.py`` and ``core/refine.py`` invariants.
+
+Complements the end-to-end quality checks in test_graphs/test_extensions with
+the contracts those tests cannot pin: placement determinism (stateless seeded
+solver ⇒ identical assignments), structural validity of the returned
+partition, hand-computable ``cut_bytes``/traffic-matrix algebra, and greedy
+descent's energy-never-increases + 1-opt-fixpoint contract across batch
+shapes. Property tests route through ``hypothesis_compat`` so they skip —
+individually — on hypothesis-less hosts.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core import ising, placement
+from repro.core.refine import greedy_descent
+
+
+def _traffic(seed, e=12, clusters=2):
+    g = np.random.default_rng(seed)
+    C = g.random((e, e)) * 0.2
+    step = e // clusters
+    for c in range(clusters):
+        C[c * step:(c + 1) * step, c * step:(c + 1) * step] += 3.0
+    C = np.triu(C, 1)
+    return C + C.T
+
+
+# ---------------------------------------------------------------- placement
+
+def test_place_is_deterministic_per_seed():
+    C = _traffic(3)
+    a = placement.place(C, num_devices=2, seed=7, steps=200, replicas=4)
+    b = placement.place(C, num_devices=2, seed=7, steps=200, replicas=4)
+    np.testing.assert_array_equal(a.assignment, b.assignment)
+    assert a.cut_bytes == b.cut_bytes and a.imbalance == b.imbalance
+
+
+def test_place_validity_invariants():
+    C = _traffic(5, e=16)
+    loads = np.ones(16)
+    res = placement.place(C, num_devices=4, loads=loads, seed=1, steps=200,
+                          replicas=4)
+    assert res.assignment.shape == (16,)
+    assert res.num_devices == 4
+    assert res.assignment.min() >= 0 and res.assignment.max() < 4
+    # Recursive bisection with the degenerate-split fallback never empties a
+    # device when E >= D.
+    assert np.bincount(res.assignment, minlength=4).min() >= 1
+    # Reported cut matches the standalone accounting on the same assignment.
+    assert res.cut_bytes == placement.cut_bytes(C, res.assignment)
+    # Imbalance is max/mean - 1 over device loads.
+    dev = np.array([loads[res.assignment == d].sum() for d in range(4)])
+    assert res.imbalance == pytest.approx(dev.max() / dev.mean() - 1.0)
+
+
+def test_place_rejects_non_power_of_two():
+    with pytest.raises(ValueError, match="power of two"):
+        placement.place(_traffic(0, e=9), num_devices=3)
+
+
+def test_cut_bytes_hand_example():
+    C = np.array([[0.0, 2.0, 3.0],
+                  [2.0, 0.0, 5.0],
+                  [3.0, 5.0, 0.0]])
+    # {0,1} vs {2}: cross edges (0,2)=3 and (1,2)=5.
+    assert placement.cut_bytes(C, np.array([0, 0, 1])) == 8.0
+    assert placement.cut_bytes(C, np.array([0, 0, 0])) == 0.0
+    assert placement.cut_bytes(C, np.array([0, 1, 2])) == 10.0
+
+
+def test_expert_traffic_matrix_properties():
+    g = np.random.default_rng(2)
+    probs = g.random((40, 6))
+    C = placement.expert_traffic_matrix(probs)
+    assert C.shape == (6, 6)
+    np.testing.assert_array_equal(np.diag(C), np.zeros(6))
+    np.testing.assert_allclose(C, C.T)
+    assert (C >= 0).all()
+    # Off-diagonals are co-activation inner products.
+    assert C[0, 1] == pytest.approx(float(probs[:, 0] @ probs[:, 1]))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_place_partitions_every_expert_exactly_once(seed):
+    C = _traffic(seed, e=8)
+    res = placement.place(C, num_devices=2, seed=seed % 1000, steps=64,
+                          replicas=2)
+    assert res.assignment.shape == (8,)
+    assert set(np.unique(res.assignment)) <= {0, 1}
+
+
+# ------------------------------------------------------------------- refine
+
+def _problem(seed, n):
+    g = np.random.default_rng(seed)
+    J = np.rint(g.normal(size=(n, n)) * 2.0)
+    J = np.triu(J, 1)
+    return ising.IsingProblem.create(J=(J + J.T).astype(np.float32))
+
+
+def test_greedy_descent_never_increases_energy_and_is_consistent():
+    problem = _problem(11, 24)
+    spins = ising.random_spins(jax.random.key(4), (5, 24))
+    e0 = np.asarray(ising.energy(problem, spins))
+    refined, e1 = greedy_descent(problem, spins)
+    e1 = np.asarray(e1)
+    assert refined.shape == spins.shape and e1.shape == (5,)
+    assert (e1 <= e0 + 1e-5).all()
+    np.testing.assert_allclose(e1, np.asarray(ising.energy(problem, refined)),
+                               atol=1e-3)
+    assert np.isin(np.asarray(refined), (-1, 1)).all()
+
+
+def test_greedy_descent_is_idempotent():
+    """A 1-opt fixpoint must survive a second descent unchanged — the
+    energy-never-increases contract composed with local optimality."""
+    problem = _problem(12, 16)
+    spins = ising.random_spins(jax.random.key(1), (3, 16))
+    once, e_once = greedy_descent(problem, spins)
+    twice, e_twice = greedy_descent(problem, once)
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+    np.testing.assert_array_equal(np.asarray(e_once), np.asarray(e_twice))
+
+
+def test_greedy_descent_respects_max_flips():
+    """With max_flips=0 the input must come back untouched (the cap bounds
+    the while_loop, so a zero budget is the identity)."""
+    problem = _problem(13, 16)
+    spins = ising.random_spins(jax.random.key(2), (2, 16))
+    refined, e = greedy_descent(problem, spins, max_flips=0)
+    np.testing.assert_array_equal(np.asarray(refined), np.asarray(spins))
+    np.testing.assert_allclose(np.asarray(e),
+                               np.asarray(ising.energy(problem, spins)),
+                               atol=1e-4)
+
+
+def test_greedy_descent_batch_shapes():
+    """The leading batch shape is preserved verbatim (vmapped over a
+    flattened replica axis internally)."""
+    problem = _problem(14, 12)
+    spins = ising.random_spins(jax.random.key(3), (2, 3, 12))
+    refined, e = greedy_descent(problem, spins)
+    assert refined.shape == (2, 3, 12)
+    assert e.shape == (2, 3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(4, 24))
+def test_greedy_descent_monotone_property(seed, n):
+    problem = _problem(seed, n)
+    spins = ising.random_spins(jax.random.fold_in(jax.random.key(0), seed),
+                               (2, n))
+    e0 = np.asarray(ising.energy(problem, spins))
+    refined, e1 = greedy_descent(problem, spins)
+    assert (np.asarray(e1) <= e0 + 1e-5).all()
+    de = np.asarray(ising.delta_energies(problem, refined))
+    assert (de >= -1e-3).all()  # 1-opt local optimum

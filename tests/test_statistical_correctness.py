@@ -1,0 +1,199 @@
+"""Statistical-correctness tier: the fused backend must not just match its
+oracle step-for-step — it must sample the *right distribution*.
+
+Exact step-parity (test_backend_parity) catches layout/arithmetic divergence
+but is blind to acceptance-rule bugs that both engines share: a sign error in
+ΔE, a mis-scaled flip probability, or a broken uniformization would still be
+"exactly equal" between kernel and oracle while silently sampling the wrong
+chain. This tier closes that hole on an exactly-enumerable instance (N ≤ 12):
+
+- Long fixed-temperature fused chains (RSA and uniformized-RWA — the two
+  modes whose transition kernels satisfy detailed balance w.r.t. the
+  Boltzmann measure; plain RWA is rejection-free and deliberately biased)
+  must reproduce the enumerated Boltzmann distribution in chi-squared and
+  total-variation distance, with power checks against wrong-temperature
+  nulls. The long chains run behind ``-m slow``.
+- At T=0 the chain degenerates to stochastic greedy descent: energy must be
+  monotone non-increasing at every chunk boundary (default tier — cheap).
+
+Chains are fully deterministic given the seed (stateless threefry streams),
+so the thresholds are calibrated, not flaky.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ising, rng
+from repro.kernels import ops
+
+
+def _tiny_problem(seed=11, n=6, scale=1.2):
+    g = np.random.default_rng(seed)
+    J = np.rint(g.normal(size=(n, n)) * scale)
+    J = np.triu(J, 1)
+    J = (J + J.T).astype(np.float32)
+    h = np.rint(g.normal(size=n)).astype(np.float32)
+    return ising.IsingProblem.create(J=J, h=h)
+
+
+def _enumerate_boltzmann(problem, temp):
+    """Exact Boltzmann p(s) ∝ exp(−E(s)/T) over all 2^N configurations."""
+    n = problem.num_spins
+    idx = np.arange(2 ** n)
+    spins = np.where((idx[:, None] >> np.arange(n)) & 1, 1.0, -1.0).astype(np.float32)
+    e = np.asarray(ising.energy(problem, jnp.asarray(spins)))
+    w = np.exp(-(e - e.min()) / temp)
+    return w / w.sum()
+
+
+def _state_index(spins):
+    """Map ±1 spin rows to the enumeration index (bit j set ⇔ s_j = +1)."""
+    bits = (np.asarray(spins) > 0).astype(np.int64)
+    return bits @ (1 << np.arange(bits.shape[-1], dtype=np.int64))
+
+
+def _chain_energies_and_samples(problem, temp, *, mode, uniformized, r,
+                                chunk, num_chunks, burn_chunks, seed=3):
+    """Run the fused backend at fixed T as ``num_chunks`` sweep chunks and
+    record the chain state at every post-burn-in chunk boundary, pooled over
+    the R independent replicas. Uses the production chunk driver + RNG
+    streams (``Salt.SWEEP``) so the chain under test is exactly the one
+    ``solve(backend="fused")`` runs."""
+    base = jax.random.fold_in(jax.random.key(0), jnp.uint32(seed))
+    state = ops.fused_init_state(problem, base, r, interpret=True)
+    temps = jnp.full((chunk, r), temp, jnp.float32)
+    samples, energies = [], []
+    for c in range(num_chunks):
+        state = ops.fused_sweep_chunk(
+            problem.couplings, state, rng.stream(base, rng.Salt.SWEEP, c),
+            chunk, temps, mode=mode, uniformized=uniformized, pwl_table=None,
+            block_r=r, interpret=True)
+        energies.append(np.asarray(state[2]))  # (R,) current energy
+        if c >= burn_chunks:
+            samples.append(_state_index(state[1]))
+    pooled = (np.concatenate(samples) if samples
+              else np.zeros((0,), np.int64))
+    return np.stack(energies), pooled
+
+
+def _tv_distance(counts, p_exact):
+    emp = counts / counts.sum()
+    return 0.5 * np.abs(emp - p_exact).sum()
+
+
+def _chi2_statistic(counts, p_exact):
+    """Pearson X² with low-expectation states pooled into one bin (the
+    classical ≥5-expected-counts rule). Returns (X², degrees of freedom)."""
+    m = counts.sum()
+    expected = p_exact * m
+    big = expected >= 5.0
+    obs = np.append(counts[big], counts[~big].sum())
+    exp = np.append(expected[big], expected[~big].sum())
+    keep = exp > 0
+    obs, exp = obs[keep], exp[keep]
+    return float(((obs - exp) ** 2 / exp).sum()), len(obs) - 1
+
+
+def _chi2_critical(df, alpha=1e-4):
+    """Upper-tail chi-squared critical value; scipy when present, else the
+    Wilson–Hilferty normal approximation (good to a few % at these df)."""
+    try:
+        from scipy.stats import chi2
+        return float(chi2.ppf(1.0 - alpha, df))
+    except ImportError:  # pragma: no cover - scipy-less hosts
+        from math import erf, sqrt
+        # invert Φ via bisection on erf — crude but dependency-free
+        lo, hi = 0.0, 10.0
+        target = 1.0 - alpha
+        for _ in range(80):
+            mid = (lo + hi) / 2
+            if 0.5 * (1 + erf(mid / sqrt(2))) < target:
+                lo = mid
+            else:
+                hi = mid
+        z = (lo + hi) / 2
+        return df * (1 - 2 / (9 * df) + z * np.sqrt(2 / (9 * df))) ** 3
+
+
+#: (mode, uniformized) pairs whose transition kernels are Boltzmann-stationary:
+#: RSA is random-scan Glauber; uniformized RWA is the paper's §IV-B3c
+#: uniformization of the Glauber-rate CTMC (W* = N). Plain RWA is
+#: rejection-free by construction and intentionally not Boltzmann-exact.
+BOLTZMANN_MODES = [("rsa", False), ("rwa", True)]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode,uniformized", BOLTZMANN_MODES)
+def test_fused_chain_samples_boltzmann(mode, uniformized):
+    problem = _tiny_problem()
+    temp = 2.5
+    n = problem.num_spins
+    p_exact = _enumerate_boltzmann(problem, temp)
+    _, idx = _chain_energies_and_samples(
+        problem, temp, mode=mode, uniformized=uniformized, r=16,
+        chunk=48, num_chunks=520, burn_chunks=40)
+    counts = np.bincount(idx, minlength=2 ** n).astype(np.float64)
+
+    # Chi-squared goodness of fit. Chunk-boundary samples retain a little
+    # autocorrelation (48 steps ≈ 8 sweeps apart), so the gate is a deep-tail
+    # critical value rather than the 5% one — a sign/scale bug in the
+    # acceptance rule inflates X² by orders of magnitude, not percent.
+    x2, df = _chi2_statistic(counts, p_exact)
+    assert x2 < 2.0 * _chi2_critical(df), (x2, df)
+
+    # Total-variation gate with power controls: the empirical law must sit
+    # close to the true temperature and clearly closer than wrong-T nulls.
+    tv = _tv_distance(counts, p_exact)
+    assert tv < 0.05, tv
+    for wrong_temp in (temp * 2.0, temp * 0.5):
+        tv_wrong = _tv_distance(counts, _enumerate_boltzmann(problem, wrong_temp))
+        assert tv_wrong > 3.0 * tv, (tv, tv_wrong, wrong_temp)
+
+
+@pytest.mark.slow
+def test_uniformized_rwa_matches_rsa_distribution():
+    """The two Boltzmann-stationary modes must agree with *each other* — a
+    bug in just one mode's acceptance rule shows up as a cross-mode TV gap
+    even if both pass the marginal gates."""
+    problem = _tiny_problem()
+    temp = 2.5
+    n = problem.num_spins
+    counts = {}
+    for mode, uniformized in BOLTZMANN_MODES:
+        _, idx = _chain_energies_and_samples(
+            problem, temp, mode=mode, uniformized=uniformized, r=16,
+            chunk=48, num_chunks=520, burn_chunks=40)
+        counts[mode] = np.bincount(idx, minlength=2 ** n).astype(np.float64)
+    emp_rsa = counts["rsa"] / counts["rsa"].sum()
+    tv_cross = 0.5 * np.abs(emp_rsa - counts["rwa"] / counts["rwa"].sum()).sum()
+    assert tv_cross < 0.07, tv_cross
+
+
+@pytest.mark.parametrize("mode,uniformized", BOLTZMANN_MODES)
+def test_zero_temperature_descent_is_monotone(mode, uniformized):
+    """T=0 collapses the chain to stochastic greedy descent (flip iff
+    ΔE ≤ 0): the per-replica energy trajectory must never increase across
+    chunk boundaries, and the final bookkeeping must match a fresh energy
+    recomputation from the spins."""
+    problem = _tiny_problem(seed=5, n=10)
+    energies, _ = _chain_energies_and_samples(
+        problem, 0.0, mode=mode, uniformized=uniformized, r=8,
+        chunk=16, num_chunks=12, burn_chunks=12)
+    assert np.isfinite(energies).all()
+    assert (np.diff(energies, axis=0) <= 1e-6).all(), \
+        "zero-T fused chain increased energy"
+
+
+def test_zero_temperature_energy_bookkeeping_consistent():
+    problem = _tiny_problem(seed=5, n=10)
+    base = jax.random.fold_in(jax.random.key(0), jnp.uint32(3))
+    state = ops.fused_init_state(problem, base, 8, interpret=True)
+    temps = jnp.zeros((64, 8), jnp.float32)
+    state = ops.fused_sweep_chunk(
+        problem.couplings, state, rng.stream(base, rng.Salt.SWEEP, 0),
+        64, temps, mode="rsa", pwl_table=None, block_r=8, interpret=True)
+    recomputed = np.asarray(ising.energy(problem, state[1]))
+    np.testing.assert_allclose(np.asarray(state[2]), recomputed, atol=1e-3)
+    best_recomputed = np.asarray(ising.energy(problem, state[4]))
+    np.testing.assert_allclose(np.asarray(state[3]), best_recomputed, atol=1e-3)
