@@ -163,42 +163,27 @@ def run_bitplane_hbm_point(emit: CsvEmitter) -> dict:
     }
 
 
-def write_bench_json(out: dict, run_id: str | None = None) -> None:
-    """Persist the backend perf table (the cross-PR regression anchor).
-
-    The latest ``results`` stay at the top level for regression tooling;
-    every recorded run is also appended to ``history`` with the caller's
-    ``run_id`` stamp (a CLI argument — deliberately not a clock read, so
-    reruns are reproducible and the stamp is auditable in the PR).
-    """
-    import jax
-
-    results = {}
-    for n in (512, 2000):
-        results[f"N{n}"] = {}
-        for mode in ("rsa", "rwa"):
-            base = out.get((n, mode, "baseline"))
-            fused = out.get((n, mode, "fused"))
-            results[f"N{n}"][mode] = {
-                "baseline_us_per_step": base,
-                "fused_us_per_step": fused,
-                "fused_speedup": (base / fused) if base and fused else None,
-            }
-    if out.get("bitplane"):
-        results[f"N{BITPLANE_N}"] = {"rsa": out["bitplane"]}
-    if out.get("bitplane_hbm"):
-        results[f"N{HBM_N}"] = {"rsa": out["bitplane_hbm"]}
-    history = []
+def _load_bench_json() -> dict:
     if os.path.exists(BENCH_JSON):
         try:
             with open(BENCH_JSON) as f:
-                prev = json.load(f)
-            history = prev.get("history", [])
-            if not history and prev.get("results"):
-                # Legacy single-snapshot file: preserve it as the first entry.
-                history = [{"run_id": "pre-history", "results": prev["results"]}]
+                return json.load(f)
         except (OSError, ValueError):
-            history = []
+            pass
+    return {}
+
+
+def _write_payload(results: dict, run_id: str | None) -> None:
+    """Persist a full ``results`` table as the latest run (the append-only
+    history machinery shared by :func:`write_bench_json` and
+    :func:`merge_bench_results`)."""
+    import jax
+
+    prev = _load_bench_json()
+    history = prev.get("history", [])
+    if not history and prev.get("results"):
+        # Legacy single-snapshot file: preserve it as the first entry.
+        history = [{"run_id": "pre-history", "results": prev["results"]}]
     # Re-recording a stamp (or another unstamped scratch run) replaces the
     # prior entry instead of appending a duplicate — ``--check`` enforces
     # unique stamps, so a legal rerun must never corrupt the history.
@@ -224,6 +209,48 @@ def write_bench_json(out: dict, run_id: str | None = None) -> None:
         json.dump(payload, f, indent=2)
         f.write("\n")
     print(f"# wrote {BENCH_JSON} (history entries: {len(history)})", flush=True)
+
+
+def write_bench_json(out: dict, run_id: str | None = None) -> None:
+    """Persist the backend perf table (the cross-PR regression anchor).
+
+    The latest ``results`` stay at the top level for regression tooling;
+    every recorded run is also appended to ``history`` with the caller's
+    ``run_id`` stamp (a CLI argument — deliberately not a clock read, so
+    reruns are reproducible and the stamp is auditable in the PR).
+    """
+    results = {}
+    for n in (512, 2000):
+        results[f"N{n}"] = {}
+        for mode in ("rsa", "rwa"):
+            base = out.get((n, mode, "baseline"))
+            fused = out.get((n, mode, "fused"))
+            results[f"N{n}"][mode] = {
+                "baseline_us_per_step": base,
+                "fused_us_per_step": fused,
+                "fused_speedup": (base / fused) if base and fused else None,
+            }
+    if out.get("bitplane"):
+        results[f"N{BITPLANE_N}"] = {"rsa": out["bitplane"]}
+    if out.get("bitplane_hbm"):
+        results[f"N{HBM_N}"] = {"rsa": out["bitplane_hbm"]}
+    # A full solver_perf run refreshes its own cells but must not drop cells
+    # another suite owns (e.g. solver_sharded's N*_sharded point) from the
+    # latest results — merge over the previous top level.
+    merged = dict(_load_bench_json().get("results") or {})
+    merged.update(results)
+    _write_payload(merged, run_id)
+
+
+def merge_bench_results(partial_results: dict, run_id: str | None = None) -> None:
+    """Merge one suite's cells into the latest results (used by suites that
+    own a subset of the table, e.g. ``solver_sharded``). Re-using the stamp
+    of a run recorded moments earlier folds both suites into one history
+    entry; a fresh stamp records a new entry that carries the other cells
+    forward unchanged."""
+    merged = dict(_load_bench_json().get("results") or {})
+    merged.update(partial_results)
+    _write_payload(merged, run_id)
 
 
 def run_tempering_comparison(emit: CsvEmitter):

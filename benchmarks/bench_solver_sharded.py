@@ -1,0 +1,118 @@
+"""§Perf: the spin-sharded plane store (coupling tier 4) past the single-HBM
+wall.
+
+N=16384 — the same size as the single-device HBM-streamed anchor — solved by
+``repro.distributed.solver_sharded.solve_sharded`` on a forced 2-device host
+mesh: each device holds **half** the packed planes (and the matching slice of
+the local fields), so the recorded ``plane_bytes_per_device`` must be exactly
+half the streamed point's ``j_bytes_hbm_planes`` (``benchmarks.run --check``
+gates that identity). Per-step comms are the owner's (B, 1, W) row-tile
+broadcast plus the roulette's (R, N/lane) block sums — O(B·N/32) words, never
+the O(N²) store.
+
+Runs in a subprocess because XLA's host device count locks at the first jax
+init (the same reason ``tests/test_distributed.py`` subprocesses); the parent
+bench process stays single-device. Timing is the native-XLA shard_map path
+(no interpret-mode Pallas involved), so wall numbers are a relative signal
+against this file's own history, not against the interpret-mode tiers.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from .bench_solver_perf import merge_bench_results
+from .common import CsvEmitter
+from .subproc import REPO, run_forced_device_subprocess
+
+SHARDED_N = 16384
+SHARDED_STEPS = 48
+SHARDED_REPLICAS = 4
+SHARDED_DEVICES = 2
+
+_SUBPROCESS_CODE = """
+import json, time
+import jax, numpy as np
+from jax.sharding import Mesh
+from repro.configs.snowball import default_solver
+from repro.core.coupling import CouplingStore
+from repro.distributed.solver_sharded import solve_sharded
+from repro.graphs import complete_bipolar
+from repro.graphs.maxcut import maxcut_to_ising
+
+n, steps, reps, devices = {n}, {steps}, {reps}, {devices}
+assert jax.device_count() == devices, jax.device_count()
+inst = complete_bipolar(n, seed=n)
+prob = maxcut_to_ising(inst)
+store = CouplingStore.build(prob.couplings, "bitplane_sharded")
+mesh = Mesh(np.array(jax.devices()), ("spins",))
+cfg = default_solver(n, steps, mode="rsa", num_replicas=reps)
+# Pre-packed planes keep the timed region the sharded solve itself, not the
+# one-off host-side numpy encode.
+secs = float("inf")
+best = 0.0
+for _ in range(2):
+    t0 = time.perf_counter()
+    res = solve_sharded(prob, 0, cfg, mesh, coupling=store.planes)
+    jax.block_until_ready(res)
+    secs = min(secs, time.perf_counter() - t0)
+    best = float(np.min(np.asarray(res.best_energy)))
+planes = store.planes
+print("RESULT " + json.dumps({{
+    "n": n,
+    "mode": "rsa",
+    "num_devices": devices,
+    "num_replicas": reps,
+    "num_planes": int(planes.num_planes),
+    "sharded_us_per_step": secs / steps * 1e6,
+    "best_energy": best,
+    "plane_bytes_total": int(planes.nbytes),
+    "plane_bytes_per_device": int(store.plane_bytes_per_shard(devices)),
+    "row_broadcast_words_per_step":
+        int(2 * planes.num_planes * planes.num_words * reps),
+}}))
+"""
+
+
+def run_sharded_point(emit: CsvEmitter) -> dict:
+    """Time the N=16384 sharded solve on a forced 2-device mesh and return
+    the history cell (per-device plane-byte accounting + µs/step anchor)."""
+    code = _SUBPROCESS_CODE.format(n=SHARDED_N, steps=SHARDED_STEPS,
+                                   reps=SHARDED_REPLICAS,
+                                   devices=SHARDED_DEVICES)
+    proc = run_forced_device_subprocess(code, n_devices=SHARDED_DEVICES,
+                                        timeout=3600, cwd=REPO)
+    if proc.returncode != 0:
+        raise RuntimeError(f"sharded bench subprocess failed:\n"
+                           f"{proc.stderr[-4000:]}")
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    point = json.loads(line[len("RESULT "):])
+    point["comms"] = ("per step: psum of the owner's (B,1,W) pos/neg row "
+                      "tiles per replica + all_gather of (R, N/lane) "
+                      "roulette block sums")
+    point["dense_path"] = "cannot allocate: 1 GiB f32 J vs 16 MiB VMEM"
+    point["single_device_hbm_path"] = (
+        "fits, but J capacity capped by one device's HBM; sharding halves "
+        "per-device plane bytes and scales capacity with the mesh")
+    emit.add(
+        f"solver/N{point['n']}/rsa/sharded_d{point['num_devices']}",
+        point["sharded_us_per_step"],
+        f"best_E={point['best_energy']:.0f};"
+        f"plane_bytes_per_device={point['plane_bytes_per_device']};"
+        f"plane_bytes_total={point['plane_bytes_total']};"
+        f"bcast_words={point['row_broadcast_words_per_step']}")
+    return point
+
+
+def main(run_id: str | None = None):
+    emit = CsvEmitter()
+    point = run_sharded_point(emit)
+    merge_bench_results({f"N{SHARDED_N}_sharded": {"rsa": point}},
+                        run_id=run_id)
+    return point
+
+
+if __name__ == "__main__":
+    rid = (sys.argv[sys.argv.index("--run-id") + 1]
+           if "--run-id" in sys.argv else None)
+    main(run_id=rid)

@@ -90,6 +90,53 @@ def check_bench_history(payload: dict,
                     f"{n_key}/{mode}: fused {fused:.1f} µs/step is "
                     f"{fused / base:.2f}x the baseline's {base:.1f} — over "
                     f"the {max_ratio}x regression gate")
+    errors.extend(check_sharded_points(latest))
+    return errors
+
+
+def check_sharded_points(latest: dict) -> list[str]:
+    """Schema + memory gate for spin-sharded cells (``N*_sharded`` keys,
+    written by the ``solver_sharded`` suite): the per-device plane bytes must
+    divide the store evenly across ≥ 2 devices, and when the matching
+    single-device HBM-streamed point exists at the same N, the sharded store
+    must be *that* store divided across the mesh — the D× capacity claim is
+    an identity on recorded bytes, not prose."""
+    errors = []
+    for n_key, modes in sorted(latest.items()):
+        if not n_key.endswith("_sharded") or not isinstance(modes, dict):
+            continue
+        for mode, cell in sorted(modes.items()):
+            if not isinstance(cell, dict):
+                continue
+            devices = cell.get("num_devices")
+            per_dev = cell.get("plane_bytes_per_device")
+            total = cell.get("plane_bytes_total")
+            us = cell.get("sharded_us_per_step")
+            if not all(isinstance(v, int) for v in (devices, per_dev, total)):
+                errors.append(
+                    f"{n_key}/{mode}: sharded point needs integer "
+                    "num_devices / plane_bytes_per_device / plane_bytes_total")
+                continue
+            if devices < 2:
+                errors.append(f"{n_key}/{mode}: sharded point must span >= 2 "
+                              f"devices, got {devices}")
+            if per_dev * devices != total:
+                errors.append(
+                    f"{n_key}/{mode}: plane_bytes_per_device {per_dev} x "
+                    f"{devices} devices != plane_bytes_total {total} — "
+                    "row-sharding must divide the store evenly")
+            if not (isinstance(us, (int, float)) and us > 0):
+                errors.append(f"{n_key}/{mode}: missing positive "
+                              "sharded_us_per_step")
+            single = latest.get(n_key[:-len("_sharded")])
+            hbm_cell = single.get(mode) if isinstance(single, dict) else None
+            hbm_bytes = (hbm_cell or {}).get("j_bytes_hbm_planes")
+            if isinstance(hbm_bytes, int) and per_dev * devices != hbm_bytes:
+                errors.append(
+                    f"{n_key}/{mode}: sharded per-device bytes x devices = "
+                    f"{per_dev * devices} B but the single-device streamed "
+                    f"store is {hbm_bytes} B — the shards must be the same "
+                    f"planes divided {devices} ways")
     return errors
 
 
@@ -123,8 +170,8 @@ def main(argv=None) -> None:
         sys.exit(run_check())
 
     from . import (bench_fig14_incremental, bench_fig15_bitplane,
-                   bench_roofline, bench_solver_perf, bench_table2_gset,
-                   bench_table3_tts)
+                   bench_roofline, bench_solver_perf, bench_solver_sharded,
+                   bench_table2_gset, bench_table3_tts)
 
     print("name,us_per_call,derived")
     suites = [
@@ -134,6 +181,8 @@ def main(argv=None) -> None:
         ("fig15_bitplane", bench_fig15_bitplane.main),        # Fig 15 + Fig 8
         ("solver_perf",                                 # §Perf solver engines
          partial(bench_solver_perf.main, run_id=args.run_id)),
+        ("solver_sharded",                              # spin-sharded tier
+         partial(bench_solver_sharded.main, run_id=args.run_id)),
         ("roofline", bench_roofline.main),             # §Roofline table
     ]
     if args.suite is not None:

@@ -1,0 +1,37 @@
+"""Forced-device-count subprocess harness.
+
+XLA's host platform device count locks at the first jax initialization, so
+anything that needs a multi-device CPU mesh — the multi-device tier-1 tests
+(``tests/conftest.run_with_forced_devices``) and the spin-sharded benchmark
+suite (``benchmarks/bench_solver_sharded.py``) — must run in a fresh
+subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set
+before import. This module is the single copy of that env plumbing
+(deliberately dependency-free so test collection never imports jax through
+it); callers decide how to handle a non-zero exit.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_forced_device_subprocess(code: str, n_devices: int = 8,
+                                 timeout: int = 420,
+                                 cwd: str | None = None
+                                 ) -> subprocess.CompletedProcess:
+    """Run ``code`` under a forced ``n_devices``-device CPU platform with the
+    repo's ``src`` prepended to PYTHONPATH. Returns the completed process
+    (stdout/stderr captured as text); does not raise on failure."""
+    pythonpath = os.path.join(REPO, "src")
+    if os.environ.get("PYTHONPATH"):
+        pythonpath = pythonpath + os.pathsep + os.environ["PYTHONPATH"]
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={n_devices}",
+               PYTHONPATH=pythonpath)
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, env=env,
+                          timeout=timeout, cwd=cwd)

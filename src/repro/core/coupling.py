@@ -1,0 +1,272 @@
+"""First-class coupling-store subsystem: every J tier behind one descriptor.
+
+The fused backend stores the coupling matrix in one of four tiers (paper
+§IV-B1 makes configurable coupling precision the digital machine's edge; the
+reuse-aware near-memory Ising literature makes J *placement* the central
+design axis):
+
+* ``dense``            — (N, N) f32, VMEM-resident (the f32 wall at N≈2000).
+* ``bitplane``         — packed signed bit-planes in VMEM, 2·B bits/coupler
+                         (the N≈2000 → N≈11k wall move).
+* ``bitplane_hbm``     — the same planes resident in HBM, selected rows
+                         double-buffered through VMEM scratch (N-ceiling =
+                         single-device HBM).
+* ``bitplane_sharded`` — the planes **row-sharded across the mesh** (device d
+                         owns rows [d·N/D, (d+1)·N/D) plus the matching slice
+                         of the local fields u); J capacity scales with
+                         aggregate HBM, D× past the single-device wall. Spin
+                         selection is a local partial roulette combined across
+                         devices; the flip broadcast is the owner's (B, 1, W)
+                         row tiles — O(B·N/32) words/step. Served by the
+                         spin-parallel driver
+                         ``repro.distributed.solver_sharded.solve_sharded``;
+                         the other three tiers are single-device kernel modes.
+
+Before this module existed the resolve→encode→(planes, fmt) plumbing was
+hand-rolled in every driver (``solve``, ``solve_tempering``,
+``solve_distributed``) and the format constants lived in ``kernels.ops``.
+Now :meth:`CouplingStore.build` is the single host-side entry point
+(plane packing is host-side numpy, so it must run *outside* jit — an explicit
+plane format under a jax trace raises), :data:`FORMATS` is the registry every
+consumer dispatches through, and the kernel-side contract is
+:func:`validate_kernel_operand` plus the store's ``kernel_operand``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+
+from .bitplane import BitPlanes, encode_couplings
+
+#: The f32 VMEM wall (DESIGN.md §Backends): above this N a dense f32 J no
+#: longer fits VMEM alongside the sweep state, so ``coupling_format="auto"``
+#: switches integral-J problems to the packed bit-plane store.
+DENSE_COUPLING_MAX_N = 2000
+
+#: The packed-VMEM wall: above this N even the bit-plane store (2·B bits per
+#: coupler; pos+neg = N²·B/4 bytes ≈ 16 MiB at N=8k, B=1) no longer fits VMEM
+#: alongside the sweep state, so ``coupling_format="auto"`` switches to the
+#: HBM-streamed plane store (``bitplane_hbm``).
+BITPLANE_VMEM_MAX_N = 8000
+
+#: Word-axis alignment for HBM-resident (streamed or sharded) planes: those
+#: paths move whole (B, 1, W) row tiles per step, so W is padded to the
+#: 128-word TPU lane tile (zero bits — decode truncates to N, so padding is
+#: representation-invisible).
+STREAM_ALIGN_WORDS = 128
+
+#: What the fused sweep holds per coupler: dense f32 = 32 bits; bit-planes =
+#: 2·B bits (pos + neg planes). Used by "auto" resolution and the benchmark's
+#: J-bytes accounting.
+DENSE_COUPLING_BITS = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class CouplingFormatSpec:
+    """Registry row for one resolved coupling format."""
+
+    name: str
+    packed: bool        #: consumes a packed ``BitPlanes`` (vs a dense (N, N) J)
+    align_words: int    #: word-axis padding the encoder applies for this tier
+    kernel_mode: bool   #: implemented by the single-device Pallas sweep kernel
+    summary: str
+
+
+#: The format registry — the single source of truth for which coupling tiers
+#: exist, how their planes are padded, and which execution path serves them.
+FORMATS: dict[str, CouplingFormatSpec] = {spec.name: spec for spec in (
+    CouplingFormatSpec("dense", False, 1, True,
+                       "(N, N) f32 J resident in VMEM"),
+    CouplingFormatSpec("bitplane", True, 1, True,
+                       "packed signed bit-planes resident in VMEM"),
+    CouplingFormatSpec("bitplane_hbm", True, STREAM_ALIGN_WORDS, True,
+                       "planes in HBM, rows streamed through VMEM scratch"),
+    CouplingFormatSpec("bitplane_sharded", True, STREAM_ALIGN_WORDS, False,
+                       "planes row-sharded across the mesh (spin-parallel)"),
+)}
+
+#: Valid values of the ``coupling_format`` knob on ``SolverConfig`` /
+#: ``TemperingConfig`` ("auto" + every registered format).
+COUPLING_FORMATS = ("auto",) + tuple(FORMATS)
+
+#: Formats whose payload is a packed ``BitPlanes``.
+PLANE_FORMATS = tuple(s.name for s in FORMATS.values() if s.packed)
+
+#: Formats the single-device Pallas sweep kernel implements (the sharded tier
+#: is served by the spin-parallel shard_map driver instead).
+KERNEL_COUPLING_MODES = tuple(s.name for s in FORMATS.values() if s.kernel_mode)
+
+#: Kernel modes that consume a packed ``BitPlanes``.
+KERNEL_PLANE_MODES = tuple(
+    s.name for s in FORMATS.values() if s.packed and s.kernel_mode)
+
+
+def resolve_format(fmt: Optional[str], couplings, n: int) -> str:
+    """Resolve the ``coupling_format`` knob to a registered format name.
+
+    "auto" (or None) selects a packed store exactly when the couplings are
+    concrete (host-inspectable — encoding runs in numpy), integral, N is
+    past the f32 VMEM crossover (:data:`DENSE_COUPLING_MAX_N`), **and** the
+    packed store is actually smaller — 2·B bits per coupler must beat the 32
+    of dense f32, so integer magnitudes needing B ≥ 16 planes stay dense.
+    Past the packed-VMEM wall (:data:`BITPLANE_VMEM_MAX_N`) "auto" escalates
+    to "bitplane_hbm": planes in HBM, rows streamed through VMEM scratch.
+    "auto" never resolves to "bitplane_sharded" — the sharded tier needs a
+    mesh, so only its driver (or an explicit knob) selects it.
+    An explicit plane format under a jax trace raises — the planes cannot be
+    packed from a tracer; encode first and pass them in.
+    """
+    traced = isinstance(couplings, jax.core.Tracer)
+    if fmt in (None, "auto"):
+        if traced or n <= DENSE_COUPLING_MAX_N:
+            return "dense"
+        J = np.asarray(couplings)
+        if not np.array_equal(J, np.rint(J)):
+            return "dense"
+        num_planes = max(1, int(np.abs(J).max(initial=0)).bit_length())
+        if 2 * num_planes >= DENSE_COUPLING_BITS:
+            return "dense"
+        return "bitplane" if n <= BITPLANE_VMEM_MAX_N else "bitplane_hbm"
+    if fmt not in FORMATS:
+        raise ValueError(
+            f"coupling format must be one of {COUPLING_FORMATS}, got {fmt!r}")
+    if FORMATS[fmt].packed and traced:
+        raise ValueError(f"coupling_format={fmt!r} needs concrete couplings "
+                         "(plane packing happens on the host, outside jit)")
+    return fmt
+
+
+def encode_planes(couplings, num_planes: Optional[int] = None,
+                  fmt: str = "bitplane") -> BitPlanes:
+    """Pack a concrete integral J for a plane-backed coupling tier.
+
+    ``num_planes`` defaults to the fewest planes that represent |J|max
+    (B = bit_length(|J|max), ≥ 1) — memory is linear in B, so auto-selection
+    never over-allocates precision (paper §IV-B1). The word axis is padded to
+    the registry's per-format alignment (:data:`STREAM_ALIGN_WORDS` for the
+    HBM-streamed and sharded tiers) so each moved row tile is a
+    full-lane-width copy (padding is zero bits; decode truncates).
+    """
+    J = np.asarray(couplings)
+    if num_planes is None:
+        amax = int(np.abs(np.rint(J)).max(initial=0))
+        num_planes = max(1, amax.bit_length())
+    return encode_couplings(J, num_planes,
+                            align_words=FORMATS[fmt].align_words)
+
+
+def validate_kernel_operand(coupling: str, couplings, n: int,
+                            gather: str = "dynamic") -> None:
+    """The kernel-side contract: what ``kernels.sweep.mcmc_sweep`` may be fed
+    for each store mode (shared with the spin-sharded driver's own checks)."""
+    if coupling not in KERNEL_COUPLING_MODES:
+        raise ValueError(
+            f"coupling must be one of {KERNEL_COUPLING_MODES}, got {coupling!r}")
+    if coupling in KERNEL_PLANE_MODES:
+        if not isinstance(couplings, BitPlanes):
+            raise TypeError(f"coupling={coupling!r} needs a BitPlanes "
+                            f"couplings argument, got {type(couplings).__name__}")
+        validate_planes_cover(couplings, n)
+        if gather == "onehot":
+            raise ValueError("gather='onehot' requires a dense J (the MXU "
+                             "contraction cannot consume packed planes)")
+    else:
+        assert couplings.shape == (n, n)
+
+
+def validate_planes_cover(planes: BitPlanes, n: int) -> None:
+    """Shared shape contract for every plane consumer (kernel or sharded)."""
+    from .bitplane import WORD_BITS
+
+    if planes.num_spins != n:
+        raise ValueError(f"BitPlanes N={planes.num_spins} != state N={n}")
+    if planes.num_words * WORD_BITS < n:
+        raise ValueError(f"BitPlanes W={planes.num_words} words cannot "
+                         f"cover N={n} couplers")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CouplingStore:
+    """One J tier as a value: resolved format + its payload.
+
+    A pytree whose format/size live in the aux data, so jitted driver impls
+    can take a store directly (the format is static, the payload traced) —
+    replacing the ``(planes, fmt)`` tuples every driver used to hand-roll.
+    """
+
+    fmt: str
+    num_spins: int
+    dense: Optional[jax.Array] = None
+    planes: Optional[BitPlanes] = None
+
+    def tree_flatten(self):
+        return (self.dense, self.planes), (self.fmt, self.num_spins)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(fmt=aux[0], num_spins=aux[1], dense=children[0],
+                   planes=children[1])
+
+    @classmethod
+    def build(cls, couplings, fmt: Optional[str] = "auto", *,
+              num_planes: Optional[int] = None) -> "CouplingStore":
+        """The single host-side resolve→encode entry point every driver
+        dispatches through (``solve`` / ``solve_tempering`` /
+        ``solve_distributed`` / ``solve_sharded``). Runs outside jit: "auto"
+        under a trace quietly stays dense; an explicit plane format under a
+        trace raises (see :func:`resolve_format`)."""
+        n = int(couplings.shape[-1])
+        resolved = resolve_format(fmt, couplings, n)
+        if FORMATS[resolved].packed:
+            return cls(fmt=resolved, num_spins=n,
+                       planes=encode_planes(couplings, num_planes, resolved))
+        return cls(fmt=resolved, num_spins=n, dense=couplings)
+
+    @classmethod
+    def from_planes(cls, planes: BitPlanes, fmt: str = "bitplane") -> "CouplingStore":
+        """Wrap pre-packed planes (skips the O(N²·B) re-encode — the
+        benchmark / repeated-solve path)."""
+        if not FORMATS[fmt].packed:
+            raise ValueError(f"from_planes needs a plane format, got {fmt!r}")
+        return cls(fmt=fmt, num_spins=planes.num_spins, planes=planes)
+
+    @property
+    def spec(self) -> CouplingFormatSpec:
+        return FORMATS[self.fmt]
+
+    @property
+    def kernel_operand(self):
+        """What the sweep consumes: the packed planes or the dense J."""
+        return self.planes if self.spec.packed else self.dense
+
+    @property
+    def nbytes(self) -> int:
+        if self.spec.packed:
+            return self.planes.nbytes
+        return int(self.dense.size) * int(self.dense.dtype.itemsize)
+
+    def plane_bytes_per_shard(self, num_shards: int) -> int:
+        """Per-device plane bytes under row-sharding (the sharded tier's
+        memory accounting: total planes divided across the mesh)."""
+        if not self.spec.packed:
+            raise ValueError(f"{self.fmt!r} store has no planes to shard")
+        if self.num_spins % num_shards:
+            raise ValueError(f"N={self.num_spins} rows cannot shard evenly "
+                             f"over {num_shards} devices")
+        return self.planes.nbytes // num_shards
+
+    def require(self, supported: Sequence[str], driver: str) -> "CouplingStore":
+        """Driver-side registry check: raise if this store's tier is served
+        by a different execution path."""
+        if self.fmt not in tuple(supported):
+            hint = (" — the spin-sharded store is served by the spin-parallel "
+                    "driver repro.distributed.solver_sharded.solve_sharded"
+                    if self.fmt == "bitplane_sharded" else "")
+            raise ValueError(
+                f"coupling_format={self.fmt!r} is not supported by {driver} "
+                f"(supported: {tuple(supported)}){hint}")
+        return self

@@ -18,21 +18,14 @@ import jax
 import jax.numpy as jnp
 
 from . import ising, mcmc, rng
+# The CouplingFormat knob values ("auto" | "dense" | "bitplane" |
+# "bitplane_hbm" | "bitplane_sharded") now live in the first-class coupling
+# subsystem (``core.coupling``) — re-exported here for back-compat; see
+# ``core.coupling.FORMATS`` for what each tier means and which driver serves
+# it. The reference backend always consumes the dense J.
+from .coupling import COUPLING_FORMATS  # noqa: F401
 from .pwl import make_flip_probability, make_pwl_sigmoid
 from .schedules import Schedule
-
-
-#: Valid values of the ``CouplingFormat`` knob (``SolverConfig.coupling_format``
-#: / ``TemperingConfig.coupling_format``): how the *fused* backend stores J.
-#: "dense" = (N, N) f32 in VMEM; "bitplane" = packed signed planes in VMEM
-#: (``core.bitplane``, 2·B bits/coupler — the paper's §IV-B1 memory lever);
-#: "bitplane_hbm" = the same planes resident in HBM with selected rows
-#: streamed through a double-buffered VMEM scratch (the past-the-packed-wall
-#: tier); "auto" = packed exactly when J is integral and N exceeds the f32
-#: VMEM crossover (``kernels.ops.DENSE_COUPLING_MAX_N``), escalating to
-#: "bitplane_hbm" past ``kernels.ops.BITPLANE_VMEM_MAX_N``. The reference
-#: backend always consumes the dense J.
-COUPLING_FORMATS = ("auto", "dense", "bitplane", "bitplane_hbm")
 
 
 @dataclasses.dataclass(frozen=True)

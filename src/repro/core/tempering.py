@@ -133,13 +133,13 @@ def _solve_tempering_reference(problem: ising.IsingProblem, seed,
 
 
 def _solve_tempering_fused(problem: ising.IsingProblem, seed,
-                           config: TemperingConfig, planes,
-                           fmt: str = "dense") -> TemperingResult:
+                           config: TemperingConfig,
+                           store) -> TemperingResult:
     """Fused backend: each between-swap phase is one VMEM-resident sweep with
     the temperature ladder as the kernel's per-replica ``(T, R)`` tensor.
-    ``planes`` is the packed bit-plane J (or None for dense) and ``fmt`` the
-    resolved coupling store ("dense" | "bitplane" | "bitplane_hbm"), both
-    produced by the host-level dispatcher."""
+    ``store`` is the resolved ``core.coupling.CouplingStore`` (dense J or
+    packed planes; its format rides the pytree aux data, so it is static
+    here) produced by the host-level dispatcher."""
     from ..kernels import ops as _ops  # lazy: kernels.ops imports core.solver
 
     r = config.num_replicas
@@ -149,8 +149,8 @@ def _solve_tempering_fused(problem: ising.IsingProblem, seed,
     block_r = _ops.fit_block(r, 8)
     base = jax.random.fold_in(jax.random.key(0), jnp.asarray(seed, jnp.uint32))
     init_state = _ops.fused_init_state(problem, base, r, interpret=interpret,
-                                       planes=planes)
-    sweep_couplings = problem.couplings if planes is None else planes
+                                       planes=store.planes)
+    sweep_couplings = store.kernel_operand
     temps_trs = jnp.broadcast_to(temps[None, :], (config.swap_every, r))
     num_rounds = max(config.num_steps // config.swap_every, 1)
 
@@ -159,7 +159,7 @@ def _solve_tempering_fused(problem: ising.IsingProblem, seed,
         state = _ops.fused_sweep_chunk(
             sweep_couplings, state, rng.stream(base, rng.Salt.SWEEP, round_idx),
             config.swap_every, temps_trs, mode=config.mode, pwl_table=tbl,
-            block_r=block_r, coupling=fmt, interpret=interpret)
+            block_r=block_r, coupling=store.fmt, interpret=interpret)
         state, (a, t) = _swap_phase(state, lambda st: st[2], temps,
                                     base, round_idx, r)
         return (state, acc + a, tot + t), None
@@ -179,22 +179,21 @@ def _solve_tempering_fused(problem: ising.IsingProblem, seed,
 _solve_tempering_reference_jit = partial(
     jax.jit, static_argnames=("config",))(_solve_tempering_reference)
 _solve_tempering_fused_jit = partial(
-    jax.jit, static_argnames=("config", "fmt"))(_solve_tempering_fused)
+    jax.jit, static_argnames=("config",))(_solve_tempering_fused)
 
 
 def solve_tempering(problem: ising.IsingProblem, seed,
                     config: TemperingConfig) -> TemperingResult:
     """Host-level dispatcher (the engines underneath are jitted): the fused
-    path resolves ``config.coupling_format`` and packs bit-planes from the
-    concrete J before entering jit."""
+    path resolves ``config.coupling_format`` into a ``CouplingStore`` (one
+    ``build`` call packs bit-planes from the concrete J) before entering
+    jit."""
     if config.backend == "fused":
-        from ..kernels import ops as _ops  # lazy: kernels.ops imports core.solver
-        fmt = _ops.resolve_coupling_format(
-            config.coupling_format, problem.couplings, problem.num_spins)
-        planes = (_ops.encode_for_sweep(problem.couplings, fmt=fmt)
-                  if fmt in ("bitplane", "bitplane_hbm") else None)
-        return _solve_tempering_fused_jit(problem, seed, config, planes,
-                                          fmt=fmt)
+        from .coupling import KERNEL_COUPLING_MODES, CouplingStore
+        store = CouplingStore.build(
+            problem.couplings, config.coupling_format).require(
+            KERNEL_COUPLING_MODES, "solve_tempering")
+        return _solve_tempering_fused_jit(problem, seed, config, store)
     if config.backend != "reference":
         raise ValueError(
             f"backend must be 'reference' or 'fused', got {config.backend!r}")

@@ -1,2 +1,3 @@
 from .compress import CompressionState, compressed_psum_grads, init_compression  # noqa: F401
 from .shmap import shard_map_compat  # noqa: F401
+from .solver_sharded import solve_sharded  # noqa: F401

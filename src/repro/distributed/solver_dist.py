@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core import ising, rng
+from ..core.bitplane import local_fields_from_planes
+from ..core.coupling import KERNEL_COUPLING_MODES, CouplingStore
 from ..core.solver import SolveResult, SolverConfig, _mcmc_config
 from ..core import mcmc
 from .shmap import shard_map_compat
@@ -35,6 +37,29 @@ class DistSolverConfig:
     exchange_every: int = 0      # chunks between best-exchange; 0 = never
     restart_fraction: float = 0.25  # worst fraction restarted at exchange
     backend: str = "reference"   # "reference" | "fused" per-chunk engine
+
+
+def _init_chain_from_planes(planes, fields_h, spins) -> mcmc.ChainState:
+    """``mcmc.init_chain`` off the packed planes — no dense J required.
+
+    Trajectory-exact vs the dense init for integer J: the Hamming-weight
+    u^(J) equals the f32 matmul exactly (integer sums below 2²⁴), and the
+    energy is assembled with the *same einsum contractions* as
+    ``ising.energy`` on those identical u^(J) values, so dense-fed and
+    plane-fed shards produce bit-identical chains (asserted by
+    ``test_distributed_fused_bitplane_matches_dense``)."""
+    s = spins.astype(jnp.float32)
+    u_j = local_fields_from_planes(planes, spins)      # == J @ s exactly
+    e = (-0.5 * jnp.einsum("...i,...i->...", s, u_j)
+         - jnp.einsum("i,...i->...", fields_h, s)).astype(jnp.float32)
+    return mcmc.ChainState(
+        spins=spins.astype(ising.SPIN_DTYPE),
+        fields=(u_j + fields_h).astype(jnp.float32),
+        energy=e,
+        best_energy=e,
+        best_spins=spins.astype(ising.SPIN_DTYPE),
+        num_flips=jnp.int32(0),
+    )
 
 
 def _chunk_runner(problem, mc, schedule, chunk_steps):
@@ -56,26 +81,29 @@ def _chunk_runner(problem, mc, schedule, chunk_steps):
 
 
 def _fused_chunk_runner(base_cfg: SolverConfig, chunk_steps: int, r_local: int,
-                        interpret: bool, planes=None, fmt: str = "dense"):
+                        interpret: bool, store: CouplingStore):
     """Run `chunk_steps` steps as one VMEM-resident fused sweep per shard.
 
     Replica chains stay in ``mcmc.ChainState`` so the elitist-exchange logic
     is backend-agnostic; the sweep kernel consumes/produces the state arrays
     directly. Per-device RNG: chunk uniforms come from the dedicated
     ``Salt.SWEEP`` stream folded with the device index, so shards draw
-    disjoint streams by construction. ``planes`` is the packed bit-plane J
-    and ``fmt`` the resolved coupling store ("dense" | "bitplane" |
-    "bitplane_hbm", per ``base_cfg.coupling_format`` via
-    ``solve_distributed``) — planes are replicated to every shard like the
-    dense J they replace; in the HBM tier each shard streams rows from its
-    own HBM-resident copy.
+    disjoint streams by construction. ``store`` is the resolved
+    ``CouplingStore`` (per ``base_cfg.coupling_format`` via
+    ``solve_distributed``); the runner closes over its payload, replicated
+    to every shard — in the HBM tier each shard streams rows from its own
+    HBM-resident plane copy.
     """
     from ..kernels import ops as _ops
 
     tbl = _ops.solver_pwl_table(base_cfg)
     block_r = _ops.fit_block(r_local, 8)
 
-    def run(problem, states, base, device_idx, chunk_idx):
+    def run(states, base, device_idx, chunk_idx, dense_J=None):
+        # Plane stores close over the encoded payload (replicated constant);
+        # the dense store consumes the caller's per-shard J operand so the
+        # matrix enters the shard exactly once either way.
+        couplings = dense_J if dense_J is not None else store.kernel_operand
         steps = chunk_idx * chunk_steps + jnp.arange(chunk_steps)
         temps = jax.vmap(base_cfg.schedule)(steps).astype(jnp.float32)
         temps = jnp.broadcast_to(temps[:, None], (chunk_steps, r_local))
@@ -83,11 +111,11 @@ def _fused_chunk_runner(base_cfg: SolverConfig, chunk_steps: int, r_local: int,
                  states.energy, states.best_energy,
                  states.best_spins.astype(jnp.float32), states.num_flips)
         u, s, e, be, bs, nf = _ops.fused_sweep_chunk(
-            problem.couplings if planes is None else planes, state,
+            couplings, state,
             rng.stream(base, rng.Salt.SWEEP, device_idx, chunk_idx),
             chunk_steps, temps, mode=base_cfg.mode,
             uniformized=base_cfg.uniformized, pwl_table=tbl,
-            block_r=block_r, coupling=fmt, interpret=interpret)
+            block_r=block_r, coupling=store.fmt, interpret=interpret)
         return mcmc.ChainState(
             spins=s.astype(ising.SPIN_DTYPE),
             fields=u,
@@ -114,40 +142,50 @@ def solve_distributed(problem: ising.IsingProblem, seed, config: DistSolverConfi
     n = problem.num_spins
     chunk = max(base_cfg.trace_every, 1) if base_cfg.trace_every else 64
     num_chunks = max(base_cfg.num_steps // chunk, 1)
+    store = None
     if config.backend == "fused":
-        from ..kernels.ops import (auto_interpret, encode_for_sweep,
-                                   resolve_coupling_format)
-        fmt = resolve_coupling_format(base_cfg.coupling_format,
-                                      problem.couplings, n)
-        planes = (encode_for_sweep(problem.couplings, fmt=fmt)
-                  if fmt in ("bitplane", "bitplane_hbm") else None)
+        from ..kernels.ops import auto_interpret
+        store = CouplingStore.build(
+            problem.couplings, base_cfg.coupling_format).require(
+            KERNEL_COUPLING_MODES, "solve_distributed")
         runner_fused = _fused_chunk_runner(base_cfg, chunk, r_local,
-                                           auto_interpret(None), planes, fmt)
+                                           auto_interpret(None), store)
     elif config.backend == "reference":
         runner = _chunk_runner(problem, mc, base_cfg.schedule, chunk)
     else:
         raise ValueError(
             f"backend must be 'reference' or 'fused', got {config.backend!r}")
+    # When the fused runner closes over encoded planes, the dense J never
+    # enters shard_map at all — at N=16k that is a 1 GiB replicated operand
+    # that ``local_solve`` would otherwise receive only to ignore (chain
+    # (re)inits run off the planes too, see ``_init_chain_from_planes``).
+    ship_dense = store is None or store.planes is None
 
-    def local_solve(J, h, seed_arr):
+    def local_solve(h, seed_arr, *dense_args):
+        J = dense_args[0] if dense_args else None
         # Flatten all mesh axes into one linear device index (axis sizes are
         # static — read off the mesh, not the unavailable-in-old-JAX
         # ``lax.axis_size``).
         idx = jnp.int32(0)
         for a in axes:
             idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
-        prob = ising.IsingProblem(couplings=J, fields=h, offset=0.0)
+        if J is not None:
+            prob = ising.IsingProblem(couplings=J, fields=h, offset=0.0)
+            chain_init = lambda sp: mcmc.init_chain(prob, sp)  # noqa: E731
+        else:
+            chain_init = lambda sp: _init_chain_from_planes(  # noqa: E731
+                store.planes, h, sp)
         base = jax.random.fold_in(jax.random.key(0), seed_arr[0])
         rep_ids = idx * r_local + jnp.arange(r_local)
         keys = jax.vmap(lambda i: rng.stream(base, rng.Salt.REPLICA, i))(rep_ids)
         spins0 = jax.vmap(lambda k: ising.random_spins(
             rng.stream(k, rng.Salt.INIT), (n,)))(keys)
-        states = jax.vmap(lambda s: mcmc.init_chain(prob, s))(spins0)
+        states = jax.vmap(chain_init)(spins0)
 
         def chunk_body(carry, c):
             states = carry
             if config.backend == "fused":
-                states = runner_fused(prob, states, base, idx, c)
+                states = runner_fused(states, base, idx, c, dense_J=J)
             else:
                 states = runner(states, keys, c)
             if config.exchange_every:
@@ -177,7 +215,7 @@ def solve_distributed(problem: ising.IsingProblem, seed, config: DistSolverConfi
                     worst = order[-k_restart:]
                     def restart_one(states, j):
                         spins = jnp.where(usable, best_spins, states.spins[j])
-                        st_j = mcmc.init_chain(prob, spins)
+                        st_j = chain_init(spins)
                         improved = st_j.energy < states.best_energy[j]
                         new_best_s = jnp.where(improved, st_j.spins,
                                                states.best_spins[j])
@@ -204,12 +242,15 @@ def solve_distributed(problem: ising.IsingProblem, seed, config: DistSolverConfi
 
     spec_rep = P()  # replicated inputs
     out_specs = (P(axes), P(axes), P(axes), P(axes), P(None, axes))
+    seed_arr = jnp.asarray([seed], jnp.uint32)
+    operands = [problem.fields, seed_arr]
+    if ship_dense:
+        operands.append(problem.couplings)
     fn = jax.jit(shard_map_compat(
         local_solve, mesh=mesh,
-        in_specs=(spec_rep, spec_rep, spec_rep),
+        in_specs=(spec_rep,) * len(operands),
         out_specs=out_specs))
-    seed_arr = jnp.asarray([seed], jnp.uint32)
-    be, bs, fe, nf, trace = fn(problem.couplings, problem.fields, seed_arr)
+    be, bs, fe, nf, trace = fn(*operands)
     return SolveResult(best_energy=be + problem.offset, best_spins=bs,
                        final_energy=fe + problem.offset, num_flips=nf,
                        trace_energy=trace + problem.offset)

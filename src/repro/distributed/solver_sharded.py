@@ -1,0 +1,321 @@
+"""Spin-parallel distributed Snowball: the ``bitplane_sharded`` coupling tier.
+
+Where ``solver_dist`` shards *replicas* (independent chains, J replicated),
+this driver shards the **problem itself** across the mesh — the HETRI-style
+partition of one Ising instance over multiple compute units, applied to the
+plane store the reuse-aware near-memory literature makes the central design
+axis. Device d owns coupling-plane rows [d·N/D, (d+1)·N/D) plus the matching
+slice of the local fields u and spins s, so J capacity scales with
+*aggregate* HBM — D× past the single-device ``bitplane_hbm`` wall — while
+every replica still runs one global chain.
+
+Per asynchronous MCMC step (paper Alg. 1, collectivized):
+
+* **selection** — each device evaluates flip probabilities for its own spin
+  slice; the hierarchical roulette's level-1 block sums (G = N/lane values,
+  i.e. N/128 floats, not N) are ``all_gather``-ed so every device runs the
+  identical block pick, and the winning block's lane weights are
+  ``psum``-combined from their owner (``kernels.common`` supplies both levels
+  — the same arithmetic the kernel and oracle run, so trajectories stay
+  *exactly* equal to every single-device tier).
+* **flip update** — the owner of the selected row contributes its packed
+  (B, 1, W) pos/neg row tiles to a ``psum`` broadcast (masked zeros from
+  everyone else add exactly), every device decodes the full row through the
+  shared ``common.decode_bitplane_rows`` expansion and FMAs its own u-slice.
+  Per-step traffic is O(B·N/32) words of row tiles + O(N/lane) block sums —
+  never the O(N²) store, never O(N) f32 fields.
+
+RNG, chunk cadence (``kernels.ops.anneal_chunk_plan``), and the best-so-far
+merge are shared with ``kernels.ops.fused_anneal`` statement for statement,
+so ``solve_sharded`` returns **bit-identical** ``SolveResult``s to the fused
+driver on every coupling tier (the four-way parity test in
+``tests/test_solver_sharded.py`` asserts ``assert_array_equal`` across
+dense / bitplane / bitplane_hbm / bitplane_sharded).
+"""
+from __future__ import annotations
+
+import functools
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..core import coupling as coupling_store
+from ..core import rng
+from ..core.bitplane import WORD_BITS, BitPlanes
+from ..core.solver import SolveResult, SolverConfig
+from ..kernels import common
+from ..kernels import ops as _ops
+from .shmap import shard_map_compat
+
+
+def _mesh_size(mesh: Mesh, axes) -> int:
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def _flat_shard_index(mesh: Mesh, axes):
+    """Linear device index over all mesh axes (row-major in axis order —
+    the same flattening ``PartitionSpec((axes...))`` uses to lay out the
+    sharded dimension, and the one ``solver_dist`` derives replica ids from)."""
+    idx = jnp.int32(0)
+    for a in axes:
+        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+    return idx
+
+
+def _psum_gather(x, j, lo, axes):
+    """x[r, j[r]] with x row-sharded over the spin axis: the owner contributes
+    the value, everyone else exact zeros, and the ``psum`` combine restores
+    the global gather (v + 0 + … + 0 is exact in f32, so this is
+    value-identical to the single-device ``take``)."""
+    n_loc = x.shape[1]
+    jl = jnp.clip(j - lo, 0, n_loc - 1)
+    v = jnp.take_along_axis(x, jl[:, None], axis=1)[:, 0]
+    own = (j >= lo) & (j < lo + n_loc)
+    return jax.lax.psum(jnp.where(own, v, jnp.zeros((), x.dtype)), axes)
+
+
+def _sharded_roulette(p_loc, u_roulette, lane, g0, axes):
+    """``common.roulette_pick`` with the (R, N) wheel row-sharded.
+
+    Level 1: local (R, G_loc) block sums, ``all_gather`` to the full (R, G)
+    block weights (G = N/lane — N/128 f32s per replica, not N), then the
+    *shared* ``common.roulette_block_pick`` replicated on every device.
+    Level 2: the selected block's lane weights are psum-combined from the
+    owner (masked zeros elsewhere) into the *shared*
+    ``common.roulette_lane_pick``. Both levels therefore run the identical
+    arithmetic of the single-device pick on identical values — the exactness
+    argument of the four-way parity tier.
+    """
+    r_, n_loc = p_loc.shape
+    g_loc = n_loc // lane
+    pb = p_loc.reshape(r_, g_loc, lane)
+    blk_loc = jnp.sum(pb, axis=2)                         # (R, G_loc)
+    blk = jax.lax.all_gather(blk_loc, axes, axis=1, tiled=True)  # (R, G)
+    g, residual, total, degenerate = common.roulette_block_pick(blk, u_roulette)
+    iota_loc = g0 + jax.lax.broadcasted_iota(jnp.int32, (r_, g_loc), 1)
+    sel_loc = jnp.sum(jnp.where((iota_loc == g[:, None])[:, :, None], pb, 0.0),
+                      axis=1)                             # (R, lane) masked
+    sel = jax.lax.psum(sel_loc, axes)
+    l = common.roulette_lane_pick(sel, residual, lane)
+    return (g * lane + l).astype(jnp.int32), total, degenerate
+
+
+def _sharded_sweep(planes_loc: BitPlanes, fields0, spins0, energy0, uniforms,
+                   temps, pwl_table, *, mode: str, uniformized: bool, n: int,
+                   lane: int, axes, lo, g0):
+    """T spin-sharded MCMC steps for R replicas — ``kernels.ref.mcmc_sweep``
+    statement for statement, with every global op replaced by its collective
+    counterpart (gathers → masked ``psum``, row fetch → psum row-tile
+    broadcast + shared decode + local column slice). fields0/spins0 are the
+    (R, N/D) local slices; energy0 and the uniforms/temps tensors are
+    replicated. Returns the local-slice analogue of the kernel's 6-tuple.
+    """
+    pos, neg = planes_loc.pos, planes_loc.neg            # (B, N/D, W) rows
+    r, n_loc = fields0.shape
+    col = lo + jnp.arange(n_loc)                         # global column ids
+
+    def fetch_rows(j):
+        """(R,) global sites → (R, N/D) decoded local row columns: the owner
+        broadcasts its packed (B, 1, W) row tiles via masked psum (integer
+        zeros add exactly), every device runs the identical
+        ``decode_bitplane_rows`` expansion on its own slice. When the shard
+        boundary is word-aligned (N/D % 32 == 0 — every lane-128 size) the
+        packed words are sliced *before* decoding, keeping the per-device
+        expansion O(B·N/D) instead of O(B·N); bit expansion is per-word, so
+        slice-then-decode equals decode-then-slice value for value."""
+        jl = jnp.clip(j - lo, 0, n_loc - 1)
+        own = (j >= lo) & (j < lo + n_loc)
+        pr = jnp.where(own[None, :, None], jnp.take(pos, jl, axis=1),
+                       jnp.uint32(0))                    # (B, R, W)
+        nr = jnp.where(own[None, :, None], jnp.take(neg, jl, axis=1),
+                       jnp.uint32(0))
+        pr = jax.lax.psum(pr, axes)
+        nr = jax.lax.psum(nr, axes)
+        if n_loc % WORD_BITS == 0:
+            w_lo = lo // WORD_BITS                       # lo % 32 == 0 too
+            w_loc = n_loc // WORD_BITS
+            pr = jax.lax.dynamic_slice_in_dim(pr, w_lo, w_loc, axis=2)
+            nr = jax.lax.dynamic_slice_in_dim(nr, w_lo, w_loc, axis=2)
+            return common.decode_bitplane_rows(pr, nr, n_loc)  # (R, N/D)
+        rows = common.decode_bitplane_rows(pr, nr, n)    # (R, N) shared decode
+        return jax.lax.dynamic_slice_in_dim(rows, lo, n_loc, axis=1)
+
+    def body(carry, xs):
+        u, s, e, be, bs, nf = carry
+        u01, temp = xs                                   # (R, 4), (R,)
+        sf = s.astype(jnp.float32)
+        if mode == "rsa":
+            j = common.site_from_uniform(u01[:, 0], n)
+            u_j = _psum_gather(u, j, lo, axes)
+            s_old = _psum_gather(sf, j, lo, axes)
+            de = 2.0 * s_old * u_j
+            p_j = common.flip_probability(de, temp, pwl_table)
+            accept = u01[:, 1] < p_j
+        else:
+            de_all = 2.0 * sf * u                        # (R, N/D)
+            p_all = common.flip_probability(de_all, temp[:, None], pwl_table)
+            j_rw, total, degenerate = _sharded_roulette(
+                p_all, u01[:, 2], lane, g0, axes)
+            if uniformized:
+                accept = jnp.where(degenerate, False,
+                                   u01[:, 3] * jnp.float32(n) < total)
+                j = j_rw
+            else:
+                j_fb = common.site_from_uniform(u01[:, 0], n)
+                p_fb = _psum_gather(p_all, j_fb, lo, axes)
+                accept = jnp.where(degenerate, u01[:, 1] < p_fb, True)
+                j = jnp.where(degenerate, j_fb, j_rw)
+            de = _psum_gather(de_all, j, lo, axes)
+            s_old = _psum_gather(sf, j, lo, axes)
+        acc_f = accept.astype(jnp.float32)
+        rows = fetch_rows(j)                             # (R, N/D)
+        u = u - (2.0 * acc_f * s_old)[:, None] * rows
+        onehot = (col[None, :] == j[:, None]).astype(sf.dtype)
+        s = jnp.where(accept[:, None], (sf * (1 - 2 * onehot)).astype(s.dtype), s)
+        e = e + acc_f * de
+        nf = nf + accept.astype(jnp.int32)
+        better = e < be
+        be = jnp.where(better, e, be)
+        bs = jnp.where(better[:, None], s, bs)
+        return (u, s, e, be, bs, nf), None
+
+    init = (fields0.astype(jnp.float32), spins0,
+            energy0.astype(jnp.float32), energy0.astype(jnp.float32),
+            spins0, jnp.zeros((r,), jnp.int32))
+    (u, s, e, be, bs, nf), _ = jax.lax.scan(body, init, (uniforms, temps))
+    return u, s, e, be, bs, nf
+
+
+@functools.lru_cache(maxsize=32)
+def sharded_anneal_fn(config: SolverConfig, mesh: Mesh, n: int, *,
+                      chunk_steps: int = 256):
+    """Build the jitted shard_map'd anneal for one (config, mesh, N).
+
+    Returns ``fn(planes, u0, s0, e0, seed_arr) → (u, s, e, be, bs, nf,
+    trace)`` with planes/u0/s0 sharded over the spin axis. Memoized on the
+    (hashable) arguments so repeated solves of one configuration reuse the
+    jitted callable instead of re-tracing per call — ``jax.jit`` caches on
+    function identity, and ``local_anneal`` is a fresh closure per build
+    (the analogue of ``_fused_anneal_impl``'s module-level jit). Factored
+    out of :func:`solve_sharded` so the jaxpr-pin test can assert the
+    sharded step emits collectives (``psum`` / ``all_gather``) and **no**
+    ``dot_general`` — the O(N)/step incremental-update contract extends
+    across the mesh.
+    """
+    axes = tuple(mesh.axis_names)
+    num_shards = _mesh_size(mesh, axes)
+    r = config.num_replicas
+    lane = common.default_lane(n)
+    n_loc = n // num_shards
+    g_loc = n_loc // lane
+    chunk_len, num_chunks, rem_steps = _ops.anneal_chunk_plan(
+        config, chunk_steps)
+    tbl = _ops.solver_pwl_table(config)
+
+    def local_anneal(planes_loc, u0, s0, e0, seed_arr):
+        idx = _flat_shard_index(mesh, axes)
+        lo = idx * n_loc
+        g0 = idx * g_loc
+        base = jax.random.fold_in(jax.random.key(0), seed_arr[0])
+        state = (u0, s0, e0, e0, s0, jnp.zeros((r,), jnp.int32))
+
+        def chunk(carry, c, clen):
+            # Same per-chunk Salt.SWEEP stream, temps tensor, and
+            # best-so-far merge as ops.fused_sweep_chunk — replicated
+            # computation, identical on every device.
+            steps = c * chunk_len + jnp.arange(clen)
+            temps = jax.vmap(config.schedule)(steps).astype(jnp.float32)
+            temps = jnp.broadcast_to(temps[:, None], (clen, r))
+            uniforms = rng.uniform01(
+                rng.stream(base, rng.Salt.SWEEP, c), (clen, r, 4))
+            u, s, e, be, bs, nf = carry
+            u, s, e, ce, cs, cf = _sharded_sweep(
+                planes_loc, u, s, e, uniforms, temps, tbl,
+                mode=config.mode, uniformized=config.uniformized, n=n,
+                lane=lane, axes=axes, lo=lo, g0=g0)
+            better = ce < be
+            state = (u, s, e, jnp.where(better, ce, be),
+                     jnp.where(better[:, None], cs, bs), nf + cf)
+            return state, state[3]  # best-so-far energy at chunk end
+
+        state, trace = jax.lax.scan(
+            partial(chunk, clen=chunk_len), state, jnp.arange(num_chunks))
+        if rem_steps:
+            state, _ = chunk(state, jnp.int32(num_chunks), clen=rem_steps)
+        u, s, e, be, bs, nf = state
+        return u, s, e, be, bs, nf, trace
+
+    shard = P(None, axes)        # (R, N) / (B, N, W) spin-axis sharding
+    return jax.jit(shard_map_compat(
+        local_anneal, mesh=mesh,
+        in_specs=(P(None, axes, None), shard, shard, P(), P()),
+        out_specs=(shard, shard, P(), P(), shard, P(), P())))
+
+
+def solve_sharded(problem, seed, config: SolverConfig, mesh: Mesh, *,
+                  chunk_steps: int = 256,
+                  coupling: Optional[BitPlanes] = None,
+                  num_planes: Optional[int] = None,
+                  interpret: Optional[bool] = None) -> SolveResult:
+    """Anneal with the coupling planes row-sharded across ``mesh``.
+
+    Trajectory-identical to ``solve(..., backend="fused")`` on the same
+    seed/config (any single-device coupling tier): same replica init, same
+    ``Salt.SWEEP`` chunk streams, same selection/update arithmetic via
+    ``kernels.common`` — only the memory placement changes. Per-device plane
+    bytes are ``store.nbytes / D``, so J capacity scales with aggregate HBM.
+
+    Requires an integral J (the sharded store is plane-backed; there is no
+    sharded dense tier), N divisible by the mesh size, and the per-shard
+    spin count divisible by the roulette lane (block-aligned sharding).
+    ``config.coupling_format`` must be "auto" or "bitplane_sharded".
+    ``coupling`` takes pre-packed tile-aligned planes to skip the re-encode
+    (the benchmark path); ``num_planes`` forces the precision B.
+    """
+    n = problem.num_spins
+    axes = tuple(mesh.axis_names)
+    num_shards = _mesh_size(mesh, axes)
+    if config.coupling_format not in ("auto", "bitplane_sharded"):
+        raise ValueError(
+            f"solve_sharded serves coupling_format='bitplane_sharded' "
+            f"(or 'auto'), got {config.coupling_format!r} — use "
+            f"solve(backend='fused') for the single-device tiers")
+    if coupling is not None:
+        store = coupling_store.CouplingStore.from_planes(
+            coupling, "bitplane_sharded")
+        coupling_store.validate_planes_cover(coupling, n)
+    else:
+        store = coupling_store.CouplingStore.build(
+            problem.couplings, "bitplane_sharded", num_planes=num_planes)
+    if n % num_shards:
+        raise ValueError(f"N={n} spin rows cannot shard evenly over the "
+                         f"{num_shards}-device mesh")
+    lane = common.default_lane(n)
+    n_loc = n // num_shards
+    if n_loc % lane:
+        raise ValueError(
+            f"per-shard spin count {n_loc} is not a multiple of the roulette "
+            f"lane {lane}: shard boundaries must align with selection blocks")
+    r = config.num_replicas
+    base = jax.random.fold_in(jax.random.key(0),
+                              jnp.asarray(seed, jnp.uint32))
+    u0, s0, e0, _, _, _ = _ops.fused_init_state(
+        problem, base, r, interpret=_ops.auto_interpret(interpret),
+        planes=store.planes)
+    fn = sharded_anneal_fn(config, mesh, n, chunk_steps=chunk_steps)
+    seed_arr = jnp.asarray([seed], jnp.uint32)
+    u, s, e, be, bs, nf, trace = fn(store.planes, u0, s0, e0, seed_arr)
+    return SolveResult(
+        best_energy=be + problem.offset,
+        best_spins=bs.astype(jnp.int8),
+        final_energy=e + problem.offset,
+        num_flips=nf,
+        trace_energy=((trace + problem.offset).astype(jnp.float32)
+                      if config.trace_every else jnp.zeros((0, r), jnp.float32)),
+    )

@@ -108,6 +108,39 @@ def flip_probability(delta_e: jax.Array, temperature: jax.Array,
     return jnp.where(t > 0, warm, cold).astype(jnp.float32)
 
 
+def roulette_block_pick(blk: jax.Array, u_roulette: jax.Array):
+    """Level-1 of the hierarchical roulette: pick the winning block from the
+    (R, G) block-weight sums. Returns ``(g, residual, total, degenerate)``.
+
+    Split out of :func:`roulette_pick` so the spin-sharded driver can run the
+    identical arithmetic on an all-gathered ``blk`` — the block pick is a
+    pure function of the block sums, so sharded and single-device trajectories
+    stay exactly equal (the parity contract of this module's docstring).
+    """
+    num_blocks = blk.shape[1]
+    cb = jnp.cumsum(blk, axis=1)                   # (R, G) short scan
+    total = cb[:, -1]                              # W (Eq. 28)
+    degenerate = (total <= 0) | ~jnp.isfinite(total)
+    radius = u_roulette * jnp.where(degenerate, 1.0, total)
+    g = jnp.minimum(
+        jnp.sum((cb <= radius[:, None]).astype(jnp.int32), axis=1),
+        num_blocks - 1)                            # block index (R,)
+    iota_g = jax.lax.broadcasted_iota(jnp.int32, blk.shape, 1)
+    base = jnp.sum(jnp.where(iota_g < g[:, None], blk, 0.0), axis=1)
+    residual = radius - base
+    return g, residual, total, degenerate
+
+
+def roulette_lane_pick(sel: jax.Array, residual: jax.Array, lane: int):
+    """Level-2 of the hierarchical roulette: the within-block lane pick from
+    the (R, lane) selected-block weights (sharded callers psum-combine
+    ``sel`` from the block owner; the arithmetic is shared either way)."""
+    cl = jnp.cumsum(sel, axis=1)
+    return jnp.minimum(
+        jnp.sum((cl <= residual[:, None]).astype(jnp.int32), axis=1),
+        lane - 1)
+
+
 def roulette_pick(p_all: jax.Array, u_roulette: jax.Array, lane: int):
     """Hierarchical roulette-wheel selection (paper Eq. 28-29).
 
@@ -122,22 +155,11 @@ def roulette_pick(p_all: jax.Array, u_roulette: jax.Array, lane: int):
     num_blocks = n // lane
     pb = p_all.reshape(r_, num_blocks, lane)
     blk = jnp.sum(pb, axis=2)                      # (R, G) block weights
-    cb = jnp.cumsum(blk, axis=1)                   # (R, G) short scan
-    total = cb[:, -1]                              # W (Eq. 28)
-    degenerate = (total <= 0) | ~jnp.isfinite(total)
-    radius = u_roulette * jnp.where(degenerate, 1.0, total)
-    g = jnp.minimum(
-        jnp.sum((cb <= radius[:, None]).astype(jnp.int32), axis=1),
-        num_blocks - 1)                            # block index (R,)
+    g, residual, total, degenerate = roulette_block_pick(blk, u_roulette)
     iota_g = jax.lax.broadcasted_iota(jnp.int32, (r_, num_blocks), 1)
-    base = jnp.sum(jnp.where(iota_g < g[:, None], blk, 0.0), axis=1)
-    residual = radius - base
     sel = jnp.sum(jnp.where((iota_g == g[:, None])[:, :, None], pb, 0.0),
                   axis=1)                          # (R, lane) selected block
-    cl = jnp.cumsum(sel, axis=1)
-    l = jnp.minimum(
-        jnp.sum((cl <= residual[:, None]).astype(jnp.int32), axis=1),
-        lane - 1)
+    l = roulette_lane_pick(sel, residual, lane)
     return (g * lane + l).astype(jnp.int32), total, degenerate
 
 

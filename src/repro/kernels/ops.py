@@ -18,13 +18,20 @@ from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..core import ising, rng
-from ..core.bitplane import (BitPlanes, encode_couplings,
-                             local_fields_from_planes, pack_spins)
+from ..core.bitplane import BitPlanes, local_fields_from_planes, pack_spins
+# The coupling-store subsystem (format registry, resolve/encode, the VMEM/HBM
+# wall constants) is first-class in ``core.coupling``; this module re-exports
+# the long-standing names so kernel-level callers keep working.
+from ..core.coupling import (  # noqa: F401  (re-exported API)
+    BITPLANE_VMEM_MAX_N, COUPLING_FORMATS, DENSE_COUPLING_BITS,
+    DENSE_COUPLING_MAX_N, KERNEL_COUPLING_MODES, PLANE_FORMATS,
+    STREAM_ALIGN_WORDS, CouplingStore)
+from ..core.coupling import encode_planes as encode_for_sweep  # noqa: F401
+from ..core.coupling import resolve_format as resolve_coupling_format  # noqa: F401
 from ..core.pwl import pwl_table as _pwl_table
-from ..core.solver import COUPLING_FORMATS, SolverConfig, SolveResult
+from ..core.solver import SolverConfig, SolveResult
 from . import bitplane_field as _bitplane_field
 from . import local_field as _local_field
 from . import sweep as _sweep
@@ -35,84 +42,11 @@ from .common import fit_block  # noqa: F401  (canonical home is kernels.common)
 #: resolved by ``gather="auto"``.
 ONEHOT_GATHER_MAX_N = 128
 
-#: The f32 VMEM wall (DESIGN.md §Backends): above this N a dense f32 J no
-#: longer fits VMEM alongside the sweep state, so ``coupling_format="auto"``
-#: switches integral-J problems to the packed bit-plane store.
-DENSE_COUPLING_MAX_N = 2000
-
-#: The packed-VMEM wall: above this N even the bit-plane store (2·B bits per
-#: coupler; pos+neg = N²·B/4 bytes ≈ 16 MiB at N=8k, B=1) no longer fits VMEM
-#: alongside the sweep state, so ``coupling_format="auto"`` switches to the
-#: HBM-streamed plane store (``coupling="bitplane_hbm"``: planes stay in HBM,
-#: selected rows double-buffer through a 2-slot VMEM scratch).
-BITPLANE_VMEM_MAX_N = 8000
-
-#: Word-axis alignment for HBM-resident planes: the streamed path DMAs whole
-#: (B, 1, W) row tiles per step, so W is padded to the 128-word TPU lane tile
-#: (zero bits — decode truncates to N, so padding is representation-invisible).
-STREAM_ALIGN_WORDS = 128
-
-#: What the fused sweep holds per coupler: dense f32 = 32 bits; bit-planes =
-#: 2·B bits (pos + neg planes). Used for the benchmark's J-bytes accounting.
-DENSE_COUPLING_BITS = 32
-
 
 def auto_interpret(interpret: Optional[bool]) -> bool:
     if interpret is None:
         return jax.default_backend() != "tpu"
     return interpret
-
-
-def resolve_coupling_format(fmt: Optional[str], couplings, n: int) -> str:
-    """Resolve the ``CouplingFormat`` knob to "dense" | "bitplane" |
-    "bitplane_hbm".
-
-    "auto" (or None) selects a packed store exactly when the couplings are
-    concrete (host-inspectable — encoding runs in numpy), integral, N is
-    past the f32 VMEM crossover (:data:`DENSE_COUPLING_MAX_N`), **and** the
-    packed store is actually smaller — 2·B bits per coupler must beat the 32
-    of dense f32, so integer magnitudes needing B ≥ 16 planes stay dense.
-    Past the packed-VMEM wall (:data:`BITPLANE_VMEM_MAX_N`) "auto" escalates
-    to "bitplane_hbm": planes in HBM, rows streamed through VMEM scratch.
-    An explicit plane format under a jax trace raises — the planes cannot be
-    packed from a tracer; encode first and pass them in.
-    """
-    traced = isinstance(couplings, jax.core.Tracer)
-    if fmt in (None, "auto"):
-        if traced or n <= DENSE_COUPLING_MAX_N:
-            return "dense"
-        J = np.asarray(couplings)
-        if not np.array_equal(J, np.rint(J)):
-            return "dense"
-        num_planes = max(1, int(np.abs(J).max(initial=0)).bit_length())
-        if 2 * num_planes >= DENSE_COUPLING_BITS:
-            return "dense"
-        return "bitplane" if n <= BITPLANE_VMEM_MAX_N else "bitplane_hbm"
-    if fmt not in ("dense", "bitplane", "bitplane_hbm"):
-        raise ValueError(
-            f"coupling format must be one of {COUPLING_FORMATS}, got {fmt!r}")
-    if fmt != "dense" and traced:
-        raise ValueError(f"coupling_format={fmt!r} needs concrete couplings "
-                         "(plane packing happens on the host, outside jit)")
-    return fmt
-
-
-def encode_for_sweep(couplings, num_planes: Optional[int] = None,
-                     fmt: str = "bitplane") -> BitPlanes:
-    """Pack a concrete integral J for the fused sweep's bit-plane paths.
-
-    ``num_planes`` defaults to the fewest planes that represent |J|max
-    (B = bit_length(|J|max), ≥ 1) — memory is linear in B, so auto-selection
-    never over-allocates precision (paper §IV-B1). ``fmt="bitplane_hbm"``
-    pads the word axis to :data:`STREAM_ALIGN_WORDS` so each streamed row
-    tile is a full-lane-width DMA (padding is zero bits; decode truncates).
-    """
-    J = np.asarray(couplings)
-    if num_planes is None:
-        amax = int(np.abs(np.rint(J)).max(initial=0))
-        num_planes = max(1, amax.bit_length())
-    align = STREAM_ALIGN_WORDS if fmt == "bitplane_hbm" else 1
-    return encode_couplings(J, num_planes, align_words=align)
 
 
 def local_field_init(spins: jax.Array, couplings: jax.Array, bias: jax.Array,
@@ -230,34 +164,18 @@ def fused_sweep_chunk(couplings: Union[jax.Array, BitPlanes], state,
             jnp.where(better[:, None], cs, bs), nf + cf)
 
 
-@partial(jax.jit, static_argnames=("config", "chunk_steps", "block_r",
-                                   "gather", "interpret", "fmt"))
-def _fused_anneal_impl(problem: ising.IsingProblem, seed: jax.Array,
-                       config: SolverConfig, chunk_steps: int, block_r: int,
-                       gather: str, interpret: bool,
-                       planes: Optional[BitPlanes],
-                       fmt: str = "dense") -> SolveResult:
-    n = problem.num_spins
-    r = config.num_replicas
-    base = jax.random.fold_in(jax.random.key(0), seed)
-    init = fused_init_state(problem, base, r, interpret=interpret,
-                            block_r=block_r, planes=planes)
-    tbl = solver_pwl_table(config)
-    sweep_couplings = problem.couplings if planes is None else planes
-    if planes is not None:
-        # "auto"/"dynamic" resolve to the O(N) row fetch; an explicit
-        # "onehot" flows through so the kernel raises its dense-only error
-        # rather than being silently overridden here.
-        gather = gather if gather == "onehot" else "dynamic"
-    else:
-        gather = _resolve_gather(gather, n)
+def anneal_chunk_plan(config: SolverConfig, chunk_steps: int):
+    """(chunk_len, num_chunks, rem_steps) for a fused-trajectory anneal.
 
-    # Trace cadence is identical to the reference backend: with tracing on,
-    # kernel chunks are exactly ``trace_every`` steps and the trace records
-    # best-so-far energy at every chunk end (both backends then run
-    # num_chunks·trace_every steps); ``chunk_steps`` is only the perf knob
-    # for untraced runs, where a remainder sweep keeps the total at exactly
-    # ``num_steps`` like the reference scan.
+    Trace cadence is identical to the reference backend: with tracing on,
+    chunks are exactly ``trace_every`` steps and the trace records
+    best-so-far energy at every chunk end (both backends then run
+    num_chunks·trace_every steps); ``chunk_steps`` is only the perf knob
+    for untraced runs, where a remainder sweep keeps the total at exactly
+    ``num_steps`` like the reference scan. Shared by the Pallas anneal and
+    the spin-sharded anneal — identical chunking (hence identical per-chunk
+    ``Salt.SWEEP`` streams) is a precondition for their exact parity.
+    """
     if config.trace_every:
         chunk_len = config.trace_every
         num_chunks = max(config.num_steps // chunk_len, 1)
@@ -266,6 +184,32 @@ def _fused_anneal_impl(problem: ising.IsingProblem, seed: jax.Array,
         chunk_len = max(min(chunk_steps, config.num_steps), 1)
         num_chunks = config.num_steps // chunk_len
         rem_steps = config.num_steps - num_chunks * chunk_len
+    return chunk_len, num_chunks, rem_steps
+
+
+@partial(jax.jit, static_argnames=("config", "chunk_steps", "block_r",
+                                   "gather", "interpret"))
+def _fused_anneal_impl(problem: ising.IsingProblem, seed: jax.Array,
+                       config: SolverConfig, chunk_steps: int, block_r: int,
+                       gather: str, interpret: bool,
+                       store: CouplingStore) -> SolveResult:
+    n = problem.num_spins
+    r = config.num_replicas
+    planes = store.planes
+    base = jax.random.fold_in(jax.random.key(0), seed)
+    init = fused_init_state(problem, base, r, interpret=interpret,
+                            block_r=block_r, planes=planes)
+    tbl = solver_pwl_table(config)
+    sweep_couplings = store.kernel_operand
+    if planes is not None:
+        # "auto"/"dynamic" resolve to the O(N) row fetch; an explicit
+        # "onehot" flows through so the kernel raises its dense-only error
+        # rather than being silently overridden here.
+        gather = gather if gather == "onehot" else "dynamic"
+    else:
+        gather = _resolve_gather(gather, n)
+
+    chunk_len, num_chunks, rem_steps = anneal_chunk_plan(config, chunk_steps)
 
     def chunk(carry, c, clen):
         steps = c * chunk_len + jnp.arange(clen)
@@ -275,7 +219,7 @@ def _fused_anneal_impl(problem: ising.IsingProblem, seed: jax.Array,
             sweep_couplings, carry, rng.stream(base, rng.Salt.SWEEP, c),
             clen, temps, mode=config.mode, uniformized=config.uniformized,
             pwl_table=tbl, gather=gather, block_r=fit_block(r, block_r),
-            coupling=fmt, interpret=interpret)
+            coupling=store.fmt, interpret=interpret)
         return state, state[3]  # best-so-far energy at chunk end
 
     (u, s, e, be, bs, nf), trace = jax.lax.scan(
@@ -311,26 +255,31 @@ def fused_anneal(problem: ising.IsingProblem, seed, config: SolverConfig,
     ``coupling`` overrides ``config.coupling_format`` ("auto" picks the
     packed bit-plane store when J is integral, N is past the f32 VMEM
     crossover, and packing actually shrinks J — escalating to the
-    HBM-streamed store past the packed-VMEM wall); plane packing happens
-    here, on the host, so the jitted impl only ever sees ready arrays.
-    Callers that already hold packed planes (benchmarks, repeated solves of
-    one instance) pass the ``BitPlanes`` itself as ``coupling`` to skip the
-    O(N²·B) re-encode — the store tier then follows
-    ``config.coupling_format`` when it names a plane format, else the
-    VMEM-resident "bitplane" path. ``num_planes`` forces the precision B
-    (default: fewest planes covering |J|max).
+    HBM-streamed store past the packed-VMEM wall); the
+    ``CouplingStore.build`` packing happens here, on the host, so the jitted
+    impl only ever sees ready arrays. Callers that already hold packed
+    planes (benchmarks, repeated solves of one instance) pass the
+    ``BitPlanes`` itself as ``coupling`` to skip the O(N²·B) re-encode —
+    the store tier then follows ``config.coupling_format`` when it names a
+    single-device plane format, else the VMEM-resident "bitplane" path.
+    ``num_planes`` forces the precision B (default: fewest planes covering
+    |J|max). The "bitplane_sharded" tier is rejected here — it is served by
+    the spin-parallel ``repro.distributed.solver_sharded.solve_sharded``.
     """
     if isinstance(coupling, BitPlanes):
-        planes = coupling
+        # Any plane format on the config flows into the store so require()
+        # below can reject tiers this driver does not serve (a
+        # "bitplane_sharded" config must raise the routing error here too,
+        # never silently downgrade to the VMEM tier).
         fmt = (config.coupling_format
-               if config.coupling_format in ("bitplane", "bitplane_hbm")
-               else "bitplane")
+               if config.coupling_format in PLANE_FORMATS else "bitplane")
+        store = CouplingStore.from_planes(coupling, fmt)
     else:
-        fmt = resolve_coupling_format(
+        store = CouplingStore.build(
+            problem.couplings,
             coupling if coupling is not None else config.coupling_format,
-            problem.couplings, problem.num_spins)
-        planes = (encode_for_sweep(problem.couplings, num_planes, fmt)
-                  if fmt in ("bitplane", "bitplane_hbm") else None)
+            num_planes=num_planes)
+    store.require(KERNEL_COUPLING_MODES, "fused_anneal")
     return _fused_anneal_impl(problem, jnp.asarray(seed, jnp.uint32), config,
                               chunk_steps, block_r, gather,
-                              auto_interpret(interpret), planes, fmt)
+                              auto_interpret(interpret), store)

@@ -69,13 +69,50 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..core.bitplane import WORD_BITS, BitPlanes
+from ..core import coupling as coupling_store
 from . import common
 
-#: Coupling-store modes of the fused sweep (see module docstring).
-COUPLING_MODES = ("dense", "bitplane", "bitplane_hbm")
+#: Coupling-store modes of the fused sweep (the single-device slice of the
+#: ``core.coupling`` format registry; the sharded tier has its own driver).
+COUPLING_MODES = coupling_store.KERNEL_COUPLING_MODES
 #: Modes that consume a packed ``BitPlanes`` instead of a dense (N, N) J.
-PLANE_MODES = ("bitplane", "bitplane_hbm")
+PLANE_MODES = coupling_store.KERNEL_PLANE_MODES
+
+
+def _dense_layout(couplings, n):
+    """VMEM-resident (N, N) f32 J, broadcast to every replica block."""
+    return [pl.BlockSpec((n, n), lambda i: (0, 0))], [couplings], []
+
+
+def _bitplane_layout(couplings, n):
+    """VMEM-resident packed planes: pos/neg (B, N, W) broadcast."""
+    bp, _, w = couplings.pos.shape
+    return ([pl.BlockSpec((bp, n, w), lambda i: (0, 0, 0)),
+             pl.BlockSpec((bp, n, w), lambda i: (0, 0, 0))],
+            [couplings.pos, couplings.neg], [])
+
+
+def _bitplane_hbm_layout(couplings, n):
+    """HBM-resident planes: never enter the block pipeline (ANY pins them to
+    HBM); the kernel streams (B, 1, W) row tiles into a 2-slot VMEM scratch
+    double-buffer with one DMA semaphore per (slot, sign) in-flight copy."""
+    bp, _, w = couplings.pos.shape
+    return ([pl.BlockSpec(memory_space=pltpu.ANY),
+             pl.BlockSpec(memory_space=pltpu.ANY)],
+            [couplings.pos, couplings.neg],
+            [pltpu.VMEM((2, bp, 1, w), jnp.uint32),   # pos row tiles
+             pltpu.VMEM((2, bp, 1, w), jnp.uint32),   # neg row tiles
+             pltpu.SemaphoreType.DMA((2, 2))])        # (slot, sign) DMAs
+
+
+#: Kernel-side half of the coupling-store contract: resolved format name →
+#: (in_specs, operands, scratch_shapes) for the J store. The host-side half
+#: is ``core.coupling.CouplingStore.build``.
+_STORE_LAYOUTS = {
+    "dense": _dense_layout,
+    "bitplane": _bitplane_layout,
+    "bitplane_hbm": _bitplane_hbm_layout,
+}
 
 
 def _gather_scalars(x: jax.Array, sites: jax.Array, br: int) -> jax.Array:
@@ -295,54 +332,14 @@ def mcmc_sweep(couplings, fields0: jax.Array, spins0: jax.Array,
     assert uniforms.shape == (t, r, 4) and temps.shape == (t, r)
     if gather not in ("dynamic", "onehot"):
         raise ValueError(f"gather must be 'dynamic' or 'onehot', got {gather!r}")
-    if coupling not in COUPLING_MODES:
-        raise ValueError(
-            f"coupling must be one of {COUPLING_MODES}, got {coupling!r}")
-    if coupling in PLANE_MODES:
-        if not isinstance(couplings, BitPlanes):
-            raise TypeError(f"coupling={coupling!r} needs a BitPlanes "
-                            f"couplings argument, got {type(couplings).__name__}")
-        if couplings.num_spins != n:
-            raise ValueError(f"BitPlanes N={couplings.num_spins} != state N={n}")
-        if couplings.num_words * WORD_BITS < n:
-            raise ValueError(f"BitPlanes W={couplings.num_words} words cannot "
-                             f"cover N={n} couplers")
-        if gather == "onehot":
-            raise ValueError("gather='onehot' requires a dense J (the MXU "
-                             "contraction cannot consume packed planes)")
-    else:
-        assert couplings.shape == (n, n)
+    coupling_store.validate_kernel_operand(coupling, couplings, n, gather)
     br = common.fit_block(r, block_r)
     lane = common.default_lane(n) if lane is None else lane
     if n % lane:
         raise ValueError(f"N={n} not divisible by lane={lane}")
     grid = (r // br,)
-    scratch_shapes = []
-    if coupling == "bitplane":
-        bp, _, w = couplings.pos.shape
-        in_specs = [
-            pl.BlockSpec((bp, n, w), lambda i: (0, 0, 0)),  # pos planes bcast
-            pl.BlockSpec((bp, n, w), lambda i: (0, 0, 0)),  # neg planes bcast
-        ]
-        j_args = [couplings.pos, couplings.neg]
-    elif coupling == "bitplane_hbm":
-        bp, _, w = couplings.pos.shape
-        # Planes never enter the block pipeline: ANY pins them to HBM and the
-        # kernel streams (B, 1, W) row tiles into the 2-slot VMEM scratch.
-        in_specs = [
-            pl.BlockSpec(memory_space=pltpu.ANY),
-            pl.BlockSpec(memory_space=pltpu.ANY),
-        ]
-        j_args = [couplings.pos, couplings.neg]
-        scratch_shapes = [
-            pltpu.VMEM((2, bp, 1, w), jnp.uint32),   # pos row tiles
-            pltpu.VMEM((2, bp, 1, w), jnp.uint32),   # neg row tiles
-            pltpu.SemaphoreType.DMA((2, 2)),          # (slot, sign) DMAs
-        ]
-    else:
-        in_specs = [pl.BlockSpec((n, n), lambda i: (0, 0))]  # J broadcast
-        j_args = [couplings]
-    in_specs += [
+    in_specs, j_args, scratch_shapes = _STORE_LAYOUTS[coupling](couplings, n)
+    in_specs = in_specs + [
         pl.BlockSpec((br, n), lambda i: (i, 0)),       # u0
         pl.BlockSpec((br, n), lambda i: (i, 0)),       # s0
         pl.BlockSpec((br, 1), lambda i: (i, 0)),       # e0

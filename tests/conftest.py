@@ -1,8 +1,37 @@
 import numpy as np
 import pytest
 
+from benchmarks.subproc import run_forced_device_subprocess
+
 # NOTE: do NOT set XLA_FLAGS / device-count here — smoke tests and benches must
 # see the single real CPU device; only launch/dryrun.py forces 512 devices.
+# Multi-device cases go through run_with_forced_devices below instead: XLA's
+# host device count locks at first jax init, so a forced mesh needs a fresh
+# subprocess (env plumbing shared with the sharded bench suite via
+# benchmarks/subproc.py).
+
+
+def run_with_forced_devices(code: str, n_devices: int = 8,
+                            timeout: int = 420) -> str:
+    """Run ``code`` in a subprocess with a forced multi-device CPU platform
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+
+    The shared harness behind every multi-device tier-1 test — including the
+    spin-sharded coupling tier's exact-parity test, which needs a real
+    D ≥ 2 mesh rather than a pod. Asserts the subprocess exits cleanly and
+    returns its stdout.
+    """
+    proc = run_forced_device_subprocess(code, n_devices=n_devices,
+                                        timeout=timeout)
+    assert proc.returncode == 0, f"subprocess failed:\n{proc.stderr[-4000:]}"
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def forced_device_mesh():
+    """Fixture handle on :func:`run_with_forced_devices` — request it to run
+    a test body on a forced multi-device CPU mesh."""
+    return run_with_forced_devices
 
 
 @pytest.fixture(scope="session")

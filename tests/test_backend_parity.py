@@ -446,6 +446,108 @@ def test_coupling_format_auto_resolution():
         jnp.asarray(J_int)) is not None
 
 
+def test_coupling_store_build_is_the_single_dispatch_point():
+    """The CouplingStore subsystem (core.coupling): build() resolves + packs
+    in one call, the registry spans all four tiers, stores are pytrees with
+    static formats, and per-shard byte accounting divides the plane store."""
+    from repro.core import coupling as cs
+
+    J = _sym(8, 64, integer=True, scale=2.0)
+    assert cs.COUPLING_FORMATS == ("auto", "dense", "bitplane",
+                                   "bitplane_hbm", "bitplane_sharded")
+    assert cs.KERNEL_COUPLING_MODES == ("dense", "bitplane", "bitplane_hbm")
+    dense = cs.CouplingStore.build(jnp.asarray(J), "dense")
+    assert dense.fmt == "dense" and dense.planes is None
+    assert dense.kernel_operand is dense.dense
+    assert dense.nbytes == 64 * 64 * 4
+    packed = cs.CouplingStore.build(J, "bitplane")
+    assert packed.fmt == "bitplane" and packed.dense is None
+    assert packed.kernel_operand is packed.planes
+    # HBM/sharded tiers tile-pad the word axis per the registry.
+    for fmt in ("bitplane_hbm", "bitplane_sharded"):
+        store = cs.CouplingStore.build(J, fmt)
+        assert store.planes.num_words % cs.STREAM_ALIGN_WORDS == 0
+        assert store.plane_bytes_per_shard(2) * 2 == store.planes.nbytes
+    # Stores are pytrees whose format is aux data (static under jit).
+    leaves, treedef = jax.tree_util.tree_flatten(packed)
+    again = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert again.fmt == "bitplane" and again.num_spins == 64
+    # require() is the driver-side registry check with a routing hint.
+    with pytest.raises(ValueError, match="solve_sharded"):
+        cs.CouplingStore.build(J, "bitplane_sharded").require(
+            cs.KERNEL_COUPLING_MODES, "fused_anneal")
+
+
+def test_sharded_format_is_explicit_only_and_rejected_by_kernel_drivers():
+    """"auto" never resolves to the sharded tier (it needs a mesh), an
+    explicit sharded format under a trace raises the concrete-J error, and
+    each single-device driver rejects the sharded store with a pointer at
+    the spin-parallel driver."""
+    from repro.kernels import ops
+
+    J_int = np.asarray(_sym(8, 16, integer=True, scale=2.0))
+    assert ops.resolve_coupling_format(
+        "bitplane_sharded", J_int, 16) == "bitplane_sharded"
+    huge = ops.BITPLANE_VMEM_MAX_N * 4
+    assert ops.resolve_coupling_format("auto", J_int, huge) == "bitplane_hbm"
+
+    def traced(J):
+        return ops.resolve_coupling_format("bitplane_sharded", J, 4096)
+
+    with pytest.raises(ValueError, match="concrete"):
+        jax.make_jaxpr(traced)(jnp.asarray(J_int))
+
+    prob = ising.IsingProblem.create(J=_sym(5, 12, integer=True, scale=2.0))
+    cfg = SolverConfig(num_steps=8, schedule=geometric(1.0, 0.1, 8),
+                       num_replicas=2, coupling_format="bitplane_sharded")
+    with pytest.raises(ValueError, match="solve_sharded"):
+        solve(prob, 0, cfg, backend="fused")
+    tcfg = TemperingConfig(num_steps=8, t_min=0.1, t_max=1.0, num_replicas=2,
+                           backend="fused", coupling_format="bitplane_sharded")
+    with pytest.raises(ValueError, match="solve_sharded"):
+        solve_tempering(prob, 0, tcfg)
+
+
+def test_distributed_fused_planes_do_not_ship_dense_couplings():
+    """Satellite contract: with a plane-backed store the dense J never enters
+    shard_map (the runner closes over the encoded planes; chain inits run
+    off the planes too) — and the plane-fed chain init is value-identical to
+    the dense one."""
+    from jax.sharding import Mesh
+    from repro.core.coupling import CouplingStore
+    from repro.core import mcmc
+    from repro.distributed.solver_dist import (_init_chain_from_planes,
+                                               DistSolverConfig,
+                                               solve_distributed)
+
+    prob = ising.IsingProblem.create(J=_sym(9, 32, integer=True, scale=1.5),
+                                     h=np.linspace(-1, 1, 32).astype(np.float32))
+    store = CouplingStore.build(prob.couplings, "bitplane")
+    spins = np.where(np.random.default_rng(0).random(32) < 0.5, 1, -1)
+    spins = jnp.asarray(spins, jnp.int8)
+    via_planes = _init_chain_from_planes(store.planes, prob.fields, spins)
+    via_dense = mcmc.init_chain(prob, spins)
+    for name in mcmc.ChainState._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(via_planes, name)),
+                                      np.asarray(getattr(via_dense, name)),
+                                      err_msg=name)
+    # End-to-end: the bitplane-format distributed solve (which no longer
+    # receives J as an operand) still matches its dense-format twin exactly.
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    base = SolverConfig(num_steps=128, schedule=geometric(6.0, 0.05, 128),
+                        mode="rwa", num_replicas=1, trace_every=32)
+    results = {}
+    for fmt in ("dense", "bitplane"):
+        cfg = DistSolverConfig(
+            base=dataclasses.replace(base, coupling_format=fmt),
+            replicas_per_device=4, exchange_every=2, backend="fused")
+        results[fmt] = solve_distributed(prob, 7, cfg, mesh)
+    np.testing.assert_array_equal(np.asarray(results["dense"].best_energy),
+                                  np.asarray(results["bitplane"].best_energy))
+    np.testing.assert_array_equal(np.asarray(results["dense"].trace_energy),
+                                  np.asarray(results["bitplane"].trace_energy))
+
+
 def test_fused_anneal_accepts_prepacked_planes_and_rejects_onehot():
     """Callers may pass ready BitPlanes as `coupling` (skips the O(N²·B)
     re-encode — the benchmark path), and an explicit onehot gather on the

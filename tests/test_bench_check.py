@@ -92,6 +92,58 @@ def test_rerecording_a_stamp_replaces_instead_of_duplicating():
             os.remove(path)
 
 
+def test_committed_history_has_spin_sharded_point():
+    """The fourth coupling tier is anchored too: the N=16384 sharded point
+    must exist and its per-device plane bytes must be exactly half the
+    single-device streamed store (D=2 — the aggregate-HBM capacity claim
+    as an identity on recorded bytes)."""
+    payload = _load()
+    results = payload["results"]
+    assert "N16384_sharded" in results, sorted(results)
+    cell = results["N16384_sharded"]["rsa"]
+    assert cell["num_devices"] == 2
+    assert cell["plane_bytes_per_device"] * 2 == cell["plane_bytes_total"]
+    assert (cell["plane_bytes_per_device"] * 2
+            == results["N16384"]["rsa"]["j_bytes_hbm_planes"])
+    assert cell["sharded_us_per_step"] > 0
+    assert cell["row_broadcast_words_per_step"] > 0
+
+
+def test_check_flags_broken_sharded_points():
+    """--check knows the sharded schema: uneven per-device byte splits, a
+    store that is not the single-device planes divided across the mesh, and
+    sub-2-device 'sharding' all fail the gate."""
+    from benchmarks.run import check_sharded_points
+
+    good = {
+        "N16384": {"rsa": {"j_bytes_hbm_planes": 1000}},
+        "N16384_sharded": {"rsa": {
+            "num_devices": 2, "plane_bytes_per_device": 500,
+            "plane_bytes_total": 1000, "sharded_us_per_step": 3.0}},
+    }
+    assert check_sharded_points(good) == []
+    uneven = copy.deepcopy(good)
+    uneven["N16384_sharded"]["rsa"]["plane_bytes_per_device"] = 400
+    assert any("divide the store evenly" in e
+               for e in check_sharded_points(uneven))
+    mismatched = copy.deepcopy(good)
+    mismatched["N16384"]["rsa"]["j_bytes_hbm_planes"] = 800
+    assert any("divided 2 ways" in e for e in check_sharded_points(mismatched))
+    single = copy.deepcopy(good)
+    single["N16384_sharded"]["rsa"].update(num_devices=1,
+                                           plane_bytes_per_device=1000)
+    assert any(">= 2 devices" in e for e in check_sharded_points(single))
+    incomplete = {"N16384_sharded": {"rsa": {"num_devices": 2}}}
+    assert any("needs integer" in e for e in check_sharded_points(incomplete))
+    # ...and the full checker routes through the same validation.
+    payload = _load()
+    broken = copy.deepcopy(payload)
+    broken["history"][-1]["results"].update(copy.deepcopy(uneven))
+    broken["results"] = broken["history"][-1]["results"]
+    assert any("divide the store evenly" in e
+               for e in check_bench_history(broken))
+
+
 def test_check_flags_diverged_top_level_results():
     payload = _load()
     broken = copy.deepcopy(payload)

@@ -1,28 +1,12 @@
 """Distribution tests: shard_map solver parity, compressed grads, pipeline
 parallelism, logical sharding rules. Multi-device cases run in subprocesses
-(XLA device count locks at first jax init; conftest must keep 1 device)."""
-import json
-import os
-import subprocess
-import sys
-import textwrap
-
+(XLA device count locks at first jax init; conftest must keep 1 device) via
+the shared ``conftest.run_with_forced_devices`` harness."""
 import numpy as np
 import pytest
+from conftest import run_with_forced_devices as run_with_devices
 
 from repro.models.sharding import ShardingRules
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def run_with_devices(code: str, n_devices: int = 8, timeout: int = 420) -> str:
-    env = dict(os.environ,
-               XLA_FLAGS=f"--xla_force_host_platform_device_count={n_devices}",
-               PYTHONPATH=os.path.join(REPO, "src"))
-    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                          capture_output=True, text=True, env=env, timeout=timeout)
-    assert proc.returncode == 0, f"subprocess failed:\n{proc.stderr[-4000:]}"
-    return proc.stdout
 
 
 def test_sharding_rules_spec_dedup_and_mesh_filter():
