@@ -91,6 +91,51 @@ def check_bench_history(payload: dict,
                     f"{fused / base:.2f}x the baseline's {base:.1f} — over "
                     f"the {max_ratio}x regression gate")
     errors.extend(check_sharded_points(latest))
+    errors.extend(check_ingestion_points(latest))
+    return errors
+
+
+def check_ingestion_points(latest: dict) -> list[str]:
+    """Schema + cost gates for sparse-ingestion cells (``N*_sparse_ingest``
+    keys): setup accounting must be present, the sparse→plane encode may not
+    cost more wall-time than the dense detour *measured in the same run*
+    (both columns come from one session, so the ratio is load-robust like
+    the fused gate), and the sparse build's peak host bytes must stay under
+    the (N, N) f32 it exists to avoid — the dense-J-free claim as an
+    inequality on recorded numbers."""
+    errors = []
+    for n_key, modes in sorted(latest.items()):
+        if not n_key.endswith("_sparse_ingest") or not isinstance(modes, dict):
+            continue
+        for mode, cell in sorted(modes.items()):
+            if not isinstance(cell, dict):
+                continue
+            num = ("setup_seconds", "setup_seconds_dense_ingest",
+                   "peak_j_build_bytes", "peak_j_build_bytes_dense_ingest",
+                   "sparse_solve_us_per_step")
+            if not all(isinstance(cell.get(k), (int, float)) and cell[k] > 0
+                       for k in num):
+                errors.append(f"{n_key}/{mode}: sparse-ingest point needs "
+                              f"positive numeric {num}")
+                continue
+            if not (isinstance(cell.get("nnz"), int)
+                    and isinstance(cell.get("j_bytes_dense_f32"), int)):
+                errors.append(f"{n_key}/{mode}: sparse-ingest point needs "
+                              "integer nnz / j_bytes_dense_f32")
+                continue
+            if cell["setup_seconds"] > cell["setup_seconds_dense_ingest"]:
+                errors.append(
+                    f"{n_key}/{mode}: sparse ingestion setup "
+                    f"{cell['setup_seconds']:.3f}s exceeds the dense detour's "
+                    f"{cell['setup_seconds_dense_ingest']:.3f}s in the same "
+                    "run — O(nnz) ingestion must not cost more than the "
+                    "O(N^2) path it replaces")
+            if cell["peak_j_build_bytes"] >= cell["j_bytes_dense_f32"]:
+                errors.append(
+                    f"{n_key}/{mode}: sparse build peaked at "
+                    f"{cell['peak_j_build_bytes']} B, not under the "
+                    f"{cell['j_bytes_dense_f32']} B (N, N) f32 — the "
+                    "dense-J-free footprint claim fails")
     return errors
 
 

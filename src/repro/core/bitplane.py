@@ -140,6 +140,71 @@ def encode_couplings(J: np.ndarray, num_planes: int,
     )
 
 
+def edge_plane_words(edges, num_planes: int, align_words: int = 1,
+                     row_range: "tuple[int, int] | None" = None
+                     ) -> "tuple[np.ndarray, np.ndarray]":
+    """O(nnz) sparse → packed-plane encoding: the numpy word arrays for (a row
+    slice of) the planes of a canonical :class:`repro.core.ising.EdgeList`.
+
+    Never materializes an (N, N) anything — work and temporaries are O(nnz)
+    (each undirected edge scatters its bit into rows i and j) plus the output
+    plane words themselves. ``row_range=(lo, hi)`` keeps only plane rows
+    [lo, hi) with row indices rebased to lo — the per-device build of the
+    spin-sharded tier, where device d encodes *only its own slab* and the
+    full (B, N, W) store never exists on any single host. Returns
+    ``(pos, neg)`` as (B, hi-lo, W) uint32; slicing commutes with encoding
+    (bits land per (row, word) independently), which the row-slab tests
+    assert against the dense encoder.
+    """
+    n = edges.num_spins
+    lo_row, hi_row = (0, n) if row_range is None else row_range
+    if not 0 <= lo_row <= hi_row <= n:
+        raise ValueError(f"row_range {row_range} out of bounds for N={n}")
+    limit = 1 << num_planes
+    amax = int(np.abs(edges.weights).max(initial=0))
+    if amax >= limit:
+        raise ValueError(f"|J|max={amax} needs more than {num_planes} planes")
+    if align_words < 1:
+        raise ValueError(f"align_words must be >= 1, got {align_words}")
+    w_min = -(-n // WORD_BITS)
+    num_words = -(-w_min // align_words) * align_words
+    # Symmetrize: each canonical (i < j, w) entry sets bit j in row i and
+    # bit i in row j — exactly the dense encoder's J[i,j] = J[j,i] = w.
+    r2 = np.concatenate([edges.rows, edges.cols]).astype(np.int64)
+    c2 = np.concatenate([edges.cols, edges.rows]).astype(np.int64)
+    w2 = np.concatenate([edges.weights, edges.weights])
+    if row_range is not None:
+        keep = (r2 >= lo_row) & (r2 < hi_row)
+        r2, c2, w2 = r2[keep], c2[keep], w2[keep]
+    r2 = r2 - lo_row
+    word = c2 // WORD_BITS
+    bit = (np.uint32(1) << (c2 % WORD_BITS).astype(np.uint32))
+    mag = np.abs(w2)
+    shape = (num_planes, hi_row - lo_row, num_words)
+    pos = np.zeros(shape, np.uint32)
+    neg = np.zeros(shape, np.uint32)
+    for b in range(num_planes):
+        has_bit = ((mag >> b) & 1) == 1
+        for plane, sel in ((pos, w2 > 0), (neg, w2 < 0)):
+            m = has_bit & sel
+            np.bitwise_or.at(plane[b], (r2[m], word[m]), bit[m])
+    return pos, neg
+
+
+def encode_edges(edges, num_planes: int | None = None,
+                 align_words: int = 1) -> BitPlanes:
+    """Sparse counterpart of :func:`encode_couplings`: canonical edge list →
+    packed :class:`BitPlanes`, O(nnz) work, dense-J-free. Plane-for-plane
+    bit-identical to ``encode_couplings(edges.to_dense(), ...)`` (symmetry
+    and the zero diagonal hold by EdgeList construction, so no dense-side
+    validation pass is needed — or possible — here)."""
+    if num_planes is None:
+        num_planes = max(1, edges.max_abs_weight.bit_length())
+    pos, neg = edge_plane_words(edges, num_planes, align_words)
+    return BitPlanes(pos=jnp.asarray(pos), neg=jnp.asarray(neg),
+                     num_spins=edges.num_spins)
+
+
 def decode_couplings(planes: BitPlanes) -> np.ndarray:
     """Inverse of :func:`encode_couplings` (exact; used by round-trip tests)."""
     pos = np.asarray(planes.pos)

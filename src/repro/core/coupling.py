@@ -30,16 +30,27 @@ Now :meth:`CouplingStore.build` is the single host-side entry point
 plane format under a jax trace raises), :data:`FORMATS` is the registry every
 consumer dispatches through, and the kernel-side contract is
 :func:`validate_kernel_operand` plus the store's ``kernel_operand``.
+
+``build`` consumes either the dense (N, N) J or a canonical
+:class:`~repro.core.ising.EdgeList` — the dense-J-free ingestion path:
+edges pack straight into planes in O(nnz) (``bitplane.encode_edges``) and
+can never resolve to a dense store, so an instance given as an edge list is
+solved end to end without any (N, N) array existing. :func:`timed_build` /
+:func:`measure_host_build` record the setup cost (wall seconds + tracemalloc
+peak) the benchmark's ``setup_seconds`` / ``peak_j_build_bytes`` cells gate.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
+import tracemalloc
 from typing import Optional, Sequence
 
 import jax
 import numpy as np
 
-from .bitplane import BitPlanes, encode_couplings
+from .bitplane import BitPlanes, encode_couplings, encode_edges
+from .ising import EdgeList
 
 #: The f32 VMEM wall (DESIGN.md §Backends): above this N a dense f32 J no
 #: longer fits VMEM alongside the sweep state, so ``coupling_format="auto"``
@@ -118,7 +129,26 @@ def resolve_format(fmt: Optional[str], couplings, n: int) -> str:
     mesh, so only its driver (or an explicit knob) selects it.
     An explicit plane format under a jax trace raises — the planes cannot be
     packed from a tracer; encode first and pass them in.
+
+    An :class:`~repro.core.ising.EdgeList` source is dense-J-free by
+    contract: "auto" always resolves to a plane tier (VMEM planes up to the
+    packed wall, HBM-streamed past it — never "dense", which would
+    materialize the (N, N) f32 the representation exists to avoid), and an
+    explicit "dense" raises.
     """
+    if isinstance(couplings, EdgeList):
+        if fmt in (None, "auto"):
+            return "bitplane" if n <= BITPLANE_VMEM_MAX_N else "bitplane_hbm"
+        if fmt not in FORMATS:
+            raise ValueError(f"coupling format must be one of "
+                             f"{COUPLING_FORMATS}, got {fmt!r}")
+        if not FORMATS[fmt].packed:
+            raise ValueError(
+                "edge-list couplings are dense-J-free: coupling_format="
+                f"{fmt!r} would materialize the (N, N) f32 matrix — use a "
+                f"plane format ({PLANE_FORMATS}) or edges.to_dense() "
+                "explicitly for small N")
+        return fmt
     traced = isinstance(couplings, jax.core.Tracer)
     if fmt in (None, "auto"):
         if traced or n <= DENSE_COUPLING_MAX_N:
@@ -141,15 +171,21 @@ def resolve_format(fmt: Optional[str], couplings, n: int) -> str:
 
 def encode_planes(couplings, num_planes: Optional[int] = None,
                   fmt: str = "bitplane") -> BitPlanes:
-    """Pack a concrete integral J for a plane-backed coupling tier.
+    """Pack a concrete integral J (dense matrix **or** edge list) for a
+    plane-backed coupling tier.
 
     ``num_planes`` defaults to the fewest planes that represent |J|max
     (B = bit_length(|J|max), ≥ 1) — memory is linear in B, so auto-selection
     never over-allocates precision (paper §IV-B1). The word axis is padded to
     the registry's per-format alignment (:data:`STREAM_ALIGN_WORDS` for the
     HBM-streamed and sharded tiers) so each moved row tile is a
-    full-lane-width copy (padding is zero bits; decode truncates).
+    full-lane-width copy (padding is zero bits; decode truncates). An
+    :class:`EdgeList` routes through the O(nnz) sparse encoder — the
+    dense-J-free ingestion path.
     """
+    if isinstance(couplings, EdgeList):
+        return encode_edges(couplings, num_planes,
+                            align_words=FORMATS[fmt].align_words)
     J = np.asarray(couplings)
     if num_planes is None:
         amax = int(np.abs(np.rint(J)).max(initial=0))
@@ -218,8 +254,13 @@ class CouplingStore:
         dispatches through (``solve`` / ``solve_tempering`` /
         ``solve_distributed`` / ``solve_sharded``). Runs outside jit: "auto"
         under a trace quietly stays dense; an explicit plane format under a
-        trace raises (see :func:`resolve_format`)."""
-        n = int(couplings.shape[-1])
+        trace raises (see :func:`resolve_format`). ``couplings`` is the dense
+        (N, N) J **or** an :class:`EdgeList` — the latter packs planes in
+        O(nnz) and can never produce a dense store."""
+        if isinstance(couplings, EdgeList):
+            n = couplings.num_spins
+        else:
+            n = int(couplings.shape[-1])
         resolved = resolve_format(fmt, couplings, n)
         if FORMATS[resolved].packed:
             return cls(fmt=resolved, num_spins=n,
@@ -259,6 +300,15 @@ class CouplingStore:
                              f"over {num_shards} devices")
         return self.planes.nbytes // num_shards
 
+    def require_num_spins(self, n: int, driver: str) -> "CouplingStore":
+        """Prebuilt-store contract check: a memoized store must match the
+        problem it is reused against."""
+        if self.num_spins != n:
+            raise ValueError(f"prebuilt CouplingStore is for N="
+                             f"{self.num_spins} but {driver} got a problem "
+                             f"with N={n}")
+        return self
+
     def require(self, supported: Sequence[str], driver: str) -> "CouplingStore":
         """Driver-side registry check: raise if this store's tier is served
         by a different execution path."""
@@ -270,3 +320,38 @@ class CouplingStore:
                 f"coupling_format={self.fmt!r} is not supported by {driver} "
                 f"(supported: {tuple(supported)}){hint}")
         return self
+
+
+def measure_host_build(thunk):
+    """Run a host-side build step under wall-clock + tracemalloc peak
+    accounting. Returns ``(result, stats)`` with ``stats = {"seconds",
+    "peak_bytes"}`` — ``peak_bytes`` is the peak *additional* traced host
+    allocation during the call (python/numpy; device buffers staged from
+    numpy are counted at staging). This is the measurement behind the
+    benchmark's ``setup_seconds`` / ``peak_j_build_bytes`` cells: a dense
+    ingest at N=16384 peaks in the GiBs (the (N, N) f32 plus the encoder's
+    int64 temporaries), a sparse→plane ingest peaks at roughly the plane
+    bytes themselves — the dense-J-free claim as a recorded number.
+    """
+    was_tracing = tracemalloc.is_tracing()
+    if not was_tracing:
+        tracemalloc.start()
+    try:
+        base, _ = tracemalloc.get_traced_memory()
+        tracemalloc.reset_peak()
+        t0 = time.perf_counter()
+        result = thunk()
+        seconds = time.perf_counter() - t0
+        _, peak = tracemalloc.get_traced_memory()
+    finally:
+        if not was_tracing:
+            tracemalloc.stop()
+    return result, {"seconds": seconds, "peak_bytes": int(max(peak - base, 0))}
+
+
+def timed_build(couplings, fmt: Optional[str] = "auto", *,
+                num_planes: Optional[int] = None):
+    """:meth:`CouplingStore.build` under :func:`measure_host_build` —
+    ``(store, stats)`` for the benchmark's setup-cost cells."""
+    return measure_host_build(
+        lambda: CouplingStore.build(couplings, fmt, num_planes=num_planes))

@@ -11,7 +11,8 @@ energy change is ``ΔE_i = H(s^(i→-i)) - H(s) = 2 s_i u_i`` (paper Eq. 2).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import hashlib
+from functools import cached_property, partial
 from typing import Optional
 
 import jax
@@ -21,30 +22,183 @@ import numpy as np
 SPIN_DTYPE = jnp.int8
 
 
+@dataclasses.dataclass(frozen=True, eq=False)
+class EdgeList:
+    """Canonical sparse (COO / edge-list) couplings: the dense-J-free problem
+    representation.
+
+    Real benchmark instances (Gset Max-Cut, the paper's own evaluation set)
+    are O(nnz) edge lists, not O(N²) matrices — storing them as a dense J
+    costs a 1 GiB host allocation at N=16384 before the first flip. An
+    ``EdgeList`` holds each undirected edge exactly once in canonical form:
+    ``rows[k] < cols[k]`` (int32), integer ``weights`` (int64), sorted
+    lexicographically, duplicates coalesced. The equivalent dense matrix is
+    ``J[i, j] = J[j, i] = w`` for every entry — :meth:`to_dense` materializes
+    it (tests/small problems only; the solve path never does).
+
+    Construction goes through :meth:`create`, which defines the ingestion
+    semantics explicitly: entries are symmetric-canonicalized (``(i, j)`` and
+    ``(j, i)`` name the same edge), duplicates **sum** (scipy-COO
+    convention — so an edge listed in both directions doubles), exact-zero
+    coalesced weights are dropped, and self-loops raise (the encoders only
+    warn on a nonzero diagonal, but an edge list with self-loops is almost
+    always an ingestion bug, so the sparse front door refuses).
+
+    Host-side numpy by design: the edge arrays feed the O(nnz) bit-plane
+    encoder (``core.bitplane.encode_edges``) outside jit, and ride
+    ``IsingProblem``'s pytree *aux* data (content-hashed, so jitted drivers
+    cache correctly across repeated solves of one instance).
+    """
+
+    rows: np.ndarray     # (nnz,) int32, rows[k] < cols[k]
+    cols: np.ndarray     # (nnz,) int32
+    weights: np.ndarray  # (nnz,) int64, never zero
+    num_spins: int
+
+    @classmethod
+    def create(cls, rows, cols, weights, num_spins: int) -> "EdgeList":
+        """Canonicalize a raw COO triple (see class docstring for the exact
+        duplicate / symmetric-entry semantics)."""
+        rows = np.asarray(rows)
+        cols = np.asarray(cols)
+        w = np.asarray(weights)
+        if rows.ndim != 1 or rows.shape != cols.shape or rows.shape != w.shape:
+            raise ValueError(
+                f"edge arrays must be equal-length 1-D, got rows {rows.shape} "
+                f"cols {cols.shape} weights {w.shape}")
+        n = int(num_spins)
+        if n <= 0:
+            raise ValueError(f"num_spins must be positive, got {num_spins}")
+        ri = rows.astype(np.int64)
+        ci = cols.astype(np.int64)
+        if not (np.array_equal(ri, rows) and np.array_equal(ci, cols)):
+            raise ValueError("edge endpoints must be integers")
+        if rows.size and (ri.min() < 0 or ci.min() < 0
+                          or ri.max() >= n or ci.max() >= n):
+            raise ValueError(f"edge endpoints out of range for N={n}")
+        if np.any(ri == ci):
+            raise ValueError("self-loop edges (i == i) are not representable "
+                             "couplings; drop the diagonal before ingestion")
+        wi = np.rint(w).astype(np.int64)
+        if not np.array_equal(wi, w.astype(np.float64)):
+            raise ValueError("edge-list ingestion requires integer weights "
+                             "(pre-scale first)")
+        lo = np.minimum(ri, ci)
+        hi = np.maximum(ri, ci)
+        order = np.lexsort((hi, lo))
+        lo, hi, wi = lo[order], hi[order], wi[order]
+        if lo.size:
+            first = np.ones(lo.size, bool)
+            first[1:] = (lo[1:] != lo[:-1]) | (hi[1:] != hi[:-1])
+            starts = np.flatnonzero(first)
+            wi = np.add.reduceat(wi, starts)
+            lo, hi = lo[starts], hi[starts]
+            keep = wi != 0
+            lo, hi, wi = lo[keep], hi[keep], wi[keep]
+        return cls(rows=lo.astype(np.int32), cols=hi.astype(np.int32),
+                   weights=wi, num_spins=n)
+
+    @classmethod
+    def from_dense(cls, J) -> "EdgeList":
+        """Upper-triangle nonzeros of a symmetric zero-diagonal matrix
+        (tests / migration convenience — the point of the class is to never
+        need this direction at scale)."""
+        J = np.asarray(J)
+        if J.ndim != 2 or J.shape[0] != J.shape[1]:
+            raise ValueError(f"J must be square, got {J.shape}")
+        if not np.array_equal(J, J.T):
+            raise ValueError("J must be symmetric")
+        if np.any(np.diag(J) != 0):
+            raise ValueError("J must have zero diagonal")
+        r, c = np.nonzero(np.triu(J, 1))
+        return cls.create(r, c, J[r, c], J.shape[0])
+
+    @property
+    def nnz(self) -> int:
+        return int(self.rows.size)
+
+    @property
+    def max_abs_weight(self) -> int:
+        return int(np.abs(self.weights).max(initial=0))
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.rows.nbytes + self.cols.nbytes + self.weights.nbytes)
+
+    def negated(self) -> "EdgeList":
+        """The edge list of −J (e.g. the Max-Cut w → J = −w mapping)."""
+        return EdgeList(rows=self.rows, cols=self.cols,
+                        weights=-self.weights, num_spins=self.num_spins)
+
+    def to_dense(self, dtype=np.float32) -> np.ndarray:
+        """Materialize the (N, N) matrix — O(N²); tests and tiny N only."""
+        J = np.zeros((self.num_spins, self.num_spins), dtype)
+        J[self.rows, self.cols] = self.weights
+        J[self.cols, self.rows] = self.weights
+        return J
+
+    @cached_property
+    def _digest(self) -> bytes:
+        h = hashlib.sha256()
+        h.update(str(self.num_spins).encode())
+        for a in (self.rows, self.cols, self.weights):
+            h.update(a.tobytes())
+        return h.digest()
+
+    # Content-based identity: EdgeList rides IsingProblem's pytree aux data,
+    # which jit hashes/compares for cache lookups — numpy arrays are neither
+    # hashable nor unambiguously comparable, so both are defined here.
+    def __eq__(self, other) -> bool:
+        return (isinstance(other, EdgeList)
+                and self.num_spins == other.num_spins
+                and self._digest == other._digest)
+
+    def __hash__(self) -> int:
+        return hash((self.num_spins, self._digest))
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class IsingProblem:
     """An Ising instance: symmetric couplings ``J`` (zero diag) and fields ``h``.
 
-    ``J`` is stored dense (all-to-all coupled machine, paper §III-A); sparse
-    problem graphs simply have zero entries — no minor embedding is ever needed,
-    which is the paper's first design consideration.
+    ``J`` may be stored dense (all-to-all coupled machine, paper §III-A;
+    sparse problem graphs simply have zero entries — no minor embedding is
+    ever needed, the paper's first design consideration) **or** as a
+    canonical :class:`EdgeList` (``couplings=None``): the dense-J-free
+    representation for instances whose O(N²) matrix would not even fit on one
+    host. Edge-list problems are served by the plane-backed solve paths
+    (``backend="fused"`` / ``solve_sharded``); the dense-oracle helpers below
+    (``energy``/``local_fields``/the reference backend) require the dense J
+    and raise a routing error otherwise.
     """
 
-    couplings: jax.Array  # (N, N) float32, symmetric, zero diagonal
+    couplings: Optional[jax.Array]  # (N, N) float32, symmetric, zero diagonal
     fields: jax.Array  # (N,) float32
     offset: float = 0.0  # constant energy offset (e.g. from Max-Cut mapping)
+    edges: Optional[EdgeList] = None  # dense-J-free couplings (host-side COO)
 
     def tree_flatten(self):
-        return (self.couplings, self.fields), (self.offset,)
+        # ``edges`` is host-side numpy and rides the aux data (content-hashed,
+        # see EdgeList.__hash__) so jitted drivers cache across repeat solves.
+        return (self.couplings, self.fields), (self.offset, self.edges)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(couplings=children[0], fields=children[1], offset=aux[0])
+        return cls(couplings=children[0], fields=children[1], offset=aux[0],
+                   edges=aux[1] if len(aux) > 1 else None)
 
     @property
     def num_spins(self) -> int:
-        return self.couplings.shape[-1]
+        if self.couplings is not None:
+            return self.couplings.shape[-1]
+        return self.edges.num_spins
+
+    @property
+    def coupling_source(self):
+        """What ``core.coupling.CouplingStore.build`` consumes: the edge list
+        when the problem is dense-J-free, else the dense J."""
+        return self.edges if self.couplings is None else self.couplings
 
     @staticmethod
     def validate(J: np.ndarray, h: np.ndarray) -> None:
@@ -67,9 +221,39 @@ class IsingProblem:
             cls.validate(J, h)
         return cls(couplings=jnp.asarray(J), fields=jnp.asarray(h), offset=float(offset))
 
+    @classmethod
+    def create_sparse(cls, edges: EdgeList, h=None,
+                      offset: float = 0.0) -> "IsingProblem":
+        """Dense-J-free instance from a canonical :class:`EdgeList` — the
+        (N, N) f32 matrix is never materialized, here or anywhere downstream
+        on the plane-backed solve path."""
+        if not isinstance(edges, EdgeList):
+            raise TypeError(f"create_sparse needs an EdgeList, got "
+                            f"{type(edges).__name__} (EdgeList.create "
+                            "canonicalizes raw COO arrays)")
+        n = edges.num_spins
+        if h is None:
+            h = np.zeros(n, dtype=np.float32)
+        h = np.asarray(h, dtype=np.float32)
+        if h.shape != (n,):
+            raise ValueError(f"h shape {h.shape} incompatible with N={n}")
+        return cls(couplings=None, fields=jnp.asarray(h), offset=float(offset),
+                   edges=edges)
+
+
+def _require_dense(problem: IsingProblem, what: str) -> jax.Array:
+    if problem.couplings is None:
+        raise ValueError(
+            f"{what} needs the dense (N, N) couplings, but this problem is "
+            "edge-list-backed (dense-J-free). Use the plane-backed paths "
+            "(backend='fused', solve_sharded) or materialize explicitly via "
+            "problem.edges.to_dense() for small N.")
+    return problem.couplings
+
 
 def energy(problem: IsingProblem, spins: jax.Array) -> jax.Array:
     """H(s); ``spins`` is (..., N) in {-1,+1}. Returns (...,)."""
+    _require_dense(problem, "ising.energy")
     s = spins.astype(jnp.float32)
     Js = jnp.einsum("ij,...j->...i", problem.couplings, s)
     pair = -0.5 * jnp.einsum("...i,...i->...", s, Js)
@@ -79,8 +263,29 @@ def energy(problem: IsingProblem, spins: jax.Array) -> jax.Array:
 
 def local_fields(problem: IsingProblem, spins: jax.Array) -> jax.Array:
     """u_i = h_i + Σ_j J_ij s_j, computed from scratch (paper Eq. 11)."""
+    _require_dense(problem, "ising.local_fields")
     s = spins.astype(jnp.float32)
     return jnp.einsum("ij,...j->...i", problem.couplings, s) + problem.fields
+
+
+def energy_from_fields(u_j: jax.Array, spins: jax.Array,
+                       fields: jax.Array) -> jax.Array:
+    """H(s) from precomputed pairwise local fields ``u^J = J s``.
+
+    ``pair = -0.5 Σ_i s_i u^J_i`` and ``field = -Σ_i h_i s_i`` — the *same
+    einsum contractions* as :func:`energy`, evaluated on ``u^J`` instead of
+    ``J s``. When ``u^J`` is bit-identical to the dense matmul (the
+    Hamming-weight accumulation on an integer J is — exact integer sums below
+    2²⁴ in f32), the result is bitwise equal to the dense-path energy for
+    *any* h, which is what keeps dense-fed and plane-fed trajectories exactly
+    equal. This is the single e₀ assembly every dense-J-free init routes
+    through (fused init, the sharded per-device init, and the distributed
+    driver's plane-fed chain re-init).
+    """
+    s = spins.astype(jnp.float32)
+    pair = -0.5 * jnp.einsum("...i,...i->...", s, u_j.astype(jnp.float32))
+    field = -jnp.einsum("i,...i->...", fields, s)
+    return pair + field
 
 
 def delta_energies(problem: IsingProblem, spins: jax.Array, u: Optional[jax.Array] = None) -> jax.Array:

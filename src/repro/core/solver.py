@@ -109,7 +109,7 @@ _run_jit = partial(jax.jit, static_argnames=("config",))(_run)
 
 
 def solve(problem: ising.IsingProblem, seed, config: SolverConfig,
-          backend: str = "reference") -> SolveResult:
+          backend: str = "reference", *, store=None) -> SolveResult:
     """Entry point; the engines underneath are jitted. ``seed`` is a dynamic
     int32 (host 64-bit seed).
 
@@ -119,19 +119,34 @@ def solve(problem: ising.IsingProblem, seed, config: SolverConfig,
     schedule, PWL/uniformized options, and trace shape/dtype/cadence, O(N)
     per-step work, different (documented) RNG stream layout. Dispatch happens
     on the host (not under jit) so the fused path can resolve
-    ``config.coupling_format`` and pack bit-planes from the concrete J.
+    ``config.coupling_format`` and pack bit-planes from the concrete J —
+    for edge-list (dense-J-free) problems via the O(nnz) sparse encoder.
+
+    ``store`` takes a prebuilt ``core.coupling.CouplingStore`` so repeated
+    solves of one instance (TTS sweeps, restarts) skip the resolve→encode
+    entirely; fused backend only (the reference oracle always consumes the
+    dense J). Edge-list problems require ``backend="fused"``.
     """
     if backend == "fused":
         # Lazy import: kernels.ops imports this module for SolverConfig.
         from ..kernels import ops as _ops
-        return _ops.fused_anneal(problem, seed, config)
+        return _ops.fused_anneal(problem, seed, config, store=store)
     if backend != "reference":
         raise ValueError(f"backend must be 'reference' or 'fused', got {backend!r}")
+    if store is not None:
+        raise ValueError("a prebuilt CouplingStore serves the fused backend "
+                         "only; backend='reference' always consumes the "
+                         "dense J")
+    if problem.couplings is None:
+        raise ValueError(
+            "backend='reference' needs the dense J; edge-list (dense-J-free) "
+            "problems are served by backend='fused' or solve_sharded")
     return _run_jit(problem, jnp.asarray(seed, jnp.uint32), config)
 
 
 def solve_many(problem: ising.IsingProblem, seeds, config: SolverConfig,
-               backend: str = "reference") -> SolveResult:
-    """Independent runs (for TTS success-probability estimation)."""
-    return jax.vmap(lambda s: solve(problem, s, config, backend))(
+               backend: str = "reference", *, store=None) -> SolveResult:
+    """Independent runs (for TTS success-probability estimation). A prebuilt
+    ``store`` is encoded once and reused across every vmapped run."""
+    return jax.vmap(lambda s: solve(problem, s, config, backend, store=store))(
         jnp.asarray(seeds, jnp.uint32))

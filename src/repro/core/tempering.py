@@ -183,18 +183,42 @@ _solve_tempering_fused_jit = partial(
 
 
 def solve_tempering(problem: ising.IsingProblem, seed,
-                    config: TemperingConfig) -> TemperingResult:
+                    config: TemperingConfig, *, store=None) -> TemperingResult:
     """Host-level dispatcher (the engines underneath are jitted): the fused
     path resolves ``config.coupling_format`` into a ``CouplingStore`` (one
-    ``build`` call packs bit-planes from the concrete J) before entering
-    jit."""
+    ``build`` call packs bit-planes from the concrete J — or from the edge
+    list via the O(nnz) sparse encoder for dense-J-free problems) before
+    entering jit.
+
+    ``store`` takes a prebuilt ``CouplingStore`` so tempering restarts /
+    repeated ladder sweeps of one instance skip the re-resolve→re-encode
+    (fused backend only — the reference chains consume the dense J).
+    """
     if config.backend == "fused":
         from .coupling import KERNEL_COUPLING_MODES, CouplingStore
-        store = CouplingStore.build(
-            problem.couplings, config.coupling_format).require(
-            KERNEL_COUPLING_MODES, "solve_tempering")
+        if store is None:
+            store = CouplingStore.build(
+                problem.coupling_source, config.coupling_format)
+        else:
+            store.require_num_spins(problem.num_spins, "solve_tempering")
+            if (store.dense is not None
+                    and store.dense is not problem.couplings):
+                raise ValueError(
+                    "prebuilt dense CouplingStore does not hold this "
+                    "problem's couplings array — the init would run on one J "
+                    "and the sweep on another; rebuild the store from "
+                    "problem.couplings")
+        store.require(KERNEL_COUPLING_MODES, "solve_tempering")
         return _solve_tempering_fused_jit(problem, seed, config, store)
+    if store is not None:
+        raise ValueError("a prebuilt CouplingStore serves the fused backend "
+                         "only; backend='reference' always consumes the "
+                         "dense J")
     if config.backend != "reference":
         raise ValueError(
             f"backend must be 'reference' or 'fused', got {config.backend!r}")
+    if problem.couplings is None:
+        raise ValueError(
+            "backend='reference' tempering needs the dense J; edge-list "
+            "(dense-J-free) problems are served by the fused backend")
     return _solve_tempering_reference_jit(problem, seed, config)

@@ -44,14 +44,12 @@ def _init_chain_from_planes(planes, fields_h, spins) -> mcmc.ChainState:
 
     Trajectory-exact vs the dense init for integer J: the Hamming-weight
     u^(J) equals the f32 matmul exactly (integer sums below 2²⁴), and the
-    energy is assembled with the *same einsum contractions* as
-    ``ising.energy`` on those identical u^(J) values, so dense-fed and
-    plane-fed shards produce bit-identical chains (asserted by
+    energy is assembled by ``ising.energy_from_fields`` — the *same einsum
+    contractions* as ``ising.energy`` on those identical u^(J) values — so
+    dense-fed and plane-fed shards produce bit-identical chains (asserted by
     ``test_distributed_fused_bitplane_matches_dense``)."""
-    s = spins.astype(jnp.float32)
     u_j = local_fields_from_planes(planes, spins)      # == J @ s exactly
-    e = (-0.5 * jnp.einsum("...i,...i->...", s, u_j)
-         - jnp.einsum("i,...i->...", fields_h, s)).astype(jnp.float32)
+    e = ising.energy_from_fields(u_j, spins, fields_h).astype(jnp.float32)
     return mcmc.ChainState(
         spins=spins.astype(ising.SPIN_DTYPE),
         fields=(u_j + fields_h).astype(jnp.float32),
@@ -146,11 +144,15 @@ def solve_distributed(problem: ising.IsingProblem, seed, config: DistSolverConfi
     if config.backend == "fused":
         from ..kernels.ops import auto_interpret
         store = CouplingStore.build(
-            problem.couplings, base_cfg.coupling_format).require(
+            problem.coupling_source, base_cfg.coupling_format).require(
             KERNEL_COUPLING_MODES, "solve_distributed")
         runner_fused = _fused_chunk_runner(base_cfg, chunk, r_local,
                                            auto_interpret(None), store)
     elif config.backend == "reference":
+        if problem.couplings is None:
+            raise ValueError(
+                "backend='reference' needs the dense J; edge-list "
+                "(dense-J-free) problems are served by backend='fused'")
         runner = _chunk_runner(problem, mc, base_cfg.schedule, chunk)
     else:
         raise ValueError(

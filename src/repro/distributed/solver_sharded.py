@@ -22,8 +22,19 @@ Per asynchronous MCMC step (paper Alg. 1, collectivized):
   (B, 1, W) pos/neg row tiles to a ``psum`` broadcast (masked zeros from
   everyone else add exactly), every device decodes the full row through the
   shared ``common.decode_bitplane_rows`` expansion and FMAs its own u-slice.
-  Per-step traffic is O(B·N/32) words of row tiles + O(N/lane) block sums —
-  never the O(N²) store, never O(N) f32 fields.
+  The replica-apply loop is software-pipelined: replica r+1's row-tile psum
+  is issued before replica r's decode+FMA consumes its tiles (the
+  cross-device analogue of the HBM tier's DMA double-buffer), so the
+  broadcast overlaps the previous replica's compute instead of blocking the
+  step. Per-step traffic is O(B·N/32) words of row tiles + O(N/lane) block
+  sums — never the O(N²) store, never O(N) f32 fields.
+
+The solve is **dense-J-free end to end**: replica init runs inside the
+shard_map, plane-natively per device (u₀ from the device's own plane slab,
+e₀ via the shared ``ising.energy_from_fields`` einsum on the all_gather'd
+u^(J)), and edge-list problems encode each device's slab straight from the
+O(nnz) edges (:func:`shard_planes_from_edges`) — neither the full (B, N, W)
+store nor any (N, N) f32 exists on any single host or device at any point.
 
 RNG, chunk cadence (``kernels.ops.anneal_chunk_plan``), and the best-so-far
 merge are shared with ``kernels.ops.fused_anneal`` statement for statement,
@@ -40,11 +51,12 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core import coupling as coupling_store
-from ..core import rng
-from ..core.bitplane import WORD_BITS, BitPlanes
+from ..core import ising, rng
+from ..core.bitplane import (WORD_BITS, BitPlanes, edge_plane_words,
+                             local_fields_from_planes)
 from ..core.solver import SolveResult, SolverConfig
 from ..kernels import common
 from ..kernels import ops as _ops
@@ -120,6 +132,8 @@ def _sharded_sweep(planes_loc: BitPlanes, fields0, spins0, energy0, uniforms,
     r, n_loc = fields0.shape
     col = lo + jnp.arange(n_loc)                         # global column ids
 
+    num_planes = pos.shape[0]
+
     def fetch_rows(j):
         """(R,) global sites → (R, N/D) decoded local row columns: the owner
         broadcasts its packed (B, 1, W) row tiles via masked psum (integer
@@ -128,23 +142,48 @@ def _sharded_sweep(planes_loc: BitPlanes, fields0, spins0, energy0, uniforms,
         boundary is word-aligned (N/D % 32 == 0 — every lane-128 size) the
         packed words are sliced *before* decoding, keeping the per-device
         expansion O(B·N/D) instead of O(B·N); bit expansion is per-word, so
-        slice-then-decode equals decode-then-slice value for value."""
+        slice-then-decode equals decode-then-slice value for value.
+
+        The replica-apply loop is **software-pipelined** — the cross-device
+        analogue of the HBM tier's DMA double-buffer: replica r+1's row-tile
+        psum is *issued* before replica r's decode+FMA consumes its tiles
+        (replicas are independent, so the prefetch is always safe), letting
+        XLA's async collectives run the broadcast under the previous decode
+        instead of blocking the step on a synchronous (B, R, W) combine. One
+        psum per replica moves the stacked (2B, 1, W) pos∥neg tiles; uint32
+        adds are exact, per-replica decode is the per-row expansion the
+        batched form ran, and the stack keeps replica order — so the
+        trajectory is bit-identical to the un-overlapped formulation (the
+        four-way parity tier asserts it end to end)."""
         jl = jnp.clip(j - lo, 0, n_loc - 1)
         own = (j >= lo) & (j < lo + n_loc)
-        pr = jnp.where(own[None, :, None], jnp.take(pos, jl, axis=1),
-                       jnp.uint32(0))                    # (B, R, W)
-        nr = jnp.where(own[None, :, None], jnp.take(neg, jl, axis=1),
-                       jnp.uint32(0))
-        pr = jax.lax.psum(pr, axes)
-        nr = jax.lax.psum(nr, axes)
-        if n_loc % WORD_BITS == 0:
-            w_lo = lo // WORD_BITS                       # lo % 32 == 0 too
-            w_loc = n_loc // WORD_BITS
-            pr = jax.lax.dynamic_slice_in_dim(pr, w_lo, w_loc, axis=2)
-            nr = jax.lax.dynamic_slice_in_dim(nr, w_lo, w_loc, axis=2)
-            return common.decode_bitplane_rows(pr, nr, n_loc)  # (R, N/D)
-        rows = common.decode_bitplane_rows(pr, nr, n)    # (R, N) shared decode
-        return jax.lax.dynamic_slice_in_dim(rows, lo, n_loc, axis=1)
+
+        def issue(ri):
+            tiles = jnp.concatenate(
+                [jnp.take(pos, jl[ri], axis=1),
+                 jnp.take(neg, jl[ri], axis=1)], axis=0)[:, None, :]
+            tiles = jnp.where(own[ri], tiles, jnp.uint32(0))  # (2B, 1, W)
+            return jax.lax.psum(tiles, axes)
+
+        def decode(tiles):
+            pr, nr = tiles[:num_planes], tiles[num_planes:]
+            if n_loc % WORD_BITS == 0:
+                w_lo = lo // WORD_BITS                   # lo % 32 == 0 too
+                w_loc = n_loc // WORD_BITS
+                pr = jax.lax.dynamic_slice_in_dim(pr, w_lo, w_loc, axis=2)
+                nr = jax.lax.dynamic_slice_in_dim(nr, w_lo, w_loc, axis=2)
+                return common.decode_bitplane_rows(pr, nr, n_loc)[0]  # (N/D,)
+            rows = common.decode_bitplane_rows(pr, nr, n)[0]  # shared decode
+            return jax.lax.dynamic_slice_in_dim(rows, lo, n_loc, axis=0)
+
+        in_flight = issue(0)
+        rows = []
+        for ri in range(r):               # static unroll: R is small
+            tiles = in_flight
+            if ri + 1 < r:
+                in_flight = issue(ri + 1)  # next broadcast under this decode
+            rows.append(decode(tiles))
+        return jnp.stack(rows, axis=0)                   # (R, N/D)
 
     def body(carry, xs):
         u, s, e, be, bs, nf = carry
@@ -192,21 +231,53 @@ def _sharded_sweep(planes_loc: BitPlanes, fields0, spins0, energy0, uniforms,
     return u, s, e, be, bs, nf
 
 
+def _sharded_init(planes_loc: BitPlanes, fields, base, *, r: int, n: int,
+                  n_loc: int, lo, axes):
+    """Plane-native per-device replica init — ``ops.fused_init_state`` with
+    every full-width touch replaced by its sharded counterpart, so neither
+    the full (B, N, W) planes nor any dense J is ever needed on one device.
+
+    Key derivation (``Salt.REPLICA`` → ``Salt.INIT``) and the spin draw are
+    replicated computation — byte-for-byte the fused init's, O(R·N). Each
+    device then runs the Hamming-weight accumulation on **its own plane
+    slab** only (u^(J) is per-row arithmetic, so the row slice of the result
+    equals the slice of the full-plane result bitwise), and e₀ is assembled
+    by the shared ``ising.energy_from_fields`` on the ``all_gather``-ed
+    u^(J) — the identical einsum the fused init runs on identical values, so
+    sharded replicas start from bit-equal (u₀, s₀, e₀) for any h. Returns
+    the local slices ``(u0_loc, s0_loc, e0)``.
+    """
+    replica_keys = jax.vmap(
+        lambda i: rng.stream(base, rng.Salt.REPLICA, i))(jnp.arange(r))
+    spins0 = jax.vmap(lambda k: ising.random_spins(
+        rng.stream(k, rng.Salt.INIT), (n,)))(replica_keys)
+    spins0 = spins0.astype(jnp.float32)                  # (R, N) replicated
+    u_j_loc = local_fields_from_planes(planes_loc, spins0)  # (R, N/D) exact
+    h_loc = jax.lax.dynamic_slice_in_dim(fields, lo, n_loc)
+    u0 = (u_j_loc + h_loc[None, :]).astype(jnp.float32)
+    u_j = jax.lax.all_gather(u_j_loc, axes, axis=1, tiled=True)  # (R, N)
+    e0 = ising.energy_from_fields(u_j, spins0, fields)
+    s0 = jax.lax.dynamic_slice_in_dim(spins0, lo, n_loc, axis=1)
+    return u0, s0, e0
+
+
 @functools.lru_cache(maxsize=32)
 def sharded_anneal_fn(config: SolverConfig, mesh: Mesh, n: int, *,
                       chunk_steps: int = 256):
     """Build the jitted shard_map'd anneal for one (config, mesh, N).
 
-    Returns ``fn(planes, u0, s0, e0, seed_arr) → (u, s, e, be, bs, nf,
-    trace)`` with planes/u0/s0 sharded over the spin axis. Memoized on the
-    (hashable) arguments so repeated solves of one configuration reuse the
-    jitted callable instead of re-tracing per call — ``jax.jit`` caches on
-    function identity, and ``local_anneal`` is a fresh closure per build
-    (the analogue of ``_fused_anneal_impl``'s module-level jit). Factored
-    out of :func:`solve_sharded` so the jaxpr-pin test can assert the
-    sharded step emits collectives (``psum`` / ``all_gather``) and **no**
-    ``dot_general`` — the O(N)/step incremental-update contract extends
-    across the mesh.
+    Returns ``fn(planes, fields, seed_arr) → (u, s, e, be, bs, nf, trace)``
+    with the planes sharded over the spin axis and ``fields`` (the (N,) h —
+    O(N), not the O(N²) store) replicated; replica init runs *inside* the
+    shard_map, plane-natively per device (:func:`_sharded_init`), so the
+    driver never touches full planes or a dense J on any single host.
+    Memoized on the (hashable) arguments so repeated solves of one
+    configuration reuse the jitted callable instead of re-tracing per call —
+    ``jax.jit`` caches on function identity, and ``local_anneal`` is a fresh
+    closure per build (the analogue of ``_fused_anneal_impl``'s module-level
+    jit). The per-step jaxpr pin (collectives present, no ``dot_general``)
+    lives on :func:`sharded_sweep_fn` — the one-time init here legitimately
+    contains O(R·N) contractions (the e₀ einsum and the popcount weighting).
     """
     axes = tuple(mesh.axis_names)
     num_shards = _mesh_size(mesh, axes)
@@ -218,11 +289,13 @@ def sharded_anneal_fn(config: SolverConfig, mesh: Mesh, n: int, *,
         config, chunk_steps)
     tbl = _ops.solver_pwl_table(config)
 
-    def local_anneal(planes_loc, u0, s0, e0, seed_arr):
+    def local_anneal(planes_loc, fields, seed_arr):
         idx = _flat_shard_index(mesh, axes)
         lo = idx * n_loc
         g0 = idx * g_loc
         base = jax.random.fold_in(jax.random.key(0), seed_arr[0])
+        u0, s0, e0 = _sharded_init(planes_loc, fields, base, r=r, n=n,
+                                   n_loc=n_loc, lo=lo, axes=axes)
         state = (u0, s0, e0, e0, s0, jnp.zeros((r,), jnp.int32))
 
         def chunk(carry, c, clen):
@@ -254,22 +327,99 @@ def sharded_anneal_fn(config: SolverConfig, mesh: Mesh, n: int, *,
     shard = P(None, axes)        # (R, N) / (B, N, W) spin-axis sharding
     return jax.jit(shard_map_compat(
         local_anneal, mesh=mesh,
-        in_specs=(P(None, axes, None), shard, shard, P(), P()),
+        in_specs=(P(None, axes, None), P(), P()),
         out_specs=(shard, shard, P(), P(), shard, P(), P())))
+
+
+def sharded_sweep_fn(config: SolverConfig, mesh: Mesh, n: int):
+    """A jitted shard_map around :func:`_sharded_sweep` alone — the per-step
+    engine without the one-time init. This is the jaxpr-pin surface: the
+    *step* must move data with collectives (psum row-tile broadcast,
+    all_gather'd block sums) and must never reintroduce a quadratic
+    contraction (``dot_general``) — the O(N)/step incremental-update
+    contract extended across the mesh. Signature:
+    ``fn(planes, u0_loc, s0_loc, e0, uniforms, temps)`` with planes/u/s
+    sharded over the spin axis.
+    """
+    axes = tuple(mesh.axis_names)
+    num_shards = _mesh_size(mesh, axes)
+    lane = common.default_lane(n)
+    n_loc = n // num_shards
+    g_loc = n_loc // lane
+    tbl = _ops.solver_pwl_table(config)
+
+    def local_sweep(planes_loc, u0, s0, e0, uniforms, temps):
+        idx = _flat_shard_index(mesh, axes)
+        return _sharded_sweep(
+            planes_loc, u0, s0, e0, uniforms, temps, tbl, mode=config.mode,
+            uniformized=config.uniformized, n=n, lane=lane, axes=axes,
+            lo=idx * n_loc, g0=idx * g_loc)
+
+    shard = P(None, axes)
+    return jax.jit(shard_map_compat(
+        local_sweep, mesh=mesh,
+        in_specs=(P(None, axes, None), shard, shard, P(), P(), P()),
+        out_specs=(shard, shard, P(), P(), shard, P())))
+
+
+def shard_planes_from_edges(edges: ising.EdgeList, mesh: Mesh,
+                            num_planes: Optional[int] = None) -> BitPlanes:
+    """Edge list → row-sharded plane store with **no full-plane host build**:
+    each device's (B, N/D, W) slab is encoded directly from the O(nnz) edge
+    arrays (``bitplane.edge_plane_words`` with ``row_range``) and placed via
+    ``jax.make_array_from_callback``, so the complete (B, N, W) store — let
+    alone the (N, N) f32 J — never exists on any single host or device. This
+    is the ingestion path that moves the init wall: setup cost becomes
+    O(nnz + plane-slab bytes) per device instead of O(N²) on one host.
+    """
+    axes = tuple(mesh.axis_names)
+    num_shards = _mesh_size(mesh, axes)
+    n = edges.num_spins
+    if n % num_shards:
+        raise ValueError(f"N={n} plane rows cannot shard evenly over the "
+                         f"{num_shards}-device mesh")
+    if num_planes is None:
+        num_planes = max(1, edges.max_abs_weight.bit_length())
+    align = coupling_store.FORMATS["bitplane_sharded"].align_words
+    w_min = -(-n // WORD_BITS)
+    num_words = -(-w_min // align) * align
+    sharding = NamedSharding(mesh, P(None, axes, None))
+    shape = (num_planes, n, num_words)
+    slabs = {}
+
+    def slab(index):
+        sl = index[1]
+        lo = 0 if sl.start is None else int(sl.start)
+        hi = n if sl.stop is None else int(sl.stop)
+        if (lo, hi) not in slabs:   # encode each row slab exactly once
+            slabs[(lo, hi)] = edge_plane_words(
+                edges, num_planes, align_words=align, row_range=(lo, hi))
+        return slabs[(lo, hi)]
+
+    pos = jax.make_array_from_callback(shape, sharding,
+                                       lambda idx: slab(idx)[0])
+    neg = jax.make_array_from_callback(shape, sharding,
+                                       lambda idx: slab(idx)[1])
+    return BitPlanes(pos=pos, neg=neg, num_spins=n)
 
 
 def solve_sharded(problem, seed, config: SolverConfig, mesh: Mesh, *,
                   chunk_steps: int = 256,
                   coupling: Optional[BitPlanes] = None,
-                  num_planes: Optional[int] = None,
-                  interpret: Optional[bool] = None) -> SolveResult:
+                  num_planes: Optional[int] = None) -> SolveResult:
     """Anneal with the coupling planes row-sharded across ``mesh``.
 
     Trajectory-identical to ``solve(..., backend="fused")`` on the same
-    seed/config (any single-device coupling tier): same replica init, same
-    ``Salt.SWEEP`` chunk streams, same selection/update arithmetic via
-    ``kernels.common`` — only the memory placement changes. Per-device plane
-    bytes are ``store.nbytes / D``, so J capacity scales with aggregate HBM.
+    seed/config (any single-device coupling tier): same replica init (now
+    computed plane-natively *inside* the shard_map — each device initializes
+    its own u₀ slice from its plane slab, e₀ via the shared
+    ``energy_from_fields`` einsum on the gathered u^(J)), same ``Salt.SWEEP``
+    chunk streams, same selection/update arithmetic via ``kernels.common`` —
+    only the memory placement changes. Per-device plane bytes are
+    ``store.nbytes / D``, so J capacity scales with aggregate HBM — and for
+    **edge-list problems** the planes are encoded per device straight from
+    the O(nnz) edges (:func:`shard_planes_from_edges`), so no host ever
+    materializes the full store or any dense J at any point of the solve.
 
     Requires an integral J (the sharded store is plane-backed; there is no
     sharded dense tier), N divisible by the mesh size, and the per-shard
@@ -286,13 +436,6 @@ def solve_sharded(problem, seed, config: SolverConfig, mesh: Mesh, *,
             f"solve_sharded serves coupling_format='bitplane_sharded' "
             f"(or 'auto'), got {config.coupling_format!r} — use "
             f"solve(backend='fused') for the single-device tiers")
-    if coupling is not None:
-        store = coupling_store.CouplingStore.from_planes(
-            coupling, "bitplane_sharded")
-        coupling_store.validate_planes_cover(coupling, n)
-    else:
-        store = coupling_store.CouplingStore.build(
-            problem.couplings, "bitplane_sharded", num_planes=num_planes)
     if n % num_shards:
         raise ValueError(f"N={n} spin rows cannot shard evenly over the "
                          f"{num_shards}-device mesh")
@@ -302,15 +445,21 @@ def solve_sharded(problem, seed, config: SolverConfig, mesh: Mesh, *,
         raise ValueError(
             f"per-shard spin count {n_loc} is not a multiple of the roulette "
             f"lane {lane}: shard boundaries must align with selection blocks")
+    if coupling is not None:
+        store = coupling_store.CouplingStore.from_planes(
+            coupling, "bitplane_sharded")
+        coupling_store.validate_planes_cover(coupling, n)
+        planes = store.planes
+    elif problem.couplings is None:
+        planes = shard_planes_from_edges(problem.edges, mesh, num_planes)
+    else:
+        store = coupling_store.CouplingStore.build(
+            problem.couplings, "bitplane_sharded", num_planes=num_planes)
+        planes = store.planes
     r = config.num_replicas
-    base = jax.random.fold_in(jax.random.key(0),
-                              jnp.asarray(seed, jnp.uint32))
-    u0, s0, e0, _, _, _ = _ops.fused_init_state(
-        problem, base, r, interpret=_ops.auto_interpret(interpret),
-        planes=store.planes)
     fn = sharded_anneal_fn(config, mesh, n, chunk_steps=chunk_steps)
     seed_arr = jnp.asarray([seed], jnp.uint32)
-    u, s, e, be, bs, nf, trace = fn(store.planes, u0, s0, e0, seed_arr)
+    u, s, e, be, bs, nf, trace = fn(planes, problem.fields, seed_arr)
     return SolveResult(
         best_energy=be + problem.offset,
         best_spins=bs.astype(jnp.int8),

@@ -1,4 +1,5 @@
-from .maxcut import MaxCutInstance, maxcut_to_ising, cut_value  # noqa: F401
-from .generators import erdos_renyi, small_world, torus_grid, complete_bipolar  # noqa: F401
+from .maxcut import MaxCutInstance, maxcut_to_ising, maxcut_edges_to_ising, cut_value  # noqa: F401
+from .generators import (erdos_renyi, small_world, torus_grid,  # noqa: F401
+                         complete_bipolar, sparse_bipolar_edges)
 from .qubo import qubo_to_ising, ising_to_qubo  # noqa: F401
-from .gset import parse_gset, GSET_SAMPLE  # noqa: F401
+from .gset import parse_gset, parse_gset_edges, GSET_SAMPLE  # noqa: F401

@@ -40,6 +40,25 @@ def erdos_renyi(n: int, num_edges: int, seed: int = 0, signed: bool = True,
     return MaxCutInstance(weights=w, name=name)
 
 
+def sparse_bipolar_edges(n: int, num_edges: int, seed: int = 0):
+    """G(n, m) with ±1 weights as a canonical ``core.ising.EdgeList`` —
+    dense-J-free from birth: endpoints are sampled directly (O(m) memory, no
+    (n, n) mask, so it scales to the N=16k+ ingestion benchmarks the dense
+    generators cannot touch). Pairs are sampled with replacement then
+    deduplicated *before* signing, so weights stay exactly ±1 and the
+    realized edge count is ≤ ``num_edges`` — the Gset-like sparse regime
+    m ≪ n² where that gap is negligible."""
+    from ..core.ising import EdgeList
+
+    rng = _rng(seed)
+    i = rng.integers(0, n, size=num_edges, dtype=np.int64)
+    j = rng.integers(0, n - 1, size=num_edges, dtype=np.int64)
+    j = np.where(j >= i, j + 1, j)  # uniform over off-diagonal pairs
+    key = np.unique(np.minimum(i, j) * np.int64(n) + np.maximum(i, j))
+    w = rng.choice(np.array([-1, 1], np.int64), size=key.size)
+    return EdgeList.create(key // n, key % n, w, n)
+
+
 def small_world(n: int, k: int, rewire_p: float = 0.1, seed: int = 0,
                 signed: bool = True, name: str = "sw") -> MaxCutInstance:
     """Watts–Strogatz ring lattice with rewiring (G18/G64 family)."""

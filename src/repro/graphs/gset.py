@@ -32,14 +32,19 @@ GSET_SAMPLE = """10 14
 """
 
 
-def parse_gset(source, name: str = "gset") -> MaxCutInstance:
-    """Parse a Gset file from a path, file object, or literal string."""
+def _open(source):
     if isinstance(source, str) and "\n" in source:
-        fh = io.StringIO(source)
-    elif hasattr(source, "read"):
-        fh = source
-    else:
-        fh = open(source)
+        return io.StringIO(source)
+    if hasattr(source, "read"):
+        return source
+    return open(source)
+
+
+def parse_gset(source, name: str = "gset") -> MaxCutInstance:
+    """Parse a Gset file from a path, file object, or literal string into a
+    dense weight matrix (small/medium instances; for large instances use
+    :func:`parse_gset_edges`, which never materializes (N, N))."""
+    fh = _open(source)
     try:
         header = fh.readline().split()
         n, m = int(header[0]), int(header[1])
@@ -56,5 +61,48 @@ def parse_gset(source, name: str = "gset") -> MaxCutInstance:
         if count != m:
             raise ValueError(f"Gset header declared {m} edges, file had {count}")
         return MaxCutInstance(weights=w, name=name)
+    finally:
+        fh.close()
+
+
+def parse_gset_edges(source):
+    """Dense-J-free Gset parser: the same file format as :func:`parse_gset`
+    but returning a canonical ``core.ising.EdgeList`` of the edge *weights*
+    w — O(nnz) memory, no (N, N) array ever. Feed it through
+    ``repro.graphs.maxcut.maxcut_edges_to_ising`` for the J = −w Ising
+    instance the solvers consume (the full sparse→plane ingestion pipeline
+    for real benchmark instances).
+
+    A file listing the same undirected edge twice (either orientation) is
+    rejected: ``EdgeList`` sums duplicates while the dense parser's
+    assignment is last-wins, so a duplicated line is the one input on which
+    the two parsers would silently describe different instances — and in a
+    well-formed Gset file it is always a data error."""
+    from ..core.ising import EdgeList
+
+    fh = _open(source)
+    try:
+        header = fh.readline().split()
+        n, m = int(header[0]), int(header[1])
+        rows, cols, weights = [], [], []
+        for line in fh:
+            parts = line.split()
+            if not parts:
+                continue
+            rows.append(int(parts[0]) - 1)
+            cols.append(int(parts[1]) - 1)
+            weights.append(float(parts[2]))
+        if len(rows) != m:
+            raise ValueError(
+                f"Gset header declared {m} edges, file had {len(rows)}")
+        edges = EdgeList.create(np.asarray(rows), np.asarray(cols),
+                                np.asarray(weights), n)
+        if edges.nnz != len(rows):
+            raise ValueError(
+                f"Gset file lists {len(rows)} edges but only {edges.nnz} "
+                "distinct undirected pairs survive coalescing — duplicate "
+                "edge lines are malformed (the dense parser would keep the "
+                "last, the edge-list path would sum them)")
+        return edges
     finally:
         fh.close()

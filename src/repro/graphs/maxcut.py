@@ -53,6 +53,21 @@ def maxcut_to_ising(instance: MaxCutInstance) -> IsingProblem:
     return IsingProblem.create(J=-w, h=None, offset=0.0)
 
 
+def maxcut_edges_to_ising(weight_edges) -> IsingProblem:
+    """Dense-J-free counterpart of :func:`maxcut_to_ising`: a canonical
+    ``EdgeList`` of edge weights w → the J = −w Ising instance as an
+    edge-list-backed :class:`IsingProblem` (h = 0, offset 0 — identical
+    readout convention to the dense mapping, so ``best_energy`` is −cut
+    up to the same affine). The (N, N) matrix is never materialized; the
+    solvers' plane-backed paths ingest the edges directly in O(nnz)."""
+    from ..core.ising import EdgeList
+
+    if not isinstance(weight_edges, EdgeList):
+        raise TypeError(f"maxcut_edges_to_ising needs an EdgeList of weights, "
+                        f"got {type(weight_edges).__name__}")
+    return IsingProblem.create_sparse(weight_edges.negated())
+
+
 def cut_value(instance: MaxCutInstance, spins) -> float:
     """Cut weight of the bipartition induced by ±1 spins."""
     s = np.asarray(spins, np.float32)

@@ -70,8 +70,20 @@ def default_lane(n: int) -> int:
     return 1
 
 
+def default_pwl_select() -> str:
+    """How the PWL LUT segment is evaluated when the caller does not say:
+    "select" (the lane-friendly compare-and-select sweep) on real TPUs, where
+    a per-element gather serializes lane-by-lane on the VPU; "gather" (two
+    ``jnp.take``s) everywhere else, where gathers are cheap and the S-deep
+    select sweep is pure overhead. Resolved identically by the kernel and the
+    oracle (both call :func:`flip_probability` with the default), so the
+    choice can never split backend parity."""
+    return "select" if jax.default_backend() == "tpu" else "gather"
+
+
 def flip_probability(delta_e: jax.Array, temperature: jax.Array,
-                     pwl_table: jax.Array | None = None) -> jax.Array:
+                     pwl_table: jax.Array | None = None,
+                     pwl_select: str | None = None) -> jax.Array:
     """Glauber flip probability σ(-ΔE/T) (exact or PWL LUT).
 
     ``pwl_table`` is the ``(S+1, 3)`` ``[knot, value, slope]`` LUT from
@@ -81,6 +93,17 @@ def flip_probability(delta_e: jax.Array, temperature: jax.Array,
     share THIS function, so backend parity stays exact). T ≤ 0 uses the
     greedy limit (1 downhill / 0.5 flat / 0 uphill). Broadcasts over any
     leading shape.
+
+    ``pwl_select`` picks the LUT evaluation: "gather" reads
+    ``icpt[seg]``/``slopes[seg]`` with two per-element ``jnp.take``s;
+    "select" sweeps the S segments with branch-free compare-and-select
+    (``where(seg == k, icpt_k + slope_k·z, …)``), trading O(S·N) VPU selects
+    for zero gathers — the lane-friendly formulation for real TPUs whose VPU
+    serializes per-element gathers. The two are **bit-identical** by
+    construction: exactly one segment matches per element and the selected
+    lane computes the same ``icpt + slope·z`` FMA the gather path computes
+    (asserted exactly by ``tests/test_kernels.py``). None resolves via
+    :func:`default_pwl_select`.
     """
     de = delta_e.astype(jnp.float32)
     t = jnp.asarray(temperature, jnp.float32)
@@ -89,6 +112,11 @@ def flip_probability(delta_e: jax.Array, temperature: jax.Array,
     if pwl_table is None:
         warm = jax.nn.sigmoid(z)
     else:
+        if pwl_select is None:
+            pwl_select = default_pwl_select()
+        if pwl_select not in ("gather", "select"):
+            raise ValueError(f"pwl_select must be 'gather' or 'select', "
+                             f"got {pwl_select!r}")
         knots = pwl_table[:, 0]
         values = pwl_table[:, 1]
         slopes = pwl_table[:-1, 2]     # last row is zero padding
@@ -103,7 +131,27 @@ def flip_probability(delta_e: jax.Array, temperature: jax.Array,
         zc = jnp.clip(z, z_lo, z_hi)  # tails collapse into the end segments
         seg = jnp.clip(((zc - z_lo) * inv_step).astype(jnp.int32),
                        0, num_segments - 1)
-        warm = jnp.take(icpt, seg) + jnp.take(slopes, seg) * zc
+        if pwl_select == "gather":
+            seg_icpt = jnp.take(icpt, seg)
+            seg_slope = jnp.take(slopes, seg)
+        else:
+            # The sweep only *moves* coefficients (branch-free selects, no
+            # arithmetic), so it is value-exact vs the gather; the y = icpt +
+            # slope·z FMA below is then the structurally identical array
+            # expression in both formulations — were it computed inside the
+            # loop on scalar coefficients, the compiler could contract it to
+            # an fma there but not in the gather path, splitting last-ulp
+            # parity (observed on XLA CPU).
+            def select_one(k, acc):
+                ic_acc, sl_acc = acc
+                ic = jax.lax.dynamic_index_in_dim(icpt, k, keepdims=False)
+                sl = jax.lax.dynamic_index_in_dim(slopes, k, keepdims=False)
+                hit = seg == k
+                return jnp.where(hit, ic, ic_acc), jnp.where(hit, sl, sl_acc)
+            seg_icpt, seg_slope = jax.lax.fori_loop(
+                0, num_segments, select_one,
+                (jnp.zeros_like(zc), jnp.zeros_like(zc)))
+        warm = seg_icpt + seg_slope * zc
     cold = jnp.where(de < 0, 1.0, jnp.where(de == 0, 0.5, 0.0))
     return jnp.where(t > 0, warm, cold).astype(jnp.float32)
 

@@ -78,22 +78,31 @@ def _resolve_gather(gather: str, n: int) -> str:
     return gather
 
 
+def plane_local_fields(planes: BitPlanes, spins0: jax.Array, *,
+                       interpret: bool, block_r: int = 8) -> jax.Array:
+    """u^(J) = J s from the packed planes via the Hamming-weight accumulation
+    (Eq. 14-16) — the popcount Pallas kernel on real TPUs, its jnp oracle in
+    interpret mode (tile-by-tile interpret emulation has a huge constant
+    factor; same reason the dense init uses XLA's native matmul there). For
+    integer J both are the exact integer result in f32, so everything built
+    on this value (u₀, the plane-native e₀) is bit-identical to the dense
+    matmul path."""
+    if interpret:
+        return local_fields_from_planes(planes, spins0)
+    r, n = spins0.shape
+    return bitplane_field_init(planes, spins0, interpret=False,
+                               block_r=fit_block(r, block_r),
+                               block_n=fit_block(n, 256))
+
+
 def init_fields(problem: ising.IsingProblem, spins0: jax.Array, *,
                 interpret: bool, block_r: int = 8,
                 planes: Optional[BitPlanes] = None) -> jax.Array:
-    """One-time u₀ = J s + h init for the fused drivers. With packed
-    ``planes`` the J-term comes from the Hamming-weight accumulation
-    (Eq. 14-16) — the popcount Pallas kernel on real TPUs, its jnp oracle in
-    interpret mode (tile-by-tile interpret emulation has a huge constant
-    factor; same reason the dense init uses XLA's native matmul there)."""
+    """One-time u₀ = J s + h init for the fused drivers (plane-backed or
+    dense; see :func:`plane_local_fields` for the packed path)."""
     if planes is not None:
-        if interpret:
-            u_j = local_fields_from_planes(planes, spins0)
-        else:
-            r, n = spins0.shape
-            u_j = bitplane_field_init(planes, spins0, interpret=False,
-                                      block_r=fit_block(r, block_r),
-                                      block_n=fit_block(n, 256))
+        u_j = plane_local_fields(planes, spins0, interpret=interpret,
+                                 block_r=block_r)
         return (u_j + problem.fields[None, :]).astype(jnp.float32)
     if interpret:
         return ising.local_fields(problem, spins0).astype(jnp.float32)
@@ -109,16 +118,30 @@ def fused_init_state(problem: ising.IsingProblem, base: jax.Array, r: int, *,
     num_flips)`` state tuple. Key derivation (``Salt.REPLICA`` → ``Salt.INIT``)
     is exactly the reference engine's, so both backends start every replica
     from the identical spin configuration — a single definition keeps that
-    parity contract in one place. With ``planes`` the u₀ init runs off the
-    packed store (integer J ⇒ bit-identical to the dense matmul in f32)."""
+    parity contract in one place.
+
+    With ``planes`` the init is fully **dense-J-free**: u₀ comes from the
+    packed store and e₀ is assembled by ``ising.energy_from_fields`` on the
+    same u^(J) — the identical einsum contractions ``ising.energy`` runs on
+    ``J s``, fed a bit-identical u^(J) (integer J ⇒ the Hamming-weight sum
+    equals the f32 matmul exactly), so plane-fed and dense-fed replicas
+    start from bitwise-equal energies for any h. Edge-list problems
+    (``problem.couplings is None``) therefore never touch a dense matrix
+    here.
+    """
     n = problem.num_spins
     replica_keys = jax.vmap(lambda i: rng.stream(base, rng.Salt.REPLICA, i))(jnp.arange(r))
     spins0 = jax.vmap(lambda k: ising.random_spins(
         rng.stream(k, rng.Salt.INIT), (n,)))(replica_keys)
     spins0 = spins0.astype(jnp.float32)
-    u0 = init_fields(problem, spins0, interpret=interpret, block_r=block_r,
-                     planes=planes)
-    e0 = ising.energy(problem, spins0)
+    if planes is not None:
+        u_j = plane_local_fields(planes, spins0, interpret=interpret,
+                                 block_r=block_r)
+        u0 = (u_j + problem.fields[None, :]).astype(jnp.float32)
+        e0 = ising.energy_from_fields(u_j, spins0, problem.fields)
+    else:
+        u0 = init_fields(problem, spins0, interpret=interpret, block_r=block_r)
+        e0 = ising.energy(problem, spins0)
     return (u0, spins0, e0, e0, spins0, jnp.zeros((r,), jnp.int32))
 
 
@@ -242,7 +265,8 @@ def fused_anneal(problem: ising.IsingProblem, seed, config: SolverConfig,
                  gather: str = "dynamic",
                  coupling: Union[str, BitPlanes, None] = None,
                  num_planes: Optional[int] = None,
-                 interpret: Optional[bool] = None) -> SolveResult:
+                 interpret: Optional[bool] = None,
+                 store: Optional[CouplingStore] = None) -> SolveResult:
     """Production annealing driver on the fused sweep kernel.
 
     Full ``core.solver.solve`` feature parity — both modes, uniformized RWA,
@@ -265,8 +289,32 @@ def fused_anneal(problem: ising.IsingProblem, seed, config: SolverConfig,
     ``num_planes`` forces the precision B (default: fewest planes covering
     |J|max). The "bitplane_sharded" tier is rejected here — it is served by
     the spin-parallel ``repro.distributed.solver_sharded.solve_sharded``.
+
+    ``store`` takes a prebuilt ``CouplingStore`` and skips the resolve→encode
+    entirely (the memoization contract for repeated solves — TTS sweeps,
+    tempering restarts — of one instance); it is mutually exclusive with
+    ``coupling``, and its tier wins over ``config.coupling_format`` (the
+    store *is* the resolved format). It must have been built from this
+    problem's couplings: a dense store is identity-checked against
+    ``problem.couplings`` (the init derives u₀/e₀ from the problem while
+    the sweep consumes the store — feeding a different same-N matrix would
+    silently corrupt trajectories); a plane store cannot be re-verified
+    without re-encoding, so that half of the contract is the caller's.
+    With an edge-list problem and no prebuilt store the build runs the
+    O(nnz) sparse encoder — the dense (N, N) matrix is never materialized
+    anywhere on this path.
     """
-    if isinstance(coupling, BitPlanes):
+    if store is not None:
+        if coupling is not None:
+            raise ValueError("pass a prebuilt store= or a coupling= override, "
+                             "not both")
+        store.require_num_spins(problem.num_spins, "fused_anneal")
+        if store.dense is not None and store.dense is not problem.couplings:
+            raise ValueError(
+                "prebuilt dense CouplingStore does not hold this problem's "
+                "couplings array — the init would run on one J and the sweep "
+                "on another; rebuild the store from problem.couplings")
+    elif isinstance(coupling, BitPlanes):
         # Any plane format on the config flows into the store so require()
         # below can reject tiers this driver does not serve (a
         # "bitplane_sharded" config must raise the routing error here too,
@@ -276,7 +324,7 @@ def fused_anneal(problem: ising.IsingProblem, seed, config: SolverConfig,
         store = CouplingStore.from_planes(coupling, fmt)
     else:
         store = CouplingStore.build(
-            problem.couplings,
+            problem.coupling_source,
             coupling if coupling is not None else config.coupling_format,
             num_planes=num_planes)
     store.require(KERNEL_COUPLING_MODES, "fused_anneal")

@@ -144,6 +144,58 @@ def test_check_flags_broken_sharded_points():
                for e in check_bench_history(broken))
 
 
+def test_committed_history_has_sparse_ingest_point():
+    """The dense-J-free ingestion anchor: the N=16384 sparse-ingest cell must
+    exist, its sparse setup must undercut the recorded dense detour, and its
+    build peak must sit under the (N, N) f32 it never materializes."""
+    payload = _load()
+    results = payload["results"]
+    assert "N16384_sparse_ingest" in results, sorted(results)
+    cell = results["N16384_sparse_ingest"]["rsa"]
+    assert cell["nnz"] > 0
+    assert cell["setup_seconds"] <= cell["setup_seconds_dense_ingest"]
+    assert cell["peak_j_build_bytes"] < cell["j_bytes_dense_f32"]
+    assert cell["j_bytes_dense_f32"] == 16384 * 16384 * 4
+    assert cell["sparse_solve_us_per_step"] > 0
+    # The single-engine plane points carry their own setup accounting too.
+    for key in ("N4096", "N16384"):
+        point = results[key]["rsa"]
+        assert point["setup_seconds"] > 0
+        assert point["peak_j_build_bytes"] > 0
+
+
+def test_check_flags_broken_ingestion_points():
+    """--check knows the sparse-ingest schema: missing columns, a sparse
+    setup slower than the dense detour, and a build peak at/over the dense
+    f32 footprint all fail the gate."""
+    from benchmarks.run import check_ingestion_points
+
+    good = {
+        "N16384_sparse_ingest": {"rsa": {
+            "nnz": 131072, "j_bytes_dense_f32": 16384 * 16384 * 4,
+            "setup_seconds": 0.5, "setup_seconds_dense_ingest": 20.0,
+            "peak_j_build_bytes": 70 << 20,
+            "peak_j_build_bytes_dense_ingest": 5 << 30,
+            "sparse_solve_us_per_step": 100.0}},
+    }
+    assert check_ingestion_points(good) == []
+    slow = copy.deepcopy(good)
+    slow["N16384_sparse_ingest"]["rsa"]["setup_seconds"] = 30.0
+    assert any("must not cost more" in e for e in check_ingestion_points(slow))
+    fat = copy.deepcopy(good)
+    fat["N16384_sparse_ingest"]["rsa"]["peak_j_build_bytes"] = 2 << 30
+    assert any("dense-J-free" in e for e in check_ingestion_points(fat))
+    incomplete = {"N16384_sparse_ingest": {"rsa": {"nnz": 4}}}
+    assert any("needs positive numeric" in e
+               for e in check_ingestion_points(incomplete))
+    # ...and the full checker routes through the same validation.
+    payload = _load()
+    broken = copy.deepcopy(payload)
+    broken["history"][-1]["results"].update(copy.deepcopy(slow))
+    broken["results"] = broken["history"][-1]["results"]
+    assert any("must not cost more" in e for e in check_bench_history(broken))
+
+
 def test_check_flags_diverged_top_level_results():
     payload = _load()
     broken = copy.deepcopy(payload)

@@ -109,3 +109,49 @@ def test_placement_four_devices():
     res = placement.place(C, num_devices=4, seed=0, steps=800, replicas=4)
     assert set(np.unique(res.assignment)) == {0, 1, 2, 3}
     assert res.cut_bytes >= 0
+
+
+def test_parse_gset_edges_matches_dense_parser():
+    """The dense-J-free Gset pipeline: parse_gset_edges → EdgeList of weights
+    → maxcut_edges_to_ising(J = −w) must describe exactly the instance the
+    dense parser + dense mapping builds — without any (N, N) array."""
+    from repro.graphs import parse_gset, parse_gset_edges
+    from repro.graphs.maxcut import maxcut_edges_to_ising, maxcut_to_ising
+
+    dense = parse_gset(GSET_SAMPLE)
+    edges = parse_gset_edges(GSET_SAMPLE)
+    assert edges.num_spins == dense.num_vertices
+    assert edges.nnz == dense.num_edges
+    np.testing.assert_array_equal(edges.to_dense(), dense.weights)
+    prob_sparse = maxcut_edges_to_ising(edges)
+    prob_dense = maxcut_to_ising(dense)
+    assert prob_sparse.couplings is None and prob_sparse.edges is not None
+    np.testing.assert_array_equal(prob_sparse.edges.to_dense(),
+                                  np.asarray(prob_dense.couplings))
+    assert prob_sparse.offset == prob_dense.offset
+    with pytest.raises(TypeError, match="EdgeList"):
+        maxcut_edges_to_ising(dense.weights)
+    # Header/edge-count mismatch is caught like the dense parser's.
+    bad = GSET_SAMPLE.replace("10 14", "10 15", 1)
+    with pytest.raises(ValueError, match="declared"):
+        parse_gset_edges(bad)
+    # A duplicated edge line (either orientation) is the one input on which
+    # sum-coalescing and the dense parser's last-wins would diverge — the
+    # sparse parser refuses it instead of silently solving a different
+    # instance.
+    dup = GSET_SAMPLE.replace("10 14", "10 15", 1) + "2 1 1\n"
+    with pytest.raises(ValueError, match="duplicate"):
+        parse_gset_edges(dup)
+
+
+def test_sparse_bipolar_edges_generator():
+    from repro.graphs import sparse_bipolar_edges
+
+    e = sparse_bipolar_edges(256, 1024, seed=3)
+    assert e.num_spins == 256
+    assert 0 < e.nnz <= 1024
+    assert e.max_abs_weight == 1          # signs assigned after dedup
+    assert (e.rows < e.cols).all()
+    # Deterministic in the seed.
+    assert e == sparse_bipolar_edges(256, 1024, seed=3)
+    assert e != sparse_bipolar_edges(256, 1024, seed=4)

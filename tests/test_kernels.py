@@ -221,3 +221,64 @@ def test_fused_anneal_solves_and_matches_reference_quality():
     assert np.all(np.asarray(fused.num_flips) > 0)
     baseline = solve(prob, 3, cfg)
     assert float(jnp.min(baseline.best_energy)) == pytest.approx(e_star, abs=1e-2)
+
+
+def test_pwl_segment_select_matches_gather_exactly():
+    """The lane-friendly PWL formulation (ROADMAP item): a branch-free
+    compare-and-select sweep over the S segments must agree with the
+    per-element two-gather evaluation *bitwise* — eagerly, under one jit
+    (where the compiler could fuse differently), and across the RWA-style
+    (T, 1) temperature broadcast — so switching formulations per backend can
+    never split kernel/oracle parity."""
+    from repro.core.pwl import pwl_table
+    from repro.kernels import common
+
+    tbl = pwl_table(64, 8.0)
+    g = np.random.default_rng(7)
+    # Dense z coverage: interior, exact knots, clamp tails, zero, +/-inf-ish.
+    de = np.concatenate([g.normal(size=2048) * 30,
+                         np.linspace(-8.5, 8.5, 257),
+                         [0.0, 1e30, -1e30]]).astype(np.float32)
+    de = jnp.asarray(np.broadcast_to(de, (4, de.size)))
+    for t in (0.0, 0.25, 1.0, 7.0):
+        a = common.flip_probability(de, t, tbl, pwl_select="gather")
+        b = common.flip_probability(de, t, tbl, pwl_select="select")
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    temps = jnp.asarray([0.0, 0.5, 1.0, 3.0])[:, None]
+    np.testing.assert_array_equal(
+        np.asarray(common.flip_probability(de, temps, tbl, pwl_select="gather")),
+        np.asarray(common.flip_probability(de, temps, tbl, pwl_select="select")))
+    fn = jax.jit(lambda d: (
+        common.flip_probability(d, 0.7, tbl, pwl_select="gather"),
+        common.flip_probability(d, 0.7, tbl, pwl_select="select")))
+    a, b = fn(de)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(ValueError, match="pwl_select"):
+        common.flip_probability(de, 1.0, tbl, pwl_select="nope")
+    # Default resolution is deterministic per backend (gather off-TPU), so
+    # kernel and oracle always land on the same formulation.
+    assert common.default_pwl_select() in ("gather", "select")
+
+
+def test_sweep_trajectory_invariant_under_pwl_formulation(monkeypatch):
+    """End-to-end guard: forcing the select formulation through the fused
+    sweep leaves the whole trajectory bit-identical to the gather default."""
+    from repro.kernels import common
+
+    rng = np.random.default_rng(3)
+    n = 48
+    J = _sym(rng, n, integer=True, scale=2.0)
+    prob = ising.IsingProblem.create(J=J)
+    cfg = SolverConfig(num_steps=128, schedule=geometric(4.0, 0.05, 128),
+                       mode="rwa", num_replicas=4, trace_every=32)
+    base = ops.fused_anneal(prob, 9, cfg, interpret=True)
+    monkeypatch.setattr(common, "default_pwl_select", lambda: "select")
+    # Tracing re-resolves the formulation; with trace_every set the chunk
+    # plan ignores chunk_steps, so bumping it forces a fresh trace (a cached
+    # jit would silently reuse the gather path) without touching cadence.
+    forced = ops.fused_anneal(prob, 9, cfg, interpret=True, chunk_steps=257)
+    for name in ("best_energy", "best_spins", "final_energy", "num_flips",
+                 "trace_energy"):
+        np.testing.assert_array_equal(np.asarray(getattr(base, name)),
+                                      np.asarray(getattr(forced, name)),
+                                      err_msg=name)

@@ -1,0 +1,397 @@
+"""Dense-J-free ingestion: sparse COO/edge-list → packed planes → solve.
+
+The contract under test (ISSUE 5 tentpole): an instance given as an edge
+list is solved end-to-end — ingestion, plane packing, u₀/e₀ init, every
+fused/sharded tier — **without any (N, N) array ever existing**, and with
+trajectories bit-identical to the same instance ingested densely. Plus the
+satellite contracts: the prebuilt-``CouplingStore`` memoization for repeated
+solves, and the plane-native init's einsum-identity against the dense init.
+"""
+import dataclasses
+import tracemalloc
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st  # skips @given tests when absent
+
+from repro.core import bitplane, coupling, ising
+from repro.core.ising import EdgeList
+from repro.core.schedules import geometric
+from repro.core.solver import SolverConfig, solve
+from repro.core.tempering import TemperingConfig, solve_tempering
+
+RESULT_FIELDS = ("best_energy", "best_spins", "final_energy", "num_flips",
+                 "trace_energy")
+
+
+def _sym_int(seed, n, amax=3):
+    g = np.random.default_rng(seed)
+    J = np.clip(np.rint(g.normal(size=(n, n)) * 1.5), -amax, amax)
+    J = np.triu(J, 1)
+    return J + J.T
+
+
+def _accumulated_dense(rows, cols, w, n):
+    """The documented ingestion semantics as straight-line code: every raw
+    entry adds w to J[i, j] *and* J[j, i] (so duplicates and both-direction
+    listings sum)."""
+    J = np.zeros((n, n), np.int64)
+    for i, j, wt in zip(rows, cols, w):
+        J[i, j] += wt
+        J[j, i] += wt
+    return J
+
+
+class TestEdgeList:
+    def test_canonicalizes_coalesces_and_drops_zeros(self):
+        rows = [0, 2, 1, 2, 0, 4, 3]
+        cols = [2, 0, 3, 0, 1, 3, 4]
+        w = [1, 2, -3, -1, 2, 1, -1]  # (0,2) thrice; (3,4) twice, cancelling
+        e = EdgeList.create(rows, cols, w, 5)
+        np.testing.assert_array_equal(e.to_dense(np.int64),
+                                      _accumulated_dense(rows, cols, w, 5))
+        assert (e.rows < e.cols).all()           # canonical orientation
+        assert e.nnz == 3                        # coalesced, zero-sum dropped
+        assert e.max_abs_weight == 3
+        # Deterministic canonical order -> content-equal regardless of input
+        # permutation (the identity jit caches on).
+        perm = EdgeList.create(rows[::-1], cols[::-1], w[::-1], 5)
+        assert perm == e and hash(perm) == hash(e)
+        assert e != EdgeList.create([0], [1], [1], 5)
+
+    def test_rejects_bad_input(self):
+        with pytest.raises(ValueError, match="self-loop"):
+            EdgeList.create([1], [1], [2], 4)
+        with pytest.raises(ValueError, match="out of range"):
+            EdgeList.create([0], [4], [1], 4)
+        with pytest.raises(ValueError, match="integer"):
+            EdgeList.create([0], [1], [0.5], 4)
+        with pytest.raises(ValueError, match="equal-length"):
+            EdgeList.create([0, 1], [1], [1], 4)
+        with pytest.raises(ValueError, match="num_spins"):
+            EdgeList.create([], [], [], 0)
+
+    def test_from_dense_round_trip(self):
+        J = _sym_int(3, 40)
+        e = EdgeList.from_dense(J)
+        np.testing.assert_array_equal(e.to_dense(), J.astype(np.float32))
+        with pytest.raises(ValueError, match="symmetric"):
+            EdgeList.from_dense(np.triu(J, 1) + np.eye(40) * 0)
+        with pytest.raises(ValueError, match="diagonal"):
+            EdgeList.from_dense(np.eye(4))
+
+    def test_negated(self):
+        e = EdgeList.create([0, 1], [1, 2], [2, -1], 3)
+        np.testing.assert_array_equal(e.negated().to_dense(), -e.to_dense())
+
+
+class TestSparseEncoder:
+    @pytest.mark.parametrize("dtype", [np.int8, np.int32, np.int64,
+                                       np.float32, np.float64])
+    def test_matches_dense_encoder_bit_for_bit(self, dtype):
+        """COO → planes must be plane-for-plane identical to dense → planes
+        of the equivalent matrix, for every weight dtype ingestion accepts."""
+        J = _sym_int(7, 70)  # 70 spins: 3 words, exercises the tail word
+        e = EdgeList.from_dense(J.astype(dtype))
+        sparse = bitplane.encode_edges(e)
+        dense = bitplane.encode_couplings(J, sparse.num_planes)
+        np.testing.assert_array_equal(np.asarray(sparse.pos),
+                                      np.asarray(dense.pos))
+        np.testing.assert_array_equal(np.asarray(sparse.neg),
+                                      np.asarray(dense.neg))
+        np.testing.assert_array_equal(bitplane.decode_couplings(sparse),
+                                      J.astype(np.int64))
+
+    def test_align_words_and_forced_planes(self):
+        J = _sym_int(9, 70)
+        e = EdgeList.from_dense(J)
+        padded = bitplane.encode_edges(e, num_planes=4, align_words=128)
+        ref = bitplane.encode_couplings(J, 4, align_words=128)
+        assert padded.num_words == 128 and padded.num_planes == 4
+        np.testing.assert_array_equal(np.asarray(padded.pos),
+                                      np.asarray(ref.pos))
+        np.testing.assert_array_equal(np.asarray(padded.neg),
+                                      np.asarray(ref.neg))
+
+    def test_row_range_slices_commute_with_encoding(self):
+        """Per-device slab encoding (the sharded init path): encoding a row
+        range equals slicing the full encode."""
+        e = EdgeList.from_dense(_sym_int(11, 96))
+        pos_full, neg_full = bitplane.edge_plane_words(e, 2)
+        for lo, hi in ((0, 48), (48, 96), (32, 64), (10, 10)):
+            pos, neg = bitplane.edge_plane_words(e, 2, row_range=(lo, hi))
+            np.testing.assert_array_equal(pos, pos_full[:, lo:hi])
+            np.testing.assert_array_equal(neg, neg_full[:, lo:hi])
+        with pytest.raises(ValueError, match="row_range"):
+            bitplane.edge_plane_words(e, 2, row_range=(10, 200))
+
+    def test_encoder_validates(self):
+        e = EdgeList.create([0], [1], [5], 4)
+        with pytest.raises(ValueError, match="planes"):
+            bitplane.encode_edges(e, num_planes=2)
+        with pytest.raises(ValueError, match="align_words"):
+            bitplane.encode_edges(e, align_words=0)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(2, 80), st.integers(0, 200),
+           st.integers(1, 10))
+    def test_property_round_trip(self, seed, n, nnz, num_planes):
+        """Random raw COO (duplicates, both orientations, mixed signs) →
+        EdgeList → planes → decode equals the accumulated dense matrix."""
+        g = np.random.default_rng(seed)
+        limit = (1 << num_planes) - 1
+        rows = g.integers(0, n, size=nnz)
+        cols = (rows + 1 + g.integers(0, n - 1, size=nnz)) % n  # never a loop
+        w = g.integers(-3, 4, size=nnz)
+        J = _accumulated_dense(rows, cols, w, n)
+        if np.abs(J).max(initial=0) > limit:
+            num_planes = int(np.abs(J).max()).bit_length()
+        e = EdgeList.create(rows, cols, w, n)
+        planes = bitplane.encode_edges(e, num_planes=num_planes)
+        np.testing.assert_array_equal(bitplane.decode_couplings(planes), J)
+
+
+class TestCouplingStoreFromEdges:
+    def test_auto_resolves_to_plane_tiers_and_dense_is_refused(self):
+        e = EdgeList.from_dense(_sym_int(1, 32))
+        assert coupling.resolve_format("auto", e, 32) == "bitplane"
+        assert coupling.resolve_format(
+            None, e, coupling.BITPLANE_VMEM_MAX_N + 1) == "bitplane_hbm"
+        with pytest.raises(ValueError, match="dense-J-free"):
+            coupling.resolve_format("dense", e, 32)
+        with pytest.raises(ValueError, match="dense-J-free"):
+            coupling.CouplingStore.build(e, "dense")
+        with pytest.raises(ValueError, match="format"):
+            coupling.resolve_format("nope", e, 32)
+        store = coupling.CouplingStore.build(e, "auto")
+        assert store.fmt == "bitplane" and store.dense is None
+        assert store.num_spins == 32
+
+    def test_build_from_edges_never_materializes_dense_at_scale(self, monkeypatch):
+        """The acceptance gate at N=16384: building the store from edges must
+        run the O(nnz) encoder only — the dense encoder and ``to_dense`` are
+        poisoned, and the measured host peak must be plane-scale (tens of
+        MiB), nowhere near the 1 GiB (N, N) f32."""
+        from repro.graphs import sparse_bipolar_edges
+
+        n = 16384
+        e = sparse_bipolar_edges(n, 4 * n, seed=0)
+        assert e.max_abs_weight == 1  # B=1 planes, the 16x-vs-f32 regime
+
+        def poisoned(*a, **k):
+            raise AssertionError("dense path touched during sparse ingestion")
+        monkeypatch.setattr(bitplane, "encode_couplings", poisoned)
+        monkeypatch.setattr(coupling, "encode_couplings", poisoned)
+        monkeypatch.setattr(EdgeList, "to_dense", poisoned)
+        store, stats = coupling.timed_build(e, "bitplane_hbm")
+        assert store.fmt == "bitplane_hbm" and store.dense is None
+        planes = store.planes
+        assert planes.num_spins == n and planes.num_words % 128 == 0
+        dense_bytes = n * n * 4
+        assert stats["peak_bytes"] < dense_bytes // 4, stats
+        assert stats["seconds"] > 0
+        # Plane-only footprint: the store itself is ~64 MiB at B=1.
+        assert planes.nbytes == 2 * planes.num_planes * n * planes.num_words * 4
+        assert planes.nbytes < dense_bytes // 8
+
+    def test_measure_host_build_reports_peak(self):
+        _, stats = coupling.measure_host_build(
+            lambda: np.zeros(1 << 22, np.uint8).sum())
+        assert stats["peak_bytes"] >= 1 << 22
+        assert stats["seconds"] > 0
+
+
+def _cfg(fmt="auto", mode="rwa", steps=96):
+    return SolverConfig(num_steps=steps, schedule=geometric(4.0, 0.05, steps),
+                        mode=mode, num_replicas=4, trace_every=24,
+                        coupling_format=fmt)
+
+
+class TestDenseFreeSolvePath:
+    def test_plane_native_init_is_einsum_identical_with_noninteger_h(self):
+        """u₀/e₀ parity vs the dense einsum init, nonzero (non-integer!) h:
+        the plane path computes u^(J) by popcount (exact integers) and routes
+        e₀ through ``energy_from_fields`` — the identical einsum — so every
+        element of the init state is bitwise equal."""
+        import jax
+        from repro.kernels import ops
+
+        J = _sym_int(5, 48)
+        h = np.linspace(-1.3, 0.9, 48).astype(np.float32)
+        prob = ising.IsingProblem.create(J=J, h=h)
+        planes = coupling.encode_planes(J)
+        base = jax.random.fold_in(jax.random.key(0), jnp.uint32(7))
+        dense_init = ops.fused_init_state(prob, base, 4, interpret=True)
+        plane_init = ops.fused_init_state(prob, base, 4, interpret=True,
+                                          planes=planes)
+        for k, (a, b) in enumerate(zip(dense_init, plane_init)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"state[{k}]")
+        # And energy_from_fields == ising.energy on the dense-computed u^J.
+        s = np.where(np.random.default_rng(1).random((3, 48)) < 0.5, 1.0, -1.0)
+        s = jnp.asarray(s, jnp.float32)
+        u_j = jnp.einsum("ij,...j->...i", prob.couplings, s)
+        np.testing.assert_array_equal(
+            np.asarray(ising.energy_from_fields(u_j, s, prob.fields)),
+            np.asarray(ising.energy(prob, s)))
+
+    @pytest.mark.parametrize("fmt", ["auto", "bitplane", "bitplane_hbm"])
+    def test_solve_from_edges_matches_dense_exactly(self, fmt):
+        J = _sym_int(13, 64)
+        h = np.linspace(-1, 1, 64).astype(np.float32)
+        edges = EdgeList.from_dense(J)
+        p_dense = ising.IsingProblem.create(J=J, h=h)
+        p_edges = ising.IsingProblem.create_sparse(edges, h=h)
+        assert p_edges.num_spins == 64 and p_edges.coupling_source is edges
+        # The dense twin runs the same plane tier so the J store matches.
+        plane_fmt = "bitplane" if fmt == "auto" else fmt
+        r_dense = solve(p_dense, 5,
+                        dataclasses.replace(_cfg(plane_fmt)), backend="fused")
+        r_edges = solve(p_edges, 5, _cfg(fmt), backend="fused")
+        for name in RESULT_FIELDS:
+            np.testing.assert_array_equal(np.asarray(getattr(r_dense, name)),
+                                          np.asarray(getattr(r_edges, name)),
+                                          err_msg=f"{fmt}:{name}")
+
+    def test_sharded_solve_from_edges_matches_fused(self):
+        import jax
+        from jax.sharding import Mesh
+        from repro.distributed.solver_sharded import solve_sharded
+
+        J = _sym_int(17, 128)
+        p_edges = ising.IsingProblem.create_sparse(EdgeList.from_dense(J))
+        p_dense = ising.IsingProblem.create(J=J)
+        mesh = Mesh(np.array(jax.devices()[:1]), ("spins",))
+        sharded = solve_sharded(p_edges, 3, _cfg(), mesh)
+        fused = solve(p_dense, 3, _cfg("bitplane"), backend="fused")
+        for name in RESULT_FIELDS:
+            np.testing.assert_array_equal(np.asarray(getattr(fused, name)),
+                                          np.asarray(getattr(sharded, name)),
+                                          err_msg=name)
+
+    def test_tempering_from_edges_matches_dense(self):
+        J = _sym_int(19, 48)
+        base = dict(num_steps=600, t_min=0.05, t_max=6.0, num_replicas=8,
+                    swap_every=10, backend="fused")
+        dense = solve_tempering(
+            ising.IsingProblem.create(J=J), 0,
+            TemperingConfig(**base, coupling_format="bitplane"))
+        sparse = solve_tempering(
+            ising.IsingProblem.create_sparse(EdgeList.from_dense(J)), 0,
+            TemperingConfig(**base, coupling_format="auto"))
+        np.testing.assert_array_equal(np.asarray(dense.best_energy),
+                                      np.asarray(sparse.best_energy))
+        np.testing.assert_array_equal(np.asarray(dense.num_flips),
+                                      np.asarray(sparse.num_flips))
+
+    def test_distributed_from_edges_matches_dense(self):
+        import jax
+        from jax.sharding import Mesh
+        from repro.distributed.solver_dist import (DistSolverConfig,
+                                                   solve_distributed)
+
+        J = _sym_int(23, 32)
+        mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+        base = SolverConfig(num_steps=128, schedule=geometric(6.0, 0.05, 128),
+                            mode="rwa", num_replicas=1, trace_every=32)
+        results = {}
+        for name, prob, fmt in (
+                ("dense", ising.IsingProblem.create(J=J), "bitplane"),
+                ("edges", ising.IsingProblem.create_sparse(
+                    EdgeList.from_dense(J)), "auto")):
+            cfg = DistSolverConfig(
+                base=dataclasses.replace(base, coupling_format=fmt),
+                replicas_per_device=4, exchange_every=2, backend="fused")
+            results[name] = solve_distributed(prob, 7, cfg, mesh)
+        np.testing.assert_array_equal(np.asarray(results["dense"].best_energy),
+                                      np.asarray(results["edges"].best_energy))
+        np.testing.assert_array_equal(
+            np.asarray(results["dense"].trace_energy),
+            np.asarray(results["edges"].trace_energy))
+
+    def test_reference_paths_raise_routing_errors(self):
+        p = ising.IsingProblem.create_sparse(EdgeList.from_dense(_sym_int(2, 16)))
+        with pytest.raises(ValueError, match="reference"):
+            solve(p, 0, _cfg(), backend="reference")
+        with pytest.raises(ValueError, match="dense"):
+            ising.energy(p, jnp.ones((16,), jnp.int8))
+        with pytest.raises(ValueError, match="dense"):
+            ising.local_fields(p, jnp.ones((16,), jnp.int8))
+        with pytest.raises(ValueError, match="reference"):
+            solve_tempering(p, 0, TemperingConfig(
+                num_steps=20, t_min=0.1, t_max=2.0, backend="reference"))
+        import jax
+        from jax.sharding import Mesh
+        from repro.distributed.solver_dist import (DistSolverConfig,
+                                                   solve_distributed)
+        with pytest.raises(ValueError, match="reference"):
+            solve_distributed(p, 0, DistSolverConfig(base=_cfg()),
+                              Mesh(np.array(jax.devices()[:1]), ("data",)))
+
+
+class TestPrebuiltStoreMemoization:
+    def test_solve_and_tempering_reuse_the_store(self, monkeypatch):
+        """The memoization contract: a prebuilt store makes repeated solves
+        encode exactly zero times; without it every solve re-encodes."""
+        calls = {"n": 0}
+        real = coupling.encode_couplings
+
+        def counting(*a, **k):
+            calls["n"] += 1
+            return real(*a, **k)
+        # coupling.py binds the encoder at import; patch its reference — the
+        # one CouplingStore.build actually calls.
+        monkeypatch.setattr(coupling, "encode_couplings", counting)
+
+        J = _sym_int(29, 48)
+        prob = ising.IsingProblem.create(J=J)
+        store = coupling.CouplingStore.build(J, "bitplane")
+        assert calls["n"] == 1
+        r1 = solve(prob, 5, _cfg("bitplane"), backend="fused", store=store)
+        r2 = solve(prob, 5, _cfg("bitplane"), backend="fused", store=store)
+        t1 = solve_tempering(prob, 0, TemperingConfig(
+            num_steps=100, t_min=0.1, t_max=4.0, backend="fused",
+            coupling_format="bitplane"), store=store)
+        assert calls["n"] == 1, "prebuilt store must skip every re-encode"
+        plain = solve(prob, 5, _cfg("bitplane"), backend="fused")
+        assert calls["n"] == 2, "store-less solve re-resolves and re-encodes"
+        for name in RESULT_FIELDS:
+            np.testing.assert_array_equal(np.asarray(getattr(r1, name)),
+                                          np.asarray(getattr(r2, name)))
+            np.testing.assert_array_equal(np.asarray(getattr(r1, name)),
+                                          np.asarray(getattr(plain, name)))
+        assert np.isfinite(float(t1.best_energy.min()))
+
+    def test_store_contracts(self):
+        J = _sym_int(31, 32)
+        prob = ising.IsingProblem.create(J=J)
+        store = coupling.CouplingStore.build(J, "bitplane")
+        with pytest.raises(ValueError, match="not both"):
+            from repro.kernels import ops
+            ops.fused_anneal(prob, 0, _cfg("bitplane"), store=store,
+                             coupling="bitplane")
+        with pytest.raises(ValueError, match="N="):
+            solve(ising.IsingProblem.create(J=_sym_int(1, 16)), 0,
+                  _cfg("bitplane"), backend="fused", store=store)
+        with pytest.raises(ValueError, match="fused backend"):
+            solve(prob, 0, _cfg(), backend="reference", store=store)
+        with pytest.raises(ValueError, match="fused backend"):
+            solve_tempering(prob, 0, TemperingConfig(
+                num_steps=20, t_min=0.1, t_max=2.0), store=store)
+        # A dense store must hold THIS problem's couplings: init runs on the
+        # problem's J, the sweep on the store's — a same-N stranger would
+        # silently corrupt trajectories, so it is identity-checked.
+        other = ising.IsingProblem.create(J=_sym_int(2, 32))
+        dense_store = coupling.CouplingStore.build(other.couplings, "dense")
+        with pytest.raises(ValueError, match="couplings array"):
+            solve(prob, 0, _cfg("dense"), backend="fused", store=dense_store)
+        with pytest.raises(ValueError, match="couplings array"):
+            solve_tempering(prob, 0, TemperingConfig(
+                num_steps=20, t_min=0.1, t_max=2.0, backend="fused"),
+                store=dense_store)
+        # ...and the same-problem dense store passes.
+        own = coupling.CouplingStore.build(prob.couplings, "dense")
+        solve(prob, 0, dataclasses.replace(_cfg("dense"), num_steps=8,
+                                           trace_every=0),
+              backend="fused", store=own)
