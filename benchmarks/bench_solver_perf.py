@@ -281,9 +281,8 @@ def _write_payload(results: dict, run_id: str | None) -> None:
         "results": results,
         "history": history,
     }
-    with open(BENCH_JSON, "w") as f:
-        json.dump(payload, f, indent=2)
-        f.write("\n")
+    from .run import write_bench_payload
+    write_bench_payload(payload, BENCH_JSON)
     print(f"# wrote {BENCH_JSON} (history entries: {len(history)})", flush=True)
 
 

@@ -21,6 +21,7 @@
 from __future__ import annotations
 
 import argparse
+import hashlib
 import json
 import os
 import sys
@@ -29,6 +30,46 @@ from functools import partial
 
 BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                           "BENCH_solver_perf.json")
+
+
+def bench_checksum(payload: dict) -> str:
+    """Content checksum of a bench payload: sha256 over the canonical
+    (sorted-keys, compact) JSON of everything except the ``checksum`` field
+    itself. Recorded on write, verified by ``--check`` — a hand-edited or
+    torn history file fails loudly instead of silently gating on garbage."""
+    body = {k: v for k, v in payload.items() if k != "checksum"}
+    canon = json.dumps(body, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(canon.encode()).hexdigest()
+
+
+def write_bench_payload(payload: dict, path: str = BENCH_JSON) -> None:
+    """Atomically persist a bench payload: stamp ``checksum``, write to a
+    temp file in the same directory, fsync, then ``os.replace`` — a crash
+    mid-write leaves the previous file intact, never a truncated JSON."""
+    payload = dict(payload)
+    payload["checksum"] = bench_checksum(payload)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def verify_checksum(payload: dict) -> list[str]:
+    """Checksum violations for a loaded payload (empty = healthy or
+    legacy-unstamped). Separate from :func:`check_bench_history` so the
+    schema checks stay usable on synthetic in-memory payloads."""
+    recorded = payload.get("checksum")
+    if recorded is None:
+        return []   # pre-checksum file: schema checks still apply
+    actual = bench_checksum(payload)
+    if recorded != actual:
+        return [f"checksum mismatch: file records {recorded[:12]}…, contents "
+                f"hash to {actual[:12]}… — the history was edited or torn "
+                "outside write_bench_payload"]
+    return []
 
 #: --check gate: fused µs/step may be at most this multiple of the baseline's
 #: at the same (N, mode) in the same recorded run.
@@ -192,7 +233,7 @@ def run_check(path: str = BENCH_JSON) -> int:
     except (OSError, ValueError) as e:
         print(f"# CHECK-ERROR cannot read {path}: {e}")
         return 1
-    errors = check_bench_history(payload)
+    errors = verify_checksum(payload) + check_bench_history(payload)
     for err in errors:
         print(f"# CHECK-FAIL {err}")
     if not errors:

@@ -1,1 +1,3 @@
-from .manager import CheckpointManager, latest_step, restore, save  # noqa: F401
+from .manager import (CheckpointManager, SnapshotCorruptError,  # noqa: F401
+                      latest_step, read_manifest, restore, save,
+                      snapshot_steps)

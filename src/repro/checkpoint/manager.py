@@ -1,8 +1,12 @@
 """Atomic, mesh-agnostic checkpointing with retention and async save.
 
-Fault-tolerance contract (DESIGN.md §5):
+Fault-tolerance contract (DESIGN.md §5, §Resilient solves):
   * **Atomicity** — state is written to ``step_<N>.tmp/`` then ``os.replace``d
     into place; a crash mid-write can never corrupt the latest checkpoint.
+  * **Integrity** — the manifest records a sha256 of ``arrays.npz``; restore
+    re-hashes before consuming values and raises ``SnapshotCorruptError`` on
+    any mismatch / unreadable file / missing leaf, so callers holding older
+    snapshots (``core.resilience``) can fall back newest-first.
   * **Mesh-agnostic** — arrays are saved as logical (unsharded) numpy values
     keyed by pytree path, so a restart may use a different mesh/topology
     (elastic rescale) and simply reshards on load.
@@ -18,17 +22,34 @@ a JSON manifest — no external checkpoint dependency.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import re
 import shutil
 import threading
+import zipfile
 from typing import Any, Optional
 
 import jax
 import numpy as np
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+class SnapshotCorruptError(RuntimeError):
+    """A snapshot directory exists but cannot be trusted: unreadable manifest
+    or array archive, checksum mismatch, or a leaf the template expects is
+    missing (truncated write). Callers with older snapshots on disk (the
+    resilient solve supervisor) catch this and fall back newest-first."""
+
+
+def _sha256_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as fh:
+        for block in iter(lambda: fh.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
 
 
 def _flatten_with_paths(tree) -> dict[str, Any]:
@@ -65,9 +86,13 @@ def save(directory: str, step: int, tree, extra: Optional[dict] = None) -> str:
             scalars[key] = leaf
         else:
             arrays[key] = np.asarray(jax.device_get(leaf))
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    arrays_path = os.path.join(tmp, "arrays.npz")
+    np.savez(arrays_path, **arrays)
+    with open(arrays_path, "rb") as fh:
+        os.fsync(fh.fileno())
     manifest = {"step": step, "scalars": scalars, "extra": extra or {},
-                "num_arrays": len(arrays)}
+                "num_arrays": len(arrays),
+                "arrays_sha256": _sha256_file(arrays_path)}
     with open(os.path.join(tmp, "manifest.json"), "w") as fh:
         json.dump(manifest, fh)
         fh.flush()
@@ -79,21 +104,62 @@ def save(directory: str, step: int, tree, extra: Optional[dict] = None) -> str:
 
 
 def latest_step(directory: str) -> Optional[int]:
+    steps = snapshot_steps(directory)
+    return steps[-1] if steps else None
+
+
+def snapshot_steps(directory: str) -> list[int]:
+    """All snapshot step numbers present on disk, ascending (corrupt or not —
+    validation happens at restore time so callers can walk newest-first)."""
     if not os.path.isdir(directory):
-        return None
-    steps = [int(m.group(1)) for name in os.listdir(directory)
-             if (m := _STEP_RE.match(name))]
-    return max(steps) if steps else None
+        return []
+    return sorted(int(m.group(1)) for name in os.listdir(directory)
+                  if (m := _STEP_RE.match(name)))
+
+
+def read_manifest(directory: str, step: int) -> dict:
+    """The snapshot's manifest (step / scalars / extra / checksum), raising
+    :class:`SnapshotCorruptError` if it cannot be read or parsed."""
+    path = os.path.join(directory, f"step_{step}", "manifest.json")
+    try:
+        with open(path) as fh:
+            return json.load(fh)
+    except (OSError, ValueError) as e:
+        raise SnapshotCorruptError(
+            f"unreadable manifest for snapshot step_{step}: {e}") from e
 
 
 def restore(directory: str, step: int, like):
     """Restore into the structure of ``like`` (a template pytree, e.g. freshly
-    initialized state). Arrays are resharded to the template's shardings."""
+    initialized state). Arrays are resharded to the template's shardings.
+
+    Integrity: when the manifest carries ``arrays_sha256`` (every snapshot
+    written since the field existed), the archive is re-hashed before any
+    value is consumed — a flipped bit or truncated write raises
+    :class:`SnapshotCorruptError` instead of silently restoring garbage.
+    Unreadable archives and template leaves missing from the snapshot raise
+    the same error, so one except-clause covers every corruption mode.
+    """
     path = os.path.join(directory, f"step_{step}")
-    with np.load(os.path.join(path, "arrays.npz")) as data:
-        arrays = {k: data[k] for k in data.files}
-    with open(os.path.join(path, "manifest.json")) as fh:
-        manifest = json.load(fh)
+    manifest = read_manifest(directory, step)
+    arrays_path = os.path.join(path, "arrays.npz")
+    expect = manifest.get("arrays_sha256")
+    if expect is not None:
+        try:
+            got = _sha256_file(arrays_path)
+        except OSError as e:
+            raise SnapshotCorruptError(
+                f"unreadable arrays.npz for snapshot step_{step}: {e}") from e
+        if got != expect:
+            raise SnapshotCorruptError(
+                f"checksum mismatch for snapshot step_{step}: arrays.npz "
+                f"hashes to {got[:12]}…, manifest records {expect[:12]}…")
+    try:
+        with np.load(arrays_path) as data:
+            arrays = {k: data[k] for k in data.files}
+    except (OSError, ValueError, zipfile.BadZipFile, KeyError) as e:
+        raise SnapshotCorruptError(
+            f"unreadable arrays.npz for snapshot step_{step}: {e}") from e
     flat_like = _flatten_with_paths(like)
     out = {}
     for key, leaf in flat_like.items():
@@ -109,7 +175,8 @@ def restore(directory: str, step: int, like):
         elif key in manifest["scalars"]:
             out[key] = manifest["scalars"][key]
         else:
-            raise KeyError(f"checkpoint missing leaf {key!r}")
+            raise SnapshotCorruptError(
+                f"snapshot step_{step} missing leaf {key!r}")
     # Rebuild in template order.
     leaves, treedef = jax.tree_util.tree_flatten(like)
     keys = [k for k, _ in _flatten_with_paths(like).items()]

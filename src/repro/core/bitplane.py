@@ -103,9 +103,18 @@ def encode_couplings(J: np.ndarray, num_planes: int,
     Padding is representation-invisible — every decoder truncates to N.
     """
     J = np.asarray(J)
+    if not np.isfinite(J).all():
+        i, j = np.argwhere(~np.isfinite(np.atleast_2d(J)))[0]
+        raise ValueError(
+            f"bit-plane encoding requires finite couplings: "
+            f"J[{i}, {j}] = {float(np.atleast_2d(J)[i, j])!r}")
     Ji = np.rint(J).astype(np.int64)
     if not np.array_equal(Ji, J):
-        raise ValueError("bit-plane encoding requires integer couplings (pre-scale first)")
+        bad = np.argwhere(np.atleast_2d(Ji != J))[0]
+        i, j = int(bad[0]), int(bad[1])
+        raise ValueError(
+            "bit-plane encoding requires integer couplings (pre-scale "
+            f"first): J[{i}, {j}] = {float(np.atleast_2d(J)[i, j])!r}")
     if Ji.ndim != 2 or Ji.shape[0] != Ji.shape[1]:
         raise ValueError(f"J must be square, got {Ji.shape}")
     if not np.array_equal(Ji, Ji.T):
@@ -118,7 +127,10 @@ def encode_couplings(J: np.ndarray, num_planes: int,
                       stacklevel=2)
     limit = 1 << num_planes
     if np.abs(Ji).max(initial=0) >= limit:
-        raise ValueError(f"|J|max={np.abs(Ji).max()} needs more than {num_planes} planes")
+        i, j = np.argwhere(np.abs(Ji) >= limit)[0]
+        raise ValueError(
+            f"|J|max={np.abs(Ji).max()} needs more than {num_planes} planes "
+            f"(first offender J[{i}, {j}] = {Ji[i, j]})")
     if align_words < 1:
         raise ValueError(f"align_words must be >= 1, got {align_words}")
     n = Ji.shape[0]
@@ -163,7 +175,11 @@ def edge_plane_words(edges, num_planes: int, align_words: int = 1,
     limit = 1 << num_planes
     amax = int(np.abs(edges.weights).max(initial=0))
     if amax >= limit:
-        raise ValueError(f"|J|max={amax} needs more than {num_planes} planes")
+        k = int(np.argmax(np.abs(edges.weights)))
+        raise ValueError(
+            f"|J|max={amax} needs more than {num_planes} planes (first "
+            f"offender edge #{k} ({int(edges.rows[k])}, "
+            f"{int(edges.cols[k])}) with weight {int(edges.weights[k])})")
     if align_words < 1:
         raise ValueError(f"align_words must be >= 1, got {align_words}")
     w_min = -(-n // WORD_BITS)

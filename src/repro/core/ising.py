@@ -79,10 +79,23 @@ class EdgeList:
         if np.any(ri == ci):
             raise ValueError("self-loop edges (i == i) are not representable "
                              "couplings; drop the diagonal before ingestion")
-        wi = np.rint(w).astype(np.int64)
-        if not np.array_equal(wi, w.astype(np.float64)):
-            raise ValueError("edge-list ingestion requires integer weights "
-                             "(pre-scale first)")
+        wf = w.astype(np.float64)
+        bad = np.flatnonzero(~np.isfinite(wf))
+        if bad.size:
+            k = int(bad[0])
+            raise ValueError(
+                f"edge weights must be finite: edge #{k} "
+                f"({int(ri[k])}, {int(ci[k])}) has weight {float(w[k])!r}"
+                + (f" (+{bad.size - 1} more non-finite)" if bad.size > 1
+                   else ""))
+        wi = np.rint(wf).astype(np.int64)
+        bad = np.flatnonzero(wi != wf)
+        if bad.size:
+            k = int(bad[0])
+            raise ValueError(
+                "edge-list ingestion requires integer weights (pre-scale "
+                f"first): edge #{k} ({int(ri[k])}, {int(ci[k])}) has weight "
+                f"{float(w[k])!r}")
         lo = np.minimum(ri, ci)
         hi = np.maximum(ri, ci)
         order = np.lexsort((hi, lo))
@@ -206,6 +219,15 @@ class IsingProblem:
             raise ValueError(f"J must be square, got {J.shape}")
         if h.shape != (J.shape[0],):
             raise ValueError(f"h shape {h.shape} incompatible with J {J.shape}")
+        # Finite checks first: a NaN anywhere would otherwise surface as the
+        # misleading "J must be symmetric" (NaN != NaN under allclose).
+        if not np.isfinite(J).all():
+            i, j = np.argwhere(~np.isfinite(J))[0]
+            raise ValueError(
+                f"J must be finite: J[{i}, {j}] = {float(J[i, j])!r}")
+        if not np.isfinite(h).all():
+            (i,) = np.argwhere(~np.isfinite(h))[0]
+            raise ValueError(f"h must be finite: h[{i}] = {float(h[i])!r}")
         if not np.allclose(J, J.T):
             raise ValueError("J must be symmetric")
         if not np.allclose(np.diag(J), 0.0):

@@ -64,36 +64,72 @@ def _mcmc_config(config: SolverConfig) -> mcmc.MCMCConfig:
     return mcmc.MCMCConfig(mode=config.mode, uniformized=config.uniformized, flip_prob=fp)
 
 
-def _run(problem: ising.IsingProblem, seed: jax.Array, config: SolverConfig) -> SolveResult:
+def reference_init_state(problem: ising.IsingProblem, seed: jax.Array,
+                         config: SolverConfig):
+    """Replica init for the reference engine: ``(states, replica_keys)`` with
+    the exact ``Salt.REPLICA`` → ``Salt.INIT`` derivation of ``_run`` — the
+    single definition shared with the resilient chunked driver
+    (``core.resilience``), so a resumed reference trajectory starts from the
+    identical ensemble."""
     n = problem.num_spins
     r = config.num_replicas
-    mc = _mcmc_config(config)
     base = jax.random.fold_in(jax.random.key(0), seed)
     replica_keys = jax.vmap(lambda i: rng.stream(base, rng.Salt.REPLICA, i))(jnp.arange(r))
     init_spins = jax.vmap(lambda k: ising.random_spins(rng.stream(k, rng.Salt.INIT), (n,)))(replica_keys)
     states = jax.vmap(lambda s: mcmc.init_chain(problem, s))(init_spins)
+    return states, replica_keys
 
-    def one_step(states, t):
-        temperature = config.schedule(t)
-        step_keys = jax.vmap(lambda k: rng.stream(k, t))(replica_keys)
-        new_states, _ = jax.vmap(
-            lambda st, k: mcmc.step(problem, st, k, temperature, mc))(states, step_keys)
-        return new_states
+
+def _reference_step(problem, states, replica_keys, t, config: SolverConfig,
+                    mc: mcmc.MCMCConfig):
+    temperature = config.schedule(t)
+    step_keys = jax.vmap(lambda k: rng.stream(k, t))(replica_keys)
+    new_states, _ = jax.vmap(
+        lambda st, k: mcmc.step(problem, st, k, temperature, mc))(states, step_keys)
+    return new_states
+
+
+def run_reference_chunk(problem, states, replica_keys, c, *, clen: int,
+                        chunk_len: int, config: SolverConfig,
+                        mc: mcmc.MCMCConfig):
+    """``clen`` sequential reference MCMC steps starting at global step
+    ``c·chunk_len`` — the chunk body under ``_run``'s traced scan and the
+    resilient supervisor's per-chunk jit (``core.resilience``). The engine is
+    a pure fold over the per-step function (every step keyed by its absolute
+    step index ``t``, no carried RNG state), so chunked composition is
+    value-identical to one long loop — the resume-parity axis of the
+    backend-parity contract."""
+    t0 = c * chunk_len
+    return jax.lax.fori_loop(
+        0, clen,
+        lambda i, st: _reference_step(problem, st, replica_keys, t0 + i,
+                                      config, mc),
+        states)
+
+
+def _run(problem: ising.IsingProblem, seed: jax.Array, config: SolverConfig) -> SolveResult:
+    r = config.num_replicas
+    mc = _mcmc_config(config)
+    states, replica_keys = reference_init_state(problem, seed, config)
 
     if config.trace_every and config.trace_every > 0:
         chunk = config.trace_every
         num_chunks = max(config.num_steps // chunk, 1)
 
         def chunk_body(carry, c):
-            states = carry
-            states = jax.lax.fori_loop(
-                0, chunk, lambda i, st: one_step(st, c * chunk + i), states)
+            states = run_reference_chunk(problem, carry, replica_keys, c,
+                                         clen=chunk, chunk_len=chunk,
+                                         config=config, mc=mc)
             return states, states.best_energy
 
         states, trace = jax.lax.scan(chunk_body, states, jnp.arange(num_chunks))
         trace = trace + problem.offset
     else:
-        states = jax.lax.fori_loop(0, config.num_steps, lambda t, st: one_step(st, t), states)
+        states = jax.lax.fori_loop(
+            0, config.num_steps,
+            lambda t, st: _reference_step(problem, st, replica_keys, t,
+                                          config, mc),
+            states)
         trace = jnp.zeros((0, r), jnp.float32)
 
     return SolveResult(

@@ -132,6 +132,36 @@ def _solve_tempering_reference(problem: ising.IsingProblem, seed,
     )
 
 
+def tempering_round_count(config: TemperingConfig) -> int:
+    """Swap rounds per run — the chunk-unit count of the fused tempering
+    trajectory (each round = one ``swap_every``-step sweep + swap phase)."""
+    return max(config.num_steps // config.swap_every, 1)
+
+
+def fused_tempering_round(state, acc, tot, base: jax.Array, round_idx,
+                          config: TemperingConfig, store, *, interpret: bool):
+    """One tempering round on the fused kernel: a ``swap_every``-step sweep
+    chunk on the round's ``Salt.SWEEP`` stream, then the Metropolis swap
+    phase. The single round body under ``_solve_tempering_fused``'s scan AND
+    the resilient supervisor's per-round jit (``core.resilience``) — one
+    definition keeps a resumed tempering trajectory bit-identical to the
+    uninterrupted scan. ``state`` is the fused 6-tuple; ``acc``/``tot`` the
+    running swap-acceptance counters."""
+    from ..kernels import ops as _ops  # lazy: kernels.ops imports core.solver
+
+    r = config.num_replicas
+    temps = jnp.asarray(config.ladder, jnp.float32)
+    tbl = pwl_table() if config.use_pwl else None
+    temps_trs = jnp.broadcast_to(temps[None, :], (config.swap_every, r))
+    state = _ops.fused_sweep_chunk(
+        store.kernel_operand, state, rng.stream(base, rng.Salt.SWEEP, round_idx),
+        config.swap_every, temps_trs, mode=config.mode, pwl_table=tbl,
+        block_r=_ops.fit_block(r, 8), coupling=store.fmt, interpret=interpret)
+    state, (a, t) = _swap_phase(state, lambda st: st[2], temps,
+                                base, round_idx, r)
+    return state, acc + a, tot + t
+
+
 def _solve_tempering_fused(problem: ising.IsingProblem, seed,
                            config: TemperingConfig,
                            store) -> TemperingResult:
@@ -143,26 +173,18 @@ def _solve_tempering_fused(problem: ising.IsingProblem, seed,
     from ..kernels import ops as _ops  # lazy: kernels.ops imports core.solver
 
     r = config.num_replicas
-    temps = jnp.asarray(config.ladder, jnp.float32)
-    tbl = pwl_table() if config.use_pwl else None
     interpret = _ops.auto_interpret(None)
-    block_r = _ops.fit_block(r, 8)
     base = jax.random.fold_in(jax.random.key(0), jnp.asarray(seed, jnp.uint32))
     init_state = _ops.fused_init_state(problem, base, r, interpret=interpret,
                                        planes=store.planes)
-    sweep_couplings = store.kernel_operand
-    temps_trs = jnp.broadcast_to(temps[None, :], (config.swap_every, r))
-    num_rounds = max(config.num_steps // config.swap_every, 1)
+    num_rounds = tempering_round_count(config)
 
     def round_body(carry, round_idx):
         state, acc, tot = carry
-        state = _ops.fused_sweep_chunk(
-            sweep_couplings, state, rng.stream(base, rng.Salt.SWEEP, round_idx),
-            config.swap_every, temps_trs, mode=config.mode, pwl_table=tbl,
-            block_r=block_r, coupling=store.fmt, interpret=interpret)
-        state, (a, t) = _swap_phase(state, lambda st: st[2], temps,
-                                    base, round_idx, r)
-        return (state, acc + a, tot + t), None
+        state, acc, tot = fused_tempering_round(
+            state, acc, tot, base, round_idx, config, store,
+            interpret=interpret)
+        return (state, acc, tot), None
 
     init = (init_state, jnp.int32(0), jnp.int32(0))
     ((u, s, e, be, bs, nf), acc, tot), _ = jax.lax.scan(

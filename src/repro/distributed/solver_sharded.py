@@ -331,6 +331,34 @@ def sharded_anneal_fn(config: SolverConfig, mesh: Mesh, n: int, *,
         out_specs=(shard, shard, P(), P(), shard, P(), P())))
 
 
+@functools.lru_cache(maxsize=32)
+def sharded_init_fn(config: SolverConfig, mesh: Mesh, n: int):
+    """A jitted shard_map around :func:`_sharded_init` alone — the one-time
+    replica init without the anneal, for drivers that advance the chain in
+    host-visible chunks (the resilient supervisor, ``core.resilience``).
+    Signature: ``fn(planes, fields, seed_arr) → (u0_loc, s0_loc, e0)`` with
+    planes/u/s sharded over the spin axis and e₀ replicated — exactly the
+    state ``sharded_anneal_fn``'s ``local_anneal`` starts from, so a chunked
+    drive of :func:`sharded_sweep_fn` from this init replays the monolithic
+    trajectory bit for bit."""
+    axes = tuple(mesh.axis_names)
+    num_shards = _mesh_size(mesh, axes)
+    r = config.num_replicas
+    n_loc = n // num_shards
+
+    def local_init(planes_loc, fields, seed_arr):
+        idx = _flat_shard_index(mesh, axes)
+        base = jax.random.fold_in(jax.random.key(0), seed_arr[0])
+        return _sharded_init(planes_loc, fields, base, r=r, n=n,
+                             n_loc=n_loc, lo=idx * n_loc, axes=axes)
+
+    shard = P(None, axes)
+    return jax.jit(shard_map_compat(
+        local_init, mesh=mesh,
+        in_specs=(P(None, axes, None), P(), P()),
+        out_specs=(shard, shard, P())))
+
+
 def sharded_sweep_fn(config: SolverConfig, mesh: Mesh, n: int):
     """A jitted shard_map around :func:`_sharded_sweep` alone — the per-step
     engine without the one-time init. This is the jaxpr-pin surface: the
@@ -403,6 +431,44 @@ def shard_planes_from_edges(edges: ising.EdgeList, mesh: Mesh,
     return BitPlanes(pos=pos, neg=neg, num_spins=n)
 
 
+def resolve_sharded_planes(problem, config: SolverConfig, mesh: Mesh, *,
+                           coupling: Optional[BitPlanes] = None,
+                           num_planes: Optional[int] = None) -> BitPlanes:
+    """Validate a (problem, config, mesh) triple for the sharded tier and
+    produce the row-sharded plane store — the shared front door of
+    ``solve_sharded`` and the resilient supervisor. Pre-packed ``coupling``
+    planes skip the re-encode; edge-list problems encode per-device slabs
+    straight from the O(nnz) edges; a dense J routes through
+    ``CouplingStore.build``. Raises the driver's routing/alignment errors."""
+    n = problem.num_spins
+    axes = tuple(mesh.axis_names)
+    num_shards = _mesh_size(mesh, axes)
+    if config.coupling_format not in ("auto", "bitplane_sharded"):
+        raise ValueError(
+            f"solve_sharded serves coupling_format='bitplane_sharded' "
+            f"(or 'auto'), got {config.coupling_format!r} — use "
+            f"solve(backend='fused') for the single-device tiers")
+    if n % num_shards:
+        raise ValueError(f"N={n} spin rows cannot shard evenly over the "
+                         f"{num_shards}-device mesh")
+    lane = common.default_lane(n)
+    n_loc = n // num_shards
+    if n_loc % lane:
+        raise ValueError(
+            f"per-shard spin count {n_loc} is not a multiple of the roulette "
+            f"lane {lane}: shard boundaries must align with selection blocks")
+    if coupling is not None:
+        store = coupling_store.CouplingStore.from_planes(
+            coupling, "bitplane_sharded")
+        coupling_store.validate_planes_cover(coupling, n)
+        return store.planes
+    if problem.couplings is None:
+        return shard_planes_from_edges(problem.edges, mesh, num_planes)
+    store = coupling_store.CouplingStore.build(
+        problem.couplings, "bitplane_sharded", num_planes=num_planes)
+    return store.planes
+
+
 def solve_sharded(problem, seed, config: SolverConfig, mesh: Mesh, *,
                   chunk_steps: int = 256,
                   coupling: Optional[BitPlanes] = None,
@@ -429,33 +495,8 @@ def solve_sharded(problem, seed, config: SolverConfig, mesh: Mesh, *,
     (the benchmark path); ``num_planes`` forces the precision B.
     """
     n = problem.num_spins
-    axes = tuple(mesh.axis_names)
-    num_shards = _mesh_size(mesh, axes)
-    if config.coupling_format not in ("auto", "bitplane_sharded"):
-        raise ValueError(
-            f"solve_sharded serves coupling_format='bitplane_sharded' "
-            f"(or 'auto'), got {config.coupling_format!r} — use "
-            f"solve(backend='fused') for the single-device tiers")
-    if n % num_shards:
-        raise ValueError(f"N={n} spin rows cannot shard evenly over the "
-                         f"{num_shards}-device mesh")
-    lane = common.default_lane(n)
-    n_loc = n // num_shards
-    if n_loc % lane:
-        raise ValueError(
-            f"per-shard spin count {n_loc} is not a multiple of the roulette "
-            f"lane {lane}: shard boundaries must align with selection blocks")
-    if coupling is not None:
-        store = coupling_store.CouplingStore.from_planes(
-            coupling, "bitplane_sharded")
-        coupling_store.validate_planes_cover(coupling, n)
-        planes = store.planes
-    elif problem.couplings is None:
-        planes = shard_planes_from_edges(problem.edges, mesh, num_planes)
-    else:
-        store = coupling_store.CouplingStore.build(
-            problem.couplings, "bitplane_sharded", num_planes=num_planes)
-        planes = store.planes
+    planes = resolve_sharded_planes(problem, config, mesh, coupling=coupling,
+                                    num_planes=num_planes)
     r = config.num_replicas
     fn = sharded_anneal_fn(config, mesh, n, chunk_steps=chunk_steps)
     seed_arr = jnp.asarray([seed], jnp.uint32)

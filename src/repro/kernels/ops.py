@@ -210,6 +210,41 @@ def anneal_chunk_plan(config: SolverConfig, chunk_steps: int):
     return chunk_len, num_chunks, rem_steps
 
 
+def anneal_gather(store: CouplingStore, gather: str, n: int) -> str:
+    """Resolve the row-fetch strategy for a resolved store: plane tiers take
+    the O(N) dynamic fetch ("auto"/"dynamic" — an explicit "onehot" flows
+    through so the kernel raises its dense-only error rather than being
+    silently overridden), the dense tier applies the N-crossover heuristic.
+    Shared by ``_fused_anneal_impl`` and the resilient chunked driver so both
+    feed the kernel identically."""
+    if store.planes is not None:
+        return gather if gather == "onehot" else "dynamic"
+    return _resolve_gather(gather, n)
+
+
+def anneal_chunk_step(store: CouplingStore, state, base: jax.Array,
+                      c: jax.Array, *, clen: int, chunk_len: int,
+                      config: SolverConfig, gather: str, block_r: int,
+                      interpret: bool):
+    """One annealing chunk of the fused trajectory: the temps tensor for
+    global steps ``[c·chunk_len, c·chunk_len + clen)``, the chunk's
+    ``Salt.SWEEP`` stream, and the sweep+merge of :func:`fused_sweep_chunk`.
+    This is the single chunk body under ``_fused_anneal_impl``'s scan AND the
+    resilient supervisor's per-chunk jit (``core.resilience``) — one
+    definition is what makes the resumed trajectory bit-identical to the
+    uninterrupted scan."""
+    r = config.num_replicas
+    steps = c * chunk_len + jnp.arange(clen)
+    temps = jax.vmap(config.schedule)(steps).astype(jnp.float32)
+    temps = jnp.broadcast_to(temps[:, None], (clen, r))
+    return fused_sweep_chunk(
+        store.kernel_operand, state, rng.stream(base, rng.Salt.SWEEP, c),
+        clen, temps, mode=config.mode, uniformized=config.uniformized,
+        pwl_table=solver_pwl_table(config), gather=gather,
+        block_r=fit_block(r, block_r), coupling=store.fmt,
+        interpret=interpret)
+
+
 @partial(jax.jit, static_argnames=("config", "chunk_steps", "block_r",
                                    "gather", "interpret"))
 def _fused_anneal_impl(problem: ising.IsingProblem, seed: jax.Array,
@@ -222,27 +257,15 @@ def _fused_anneal_impl(problem: ising.IsingProblem, seed: jax.Array,
     base = jax.random.fold_in(jax.random.key(0), seed)
     init = fused_init_state(problem, base, r, interpret=interpret,
                             block_r=block_r, planes=planes)
-    tbl = solver_pwl_table(config)
-    sweep_couplings = store.kernel_operand
-    if planes is not None:
-        # "auto"/"dynamic" resolve to the O(N) row fetch; an explicit
-        # "onehot" flows through so the kernel raises its dense-only error
-        # rather than being silently overridden here.
-        gather = gather if gather == "onehot" else "dynamic"
-    else:
-        gather = _resolve_gather(gather, n)
+    gather = anneal_gather(store, gather, n)
 
     chunk_len, num_chunks, rem_steps = anneal_chunk_plan(config, chunk_steps)
 
     def chunk(carry, c, clen):
-        steps = c * chunk_len + jnp.arange(clen)
-        temps = jax.vmap(config.schedule)(steps).astype(jnp.float32)
-        temps = jnp.broadcast_to(temps[:, None], (clen, r))
-        state = fused_sweep_chunk(
-            sweep_couplings, carry, rng.stream(base, rng.Salt.SWEEP, c),
-            clen, temps, mode=config.mode, uniformized=config.uniformized,
-            pwl_table=tbl, gather=gather, block_r=fit_block(r, block_r),
-            coupling=store.fmt, interpret=interpret)
+        state = anneal_chunk_step(store, carry, base, c, clen=clen,
+                                  chunk_len=chunk_len, config=config,
+                                  gather=gather, block_r=block_r,
+                                  interpret=interpret)
         return state, state[3]  # best-so-far energy at chunk end
 
     (u, s, e, be, bs, nf), trace = jax.lax.scan(

@@ -2,6 +2,13 @@
 
     PYTHONPATH=src python -m repro.launch.solve --instance k200 --mode rwa
     PYTHONPATH=src python -m repro.launch.solve --gset path/to/G6 --mode rsa
+
+Long solves can run under the resilient supervisor (crash-safe snapshots,
+budgets, bit-identical resume — see DESIGN.md §Resilient solves):
+
+    PYTHONPATH=src python -m repro.launch.solve --instance k200 \\
+        --run-dir runs/k200 --deadline-seconds 3600
+    # after a crash/preemption, the same command resumes where it stopped
 """
 from __future__ import annotations
 
@@ -12,6 +19,7 @@ import numpy as np
 
 from repro.configs.snowball import default_solver
 from repro.core import tts
+from repro.core.resilience import BudgetConfig, run_resilient
 from repro.core.solver import solve
 from repro.graphs import (complete_bipolar, erdos_renyi, maxcut_to_ising,
                           parse_gset, small_world, torus_grid)
@@ -48,15 +56,46 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--tts-threshold", type=float, default=None,
                     help="cut value for TTS(0.99) estimation")
+    res = ap.add_argument_group(
+        "resilience", "crash-safe supervised solve (any of these flags "
+        "routes the run through repro.core.resilience.run_resilient)")
+    res.add_argument("--run-dir", default=None,
+                     help="snapshot directory; rerunning with the same "
+                     "arguments resumes bit-identically from the last "
+                     "intact snapshot")
+    res.add_argument("--no-resume", action="store_true",
+                     help="ignore snapshots already in --run-dir")
+    res.add_argument("--deadline-seconds", type=float, default=None,
+                     help="wall-clock budget, checked between chunks")
+    res.add_argument("--target-energy", type=float, default=None,
+                     help="stop once the ensemble best reaches this energy")
+    res.add_argument("--max-steps", type=int, default=None,
+                     help="step budget (may stop before --steps)")
+    res.add_argument("--chunk-steps", type=int, default=256,
+                     help="snapshot/budget granularity for untraced runs")
     args = ap.parse_args()
 
     inst = build_instance(args)
     problem = maxcut_to_ising(inst)
     cfg = default_solver(inst.num_vertices, args.steps, mode=args.mode,
                          num_replicas=args.replicas)
+    resilient = (args.run_dir is not None
+                 or args.deadline_seconds is not None
+                 or args.target_energy is not None
+                 or args.max_steps is not None)
     t0 = time.perf_counter()
-    engine = fused_anneal if args.engine == "fused" else solve
-    result = engine(problem, args.seed, cfg)
+    if resilient:
+        backend = "fused" if args.engine == "fused" else "reference"
+        rr = run_resilient(
+            problem, args.seed, cfg, run_dir=args.run_dir, backend=backend,
+            budget=BudgetConfig(deadline_seconds=args.deadline_seconds,
+                                max_steps=args.max_steps,
+                                target_energy=args.target_energy),
+            chunk_steps=args.chunk_steps, resume=not args.no_resume)
+        result = rr.result
+    else:
+        engine = fused_anneal if args.engine == "fused" else solve
+        result = engine(problem, args.seed, cfg)
     result.best_energy.block_until_ready()
     wall = time.perf_counter() - t0
 
@@ -65,6 +104,15 @@ def main():
           f"density={inst.density*100:.1f}%")
     print(f"mode={args.mode} engine={args.engine} steps={args.steps} "
           f"replicas={args.replicas} wall={wall:.2f}s")
+    if resilient:
+        resumed = ("" if rr.resumed_from_chunk is None
+                   else f" resumed_from_chunk={rr.resumed_from_chunk}")
+        downgraded = ("" if not rr.downgrades else
+                      " tier_downgrades=" + ",".join(
+                          f"{a}->{b}@{c}" for a, b, c in rr.downgrades))
+        print(f"stop_reason={rr.stop_reason} steps_done={rr.steps_done}/"
+              f"{args.steps} chunks={rr.chunks_done}/{rr.total_chunks}"
+              f"{resumed}{downgraded}")
     print(f"best cut = {cuts.max():.0f}  (per-replica: {np.sort(cuts)[::-1][:8]})")
     if args.tts_threshold:
         r = tts.estimate(-cuts, threshold=-args.tts_threshold,

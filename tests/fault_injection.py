@@ -1,0 +1,170 @@
+"""Fault-injection harness for the resilient-solve tests.
+
+Three fault families, one helper each, shared by the tier-1 smoke subset and
+the randomized ``-m slow`` matrix (``tests/test_fault_injection.py``) and by
+the in-process resilience tests (``tests/test_resilience.py``):
+
+* **Process kill at a chunk boundary** — :func:`kill_after_chunk_hook` (in
+  process, via ``on_event``) and :func:`resilient_subprocess_code` (a script
+  for ``benchmarks.subproc.run_forced_device_subprocess`` that runs
+  ``run_resilient`` on a forced multi-device mesh and ``os._exit``\\ s with
+  :data:`KILL_EXIT_CODE` right after snapshot ``k`` — a hard death, no
+  finally blocks, like a preemption).
+
+* **Snapshot corruption** — :func:`corrupt_snapshot` flips a byte, truncates
+  the array archive, or mangles the manifest of an on-disk snapshot.
+
+* **Synthetic allocation failure** — :func:`fake_oom` builds the
+  RESOURCE_EXHAUSTED-shaped error XLA raises on a real OOM, for
+  ``repro.core.resilience.inject_faults`` hooks.
+
+Deliberately jax-free at import time so pytest collection stays cheap.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+#: Exit code of a harness-killed run — distinct from 0 (success) and 1
+#: (python exception) so the tests can assert the death was the injected one.
+KILL_EXIT_CODE = 7
+
+
+class SimulatedCrash(BaseException):
+    """In-process stand-in for a hard process death. Derives from
+    BaseException so it escapes both the supervisor's graceful
+    ``except KeyboardInterrupt`` and its tier-fallback ``except Exception``
+    triage — exactly like a SIGKILL, nothing downstream of the raise runs."""
+
+
+def fake_oom(nbytes: int = 1 << 40) -> RuntimeError:
+    """An allocation-failure error shaped like XLA's, for inject_faults
+    hooks; ``resilience.is_allocation_failure`` must classify it."""
+    return RuntimeError(
+        f"RESOURCE_EXHAUSTED: Out of memory while trying to allocate "
+        f"{nbytes} bytes.")
+
+
+def kill_after_chunk_hook(chunk: int, exc=SimulatedCrash):
+    """An ``on_event`` callback that raises ``exc`` right after snapshot
+    ``chunk`` is written — the in-process stand-in for a death at a chunk
+    boundary (the snapshot exists, nothing after it does)."""
+    def hook(kind, info):
+        if kind == "snapshot" and info["chunk"] == chunk:
+            raise exc()
+    return hook
+
+
+def oom_once_hook(site: str, at_chunk: int | None = None,
+                  fmts: tuple = ()):
+    """An ``inject_faults`` hook raising one synthetic OOM at ``site``
+    ("store_build" fires per tier build and matches on ``fmts``;
+    "chunk_start" fires once at ``at_chunk``)."""
+    fired = []
+
+    def hook(s, info):
+        if s != site:
+            return
+        if site == "store_build" and info.get("fmt") in fmts:
+            raise fake_oom()
+        if site == "chunk_start" and not fired and info["chunk"] == at_chunk:
+            fired.append(True)
+            raise fake_oom()
+    return hook
+
+
+def corrupt_snapshot(run_dir: str, step: int, how: str = "flip") -> str:
+    """Damage snapshot ``step_<step>`` under ``run_dir``. ``how``:
+    "flip" (one byte of arrays.npz inverted — the checksum must catch it),
+    "truncate" (arrays.npz cut to 10 bytes — a torn write), or
+    "manifest" (manifest.json replaced with junk). Returns the damaged
+    path."""
+    snap = os.path.join(run_dir, f"step_{step}")
+    if how == "manifest":
+        path = os.path.join(snap, "manifest.json")
+        with open(path, "w") as fh:
+            fh.write("{not json")
+        return path
+    path = os.path.join(snap, "arrays.npz")
+    if how == "truncate":
+        with open(path, "r+b") as fh:
+            fh.truncate(10)
+        return path
+    if how == "flip":
+        size = os.path.getsize(path)
+        with open(path, "r+b") as fh:
+            fh.seek(size // 2)
+            b = fh.read(1)
+            fh.seek(size // 2)
+            fh.write(bytes([b[0] ^ 0xFF]))
+        return path
+    raise ValueError(f"how must be 'flip' | 'truncate' | 'manifest', "
+                     f"got {how!r}")
+
+
+def resilient_subprocess_code(*, run_dir: str, seed: int = 5, n: int = 256,
+                              num_steps: int = 60, trace_every: int = 20,
+                              num_replicas: int = 4,
+                              kill_after_chunk: int | None = None,
+                              expect_resumed_from: int | None = None,
+                              n_devices: int = 2) -> str:
+    """Source for a forced-``n_devices`` subprocess that drives the
+    spin-sharded tier through ``run_resilient`` on a deterministic problem.
+
+    With ``kill_after_chunk`` the process ``os._exit``\\ s with
+    :data:`KILL_EXIT_CODE` immediately after that snapshot lands — a hard
+    kill at a chunk boundary. Without it the run completes and prints
+    ``RESULT <json>`` holding the solve digest (best energies / spin sums /
+    trace) plus ``resumed_from`` — the parent compares digests between an
+    uninterrupted run and a killed-then-resumed pair for bit-identity.
+    """
+    kill = ("\n"
+            f"def _ev(kind, info):\n"
+            f"    if kind == 'snapshot' and info['chunk'] == {kill_after_chunk}:\n"
+            f"        os._exit({KILL_EXIT_CODE})\n"
+            if kill_after_chunk is not None else "\ndef _ev(kind, info):\n    pass\n")
+    expect = ("" if expect_resumed_from is None else
+              f"assert res.resumed_from_chunk == {expect_resumed_from}, "
+              f"res.resumed_from_chunk\n")
+    return f"""
+import os, json
+import numpy as np, jax
+from jax.sharding import Mesh
+from repro.core import ising, schedules
+from repro.core.solver import SolverConfig
+from repro.core.resilience import run_resilient
+
+assert jax.device_count() == {n_devices}
+g = np.random.default_rng(1)
+n = {n}
+J = np.clip(np.rint(g.normal(size=(n, n)) * 1.5), -3, 3)
+J = np.triu(J, 1); J = J + J.T
+h = g.normal(size=(n,)).astype(np.float32)
+problem = ising.IsingProblem.create(J, h, offset=0.5)
+mesh = Mesh(np.array(jax.devices()), ("spins",))
+cfg = SolverConfig(num_steps={num_steps},
+                   schedule=schedules.linear(3.0, 0.1, {num_steps}),
+                   num_replicas={num_replicas}, trace_every={trace_every},
+                   coupling_format="bitplane_sharded")
+{kill}
+res = run_resilient(problem, {seed}, cfg, run_dir={run_dir!r}, mesh=mesh,
+                    on_event=_ev)
+{expect}assert res.stop_reason == "completed", res.stop_reason
+r = res.result
+print("RESULT " + json.dumps({{
+    "best_energy": np.asarray(r.best_energy).tolist(),
+    "best_spin_sum": np.asarray(r.best_spins).astype(int).sum(axis=1).tolist(),
+    "final_energy": np.asarray(r.final_energy).tolist(),
+    "num_flips": np.asarray(r.num_flips).tolist(),
+    "trace": np.asarray(r.trace_energy).tolist(),
+    "resumed_from": res.resumed_from_chunk,
+}}))
+"""
+
+
+def parse_result(stdout: str) -> dict:
+    """The ``RESULT <json>`` digest printed by a harness subprocess."""
+    for line in stdout.splitlines():
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    raise AssertionError(f"no RESULT line in subprocess stdout:\n{stdout}")

@@ -203,6 +203,43 @@ def test_check_flags_diverged_top_level_results():
     assert any("mirror" in e for e in check_bench_history(broken))
 
 
+def test_committed_payload_checksum_verifies():
+    from benchmarks.run import verify_checksum
+
+    payload = _load()
+    assert "checksum" in payload
+    assert verify_checksum(payload) == []
+
+
+def test_checksum_catches_tampering():
+    from benchmarks.run import verify_checksum
+
+    broken = copy.deepcopy(_load())
+    broken["history"][-1]["results"]["N512"]["rsa"]["fused_us_per_step"] = 0.1
+    assert any("checksum mismatch" in e for e in verify_checksum(broken))
+    # Legacy files written before checksums were stamped still verify.
+    legacy = copy.deepcopy(_load())
+    del legacy["checksum"]
+    assert verify_checksum(legacy) == []
+
+
+def test_write_bench_payload_is_atomic_and_stamped(tmp_path):
+    """write_bench_payload must go through a temp file + rename (no torn
+    half-written JSON visible at the target path) and stamp a checksum
+    that verifies on reload."""
+    from benchmarks.run import verify_checksum, write_bench_payload
+
+    path = str(tmp_path / "bench.json")
+    payload = copy.deepcopy(_load())
+    write_bench_payload(payload, path)
+    with open(path) as f:
+        reloaded = json.load(f)
+    assert verify_checksum(reloaded) == []
+    assert check_bench_history(reloaded) == []
+    # Nothing but the final file may remain — no orphaned temp artifacts.
+    assert os.listdir(tmp_path) == ["bench.json"]
+
+
 def test_check_flags_fused_regression():
     payload = _load()
     broken = copy.deepcopy(payload)

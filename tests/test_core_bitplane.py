@@ -30,6 +30,30 @@ def test_encode_rejects_overflow():
         bitplane.encode_couplings(J * 0.3, 8)
 
 
+def test_encode_rejects_non_finite_naming_entry():
+    J = np.zeros((4, 4))
+    J[0, 2] = J[2, 0] = np.inf
+    with pytest.raises(ValueError, match=r"finite couplings: J\[0, 2\]"):
+        bitplane.encode_couplings(J, 3)
+    J[0, 2] = J[2, 0] = np.nan
+    with pytest.raises(ValueError, match=r"J\[0, 2\] = nan"):
+        bitplane.encode_couplings(J, 3)
+
+
+def test_encode_overflow_names_offending_entry():
+    J = np.zeros((4, 4))
+    J[1, 3] = J[3, 1] = 9  # needs 4 planes
+    with pytest.raises(ValueError, match=r"J\[1, 3\] = 9"):
+        bitplane.encode_couplings(J, 3)
+
+
+def test_edge_plane_words_overflow_names_offending_edge():
+    from repro.core import ising
+    edges = ising.EdgeList.create([0, 1], [1, 2], [1, 9], 4)
+    with pytest.raises(ValueError, match=r"\(1, 2\) with weight 9"):
+        bitplane.edge_plane_words(edges, 3)
+
+
 def test_encode_rejects_asymmetric():
     """BitPlanes rows double as columns in the incremental update, so an
     asymmetric J must be refused at encode time — not silently produce wrong

@@ -116,3 +116,36 @@ def test_validation_rejects_bad_inputs():
     J[0, 1] = 1.0  # asymmetric
     with pytest.raises(ValueError):
         ising.IsingProblem.create(J=J)
+
+
+def test_validation_rejects_non_finite_naming_entry():
+    """A NaN/inf must be reported by coordinate — not surface as the
+    misleading 'J must be symmetric' (NaN != NaN under allclose)."""
+    J = np.zeros((4, 4), np.float32)
+    J[1, 2] = J[2, 1] = np.nan
+    with pytest.raises(ValueError, match=r"J must be finite: J\[1, 2\]"):
+        ising.IsingProblem.create(J=J)
+    J = np.zeros((4, 4), np.float32)
+    J[0, 3] = J[3, 0] = np.inf
+    with pytest.raises(ValueError, match=r"J\[0, 3\] = inf"):
+        ising.IsingProblem.create(J=J)
+    h = np.zeros((4,), np.float32)
+    h[2] = np.nan
+    with pytest.raises(ValueError, match=r"h must be finite: h\[2\]"):
+        ising.IsingProblem.create(J=np.zeros((4, 4), np.float32), h=h)
+
+
+def test_edge_list_rejects_bad_weights_naming_edge():
+    rows = np.array([0, 1, 2])
+    cols = np.array([1, 2, 3])
+    w = np.array([1.0, np.nan, 2.0])
+    with pytest.raises(ValueError,
+                       match=r"edge #1 \(1, 2\) has weight nan"):
+        ising.EdgeList.create(rows, cols, w, 4)
+    w = np.array([1.0, np.inf, -np.inf])
+    with pytest.raises(ValueError, match=r"\+1 more non-finite"):
+        ising.EdgeList.create(rows, cols, w, 4)
+    w = np.array([1.0, 2.0, 0.25])
+    with pytest.raises(ValueError,
+                       match=r"integer weights.*edge #2 \(2, 3\)"):
+        ising.EdgeList.create(rows, cols, w, 4)

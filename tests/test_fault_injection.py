@@ -1,0 +1,79 @@
+"""End-to-end fault injection on the spin-sharded tier: real process
+deaths (``os._exit`` mid-run) on a forced 2-device CPU mesh, resumed runs
+proving bit-identical recovery.
+
+Tier-1 runs the single kill-and-resume smoke (``-m fault`` selects just
+these); the randomized kill/corrupt matrix rides ``-m slow``.
+"""
+import numpy as np
+import pytest
+
+from benchmarks.subproc import run_forced_device_subprocess
+from fault_injection import (KILL_EXIT_CODE, corrupt_snapshot, parse_result,
+                             resilient_subprocess_code)
+
+pytestmark = pytest.mark.fault
+
+
+def _run(code):
+    proc = run_forced_device_subprocess(code, n_devices=2)
+    return proc
+
+
+def _digest(proc):
+    assert proc.returncode == 0, (
+        f"subprocess failed rc={proc.returncode}\n"
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
+    d = parse_result(proc.stdout)
+    d.pop("resumed_from")
+    return d
+
+
+def test_kill_and_resume_sharded_smoke(tmp_path):
+    """A hard kill (os._exit, no cleanup) right after snapshot 2 on a
+    2-device sharded mesh; the resumed run must land bit-identical to an
+    uninterrupted one."""
+    clean = _digest(_run(resilient_subprocess_code(
+        run_dir=str(tmp_path / "clean"))))
+
+    killed_dir = str(tmp_path / "killed")
+    proc = _run(resilient_subprocess_code(run_dir=killed_dir,
+                                          kill_after_chunk=2))
+    assert proc.returncode == KILL_EXIT_CODE, (
+        f"expected injected kill rc={KILL_EXIT_CODE}, got "
+        f"{proc.returncode}\nstdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
+
+    resumed = _digest(_run(resilient_subprocess_code(
+        run_dir=killed_dir, expect_resumed_from=2)))
+    assert resumed == clean
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("trial", range(3))
+def test_kill_and_resume_randomized(tmp_path, trial):
+    """Randomized matrix: seed, kill boundary, and optional post-kill
+    snapshot corruption drawn per trial; every combination must recover to
+    the uninterrupted trajectory."""
+    g = np.random.default_rng(100 + trial)
+    seed = int(g.integers(0, 2**16))
+    kill_at = int(g.integers(1, 3))          # 60 steps / 20 -> chunks 1..3
+    corrupt = bool(g.integers(0, 2))
+
+    clean = _digest(_run(resilient_subprocess_code(
+        run_dir=str(tmp_path / "clean"), seed=seed)))
+
+    run_dir = str(tmp_path / "killed")
+    proc = _run(resilient_subprocess_code(run_dir=run_dir, seed=seed,
+                                          kill_after_chunk=kill_at))
+    assert proc.returncode == KILL_EXIT_CODE, proc.stderr
+
+    resume_from = kill_at
+    if corrupt and kill_at > 1:
+        # Damage the newest snapshot too: recovery must walk back one.
+        corrupt_snapshot(run_dir, kill_at,
+                         how=("flip", "truncate")[trial % 2])
+        resume_from = kill_at - 1
+
+    resumed = _digest(_run(resilient_subprocess_code(
+        run_dir=run_dir, seed=seed, expect_resumed_from=resume_from)))
+    assert resumed == clean
