@@ -1,0 +1,188 @@
+"""§Serving: multi-tenant throughput of the solver-as-a-service front end.
+
+A Poisson request stream (fixed-seed arrival schedule — reproducible, like
+every other input here) over a small pool of instances is played twice
+through :class:`repro.serve.SolverService`, *within one run*: once with
+batching on (same-instance seed-free requests stack into the replica axis
+of one fused launch) and once with ``ServeConfig(batching=False)`` (one
+launch per request — the sequential baseline). Each variant is played cold
+first (traces/compiles + populates the content-hash store cache) and then
+warm-timed, so the recorded ratio isolates the batching policy and the
+warm pass doubles as the cache measurement: the encoder call count during
+the warm pass is recorded and ``--check`` gates it at exactly **zero**
+(cache-hit solves must skip the resolve→encode entirely), alongside
+``batched_solves_per_sec >= sequential_solves_per_sec`` — both columns
+from the same session, so the gate is load-robust like the fused-vs-
+baseline one.
+
+Latency is measured against the simulated arrival clock (arrival → result
+assembly, including time spent queued behind the drain in flight), so the
+p50/p99 capture what a tenant would see, not just kernel wall time.
+
+Cells merge into ``BENCH_solver_perf.json`` under ``N{n}_serve`` via
+``merge_bench_results`` (this suite owns a subset of the table).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.configs.snowball import default_solver
+from repro.core import coupling
+from repro.graphs import complete_bipolar
+from repro.graphs.maxcut import maxcut_to_ising
+from repro.serve import ServeConfig, SolveRequest, SolverService
+
+from .common import CsvEmitter
+
+SERVE_N = 48            # bucket-pads to 64; interpret-mode-friendly
+SERVE_STEPS = 2048     # enough solve wall that launch count dominates pacing
+SERVE_REPLICAS = 2      # per request; stacking fuses these per instance
+NUM_INSTANCES = 3
+NUM_REQUESTS = 12
+MEAN_GAP_S = 0.0005     # bursty offered load: requests pile up within one window
+#: Admission window: every request arriving within this span of the first
+#: unserved one drains together. Keyed on *arrival* time, not service time,
+#: so batch compositions are a pure function of the fixed-seed schedule —
+#: identical across the cold/warm passes (shapes traced cold stay warm) and
+#: across the batched/sequential variants (only the launch policy differs).
+BATCH_WINDOW_S = 0.005
+
+
+def _instances():
+    probs = []
+    for i in range(NUM_INSTANCES):
+        inst = complete_bipolar(SERVE_N, seed=100 + i)
+        probs.append(maxcut_to_ising(inst))
+    return probs
+
+
+def _arrivals():
+    """(arrival_time, instance_index) per request — a fixed-seed Poisson
+    process round-robined over the instance pool."""
+    rng = np.random.default_rng(7)
+    gaps = rng.exponential(scale=MEAN_GAP_S, size=NUM_REQUESTS)
+    times = np.cumsum(gaps)
+    return [(float(times[i]), i % NUM_INSTANCES) for i in range(NUM_REQUESTS)]
+
+
+def _simulate(service: SolverService, problems, arrivals, cfg) -> dict:
+    """Play the arrival schedule through the service against a simulated
+    clock: each admission window collects every request arriving within
+    ``BATCH_WINDOW_S`` of the first unserved one, one drain's measured wall
+    time then moves the clock — so a request's latency includes both the
+    window wait and queueing behind the drain in flight."""
+    clock = 0.0
+    latencies = []
+    submitted_at = {}
+    launches0 = service.stats["launches"]
+    i = 0
+    while i < len(arrivals):
+        w_end = arrivals[i][0] + BATCH_WINDOW_S
+        clock = max(clock, w_end)
+        while i < len(arrivals) and arrivals[i][0] <= w_end:
+            t_arr, p = arrivals[i]
+            ticket = service.submit(SolveRequest(problems[p], cfg))
+            submitted_at[ticket] = t_arr
+            i += 1
+        t0 = time.perf_counter()
+        out = service.drain()
+        clock += time.perf_counter() - t0
+        for ticket in out:
+            latencies.append(clock - submitted_at.pop(ticket))
+    lat = np.asarray(sorted(latencies))
+    span = clock - arrivals[0][0]
+    return {
+        "solves_per_sec": len(lat) / span,
+        "p50_latency_s": float(np.percentile(lat, 50)),
+        "p99_latency_s": float(np.percentile(lat, 99)),
+        "launches": service.stats["launches"] - launches0,
+        "span_s": span,
+    }
+
+
+def run_serve_point(emit: CsvEmitter) -> dict:
+    problems = _instances()
+    arrivals = _arrivals()
+    # The bit-plane tier makes the encode cost (and its caching) real; the
+    # Max-Cut instances have integral couplings so the tier is exact.
+    cfg = dataclasses.replace(
+        default_solver(SERVE_N, SERVE_STEPS, mode="rsa",
+                       num_replicas=SERVE_REPLICAS),
+        coupling_format="bitplane")
+
+    encodes = {"n": 0}
+    real_encode = coupling.encode_couplings
+
+    def counting(*a, **k):
+        encodes["n"] += 1
+        return real_encode(*a, **k)
+
+    coupling.encode_couplings = counting
+    try:
+        batched = SolverService(ServeConfig())
+        _simulate(batched, problems, arrivals, cfg)     # cold: trace + fill
+        cold_encodes = encodes["n"]
+        encodes["n"] = 0
+        warm = _simulate(batched, problems, arrivals, cfg)
+        warm_encodes = encodes["n"]
+
+        sequential = SolverService(ServeConfig(batching=False))
+        _simulate(sequential, problems, arrivals, cfg)  # cold
+        seq = _simulate(sequential, problems, arrivals, cfg)
+    finally:
+        coupling.encode_couplings = real_encode
+
+    speedup = warm["solves_per_sec"] / seq["solves_per_sec"]
+    emit.add(f"serve/N{SERVE_N}/batched",
+             warm["p50_latency_s"] * 1e6,
+             f"solves_per_s={warm['solves_per_sec']:.2f};"
+             f"p99_s={warm['p99_latency_s']:.3f};"
+             f"launches={warm['launches']};warm_encodes={warm_encodes}")
+    emit.add(f"serve/N{SERVE_N}/sequential",
+             seq["p50_latency_s"] * 1e6,
+             f"solves_per_s={seq['solves_per_sec']:.2f};"
+             f"p99_s={seq['p99_latency_s']:.3f};"
+             f"launches={seq['launches']};speedup={speedup:.2f}x")
+    return {
+        "n": SERVE_N,
+        "mode": "rsa",
+        "num_requests": NUM_REQUESTS,
+        "num_instances": NUM_INSTANCES,
+        "steps": SERVE_STEPS,
+        "replicas_per_request": SERVE_REPLICAS,
+        "mean_arrival_gap_s": MEAN_GAP_S,
+        "batched_solves_per_sec": warm["solves_per_sec"],
+        "batched_p50_latency_s": warm["p50_latency_s"],
+        "batched_p99_latency_s": warm["p99_latency_s"],
+        "batched_launches": warm["launches"],
+        "sequential_solves_per_sec": seq["solves_per_sec"],
+        "sequential_p50_latency_s": seq["p50_latency_s"],
+        "sequential_p99_latency_s": seq["p99_latency_s"],
+        "sequential_launches": seq["launches"],
+        "batch_speedup": speedup,
+        "cold_encode_calls": cold_encodes,
+        "warm_encode_calls": warm_encodes,
+        "store_cache": "content-hash LRU; warm pass must re-encode nothing",
+        "workload": "fixed-seed Poisson stream, seed-free requests "
+                    "round-robined over the instance pool; batching stacks "
+                    "same-instance requests into one fused launch",
+    }
+
+
+def main(run_id: str | None = None):
+    from .bench_solver_perf import merge_bench_results
+
+    emit = CsvEmitter()
+    cell = run_serve_point(emit)
+    merge_bench_results({f"N{SERVE_N}_serve": {"rsa": cell}}, run_id=run_id)
+    return cell
+
+
+if __name__ == "__main__":
+    import sys
+
+    rid = sys.argv[sys.argv.index("--run-id") + 1] if "--run-id" in sys.argv else None
+    main(run_id=rid)

@@ -133,6 +133,52 @@ def check_bench_history(payload: dict,
                     f"the {max_ratio}x regression gate")
     errors.extend(check_sharded_points(latest))
     errors.extend(check_ingestion_points(latest))
+    errors.extend(check_serve_points(latest))
+    return errors
+
+
+def check_serve_points(latest: dict) -> list[str]:
+    """Schema + policy gates for serving cells (``N*_serve`` keys, written
+    by the ``serve`` suite): the warm pass must have performed exactly zero
+    coupling re-encodes (and the cold pass at least one, so the zero is
+    meaningful — the content-hash store cache actually short-circuited the
+    resolve→encode), and batched throughput must be at least the sequential
+    baseline's *measured in the same run* — the batching claim as an
+    inequality on recorded numbers, load-robust like the fused gate."""
+    errors = []
+    for n_key, modes in sorted(latest.items()):
+        if not n_key.endswith("_serve") or not isinstance(modes, dict):
+            continue
+        for mode, cell in sorted(modes.items()):
+            if not isinstance(cell, dict):
+                continue
+            num = ("batched_solves_per_sec", "sequential_solves_per_sec",
+                   "batched_p50_latency_s", "batched_p99_latency_s",
+                   "sequential_p50_latency_s", "sequential_p99_latency_s")
+            if not all(isinstance(cell.get(k), (int, float)) and cell[k] > 0
+                       for k in num):
+                errors.append(f"{n_key}/{mode}: serve point needs positive "
+                              f"numeric {num}")
+                continue
+            cold = cell.get("cold_encode_calls")
+            warmed = cell.get("warm_encode_calls")
+            if not (isinstance(cold, int) and cold >= 1):
+                errors.append(f"{n_key}/{mode}: cold_encode_calls must be a "
+                              f"positive int (got {cold!r}) — without a cold "
+                              "encode the warm-cache zero proves nothing")
+            if warmed != 0:
+                errors.append(
+                    f"{n_key}/{mode}: warm pass performed "
+                    f"{warmed!r} coupling encodes — cache-hit solves must "
+                    "skip the resolve→encode entirely (expected exactly 0)")
+            if cell["batched_solves_per_sec"] < cell["sequential_solves_per_sec"]:
+                errors.append(
+                    f"{n_key}/{mode}: batched throughput "
+                    f"{cell['batched_solves_per_sec']:.2f} solves/s is below "
+                    f"the sequential baseline's "
+                    f"{cell['sequential_solves_per_sec']:.2f} in the same "
+                    "run — replica-stacking must not lose to one-launch-"
+                    "per-request")
     return errors
 
 
@@ -256,8 +302,8 @@ def main(argv=None) -> None:
         sys.exit(run_check())
 
     from . import (bench_fig14_incremental, bench_fig15_bitplane,
-                   bench_roofline, bench_solver_perf, bench_solver_sharded,
-                   bench_table2_gset, bench_table3_tts)
+                   bench_roofline, bench_serve, bench_solver_perf,
+                   bench_solver_sharded, bench_table2_gset, bench_table3_tts)
 
     print("name,us_per_call,derived")
     suites = [
@@ -269,6 +315,8 @@ def main(argv=None) -> None:
          partial(bench_solver_perf.main, run_id=args.run_id)),
         ("solver_sharded",                              # spin-sharded tier
          partial(bench_solver_sharded.main, run_id=args.run_id)),
+        ("serve",                                       # §Serving throughput
+         partial(bench_serve.main, run_id=args.run_id)),
         ("roofline", bench_roofline.main),             # §Roofline table
     ]
     if args.suite is not None:

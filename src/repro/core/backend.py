@@ -1,0 +1,757 @@
+"""The execution-path registry: every solve driver behind one interface.
+
+The repo grew five ways to advance an Ising trajectory — the reference
+oracle scan (``core.solver``), the fused Pallas sweep over the coupling
+tiers (``kernels.ops``), fused parallel tempering (``core.tempering``), the
+replica-parallel distributed driver (``distributed.solver_dist``), and the
+spin-sharded driver (``distributed.solver_sharded``). Each used to hand-roll
+config resolution, store plumbing, and chunk cadence, and joining the
+resilience / parity contracts meant editing four files. This module is the
+single enumeration point instead:
+
+* :class:`Backend` — the uniform interface. ``prepare`` resolves the
+  coupling tier and builds (or passes through) the stored operands,
+  ``run`` is the monolithic jitted driver, ``runner`` yields the
+  chunk-granular driver the resilient supervisor and the serving layer
+  consume (``init`` / ``run_chunk`` / ``finalize`` — the same chunk bodies
+  the monolithic scans use, so chunked execution is bit-identical).
+* :class:`Capabilities` — what each path can serve (edge-list problems,
+  mesh requirement, prebuilt-store reuse, resume support, tier-fallback
+  eligibility), replacing per-driver special cases in callers.
+* :data:`BACKENDS` + :func:`register` — the registry.
+  ``core.resilience.run_resilient``, the public ``solve`` entry point, the
+  ``serve.SolverService`` front end, and the registry-completeness test
+  (``tests/test_backend_registry.py``) all enumerate it, so a new
+  execution path joins every contract by registering here — not by editing
+  the supervisor, the dispatchers, and the test matrices separately.
+
+Chunk-runner protocol (duck-typed; what ``runner()`` returns):
+``init() -> state``, ``run_chunk(state, k) -> state``, ``unit_len(k)``,
+``best_energy(state) -> float``, ``trace_row(state)``,
+``finalize(state, rows) -> result``, plus attributes ``total_units``,
+``collect_trace``, ``num_replicas``, ``backend``, ``fmt``. The state is a
+pytree of device arrays that round-trips through a checkpoint losslessly,
+and every chunk's RNG is a pure function of ``(seed, chunk index)`` — no
+carried RNG state, which is what makes resume bit-identical.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ising, rng
+from .coupling import (KERNEL_COUPLING_MODES, CouplingStore, resolve_format)
+from .solver import (SolveResult, SolverConfig, _mcmc_config,
+                     reference_init_state, run_reference_chunk)
+from .tempering import (TemperingConfig, TemperingResult,
+                        fused_tempering_round, tempering_round_count)
+
+
+@dataclasses.dataclass(frozen=True)
+class Capabilities:
+    """What an execution path can serve — the registry's contract surface.
+
+    ``edge_list``     dense-J-free (``EdgeList``) problems supported.
+    ``needs_mesh``    requires a device mesh (sharded / distributed).
+    ``supports_store``  accepts a prebuilt ``CouplingStore`` (the
+                      zero-re-encode memoization contract).
+    ``supports_resume`` drivable chunk-by-chunk with bit-identical resume —
+                      membership in the resume-parity matrix is asserted
+                      for every backend with this bit set.
+    ``tier_fallback`` participates in the coupling-tier downgrade ladder
+                      (``coupling_format="auto"`` only).
+    ``fixed_fmt``     the single coupling tier the path serves, or None
+                      when the tier follows ``config.coupling_format``.
+    ``auto``          eligible for ``backend="auto"`` config-type dispatch
+                      (the reference oracle is explicit-only).
+    """
+    edge_list: bool
+    needs_mesh: bool
+    supports_store: bool
+    supports_resume: bool
+    tier_fallback: bool
+    fixed_fmt: Optional[str] = None
+    auto: bool = True
+    summary: str = ""
+
+
+class Backend(abc.ABC):
+    """One registered execution path. Stateless; all methods take the
+    problem/config explicitly so a single instance serves every request."""
+
+    name: str
+    capabilities: Capabilities
+
+    @abc.abstractmethod
+    def config_cls(self) -> type:
+        """The config dataclass this path consumes (lazy import — the
+        distributed config lives outside ``core``)."""
+
+    def check_config(self, config) -> None:
+        cls = self.config_cls()
+        if not isinstance(config, cls):
+            raise TypeError(
+                f"backend {self.name!r} consumes {cls.__name__}, got "
+                f"{type(config).__name__}")
+
+    def prepare(self, problem: ising.IsingProblem, config, *, mesh=None,
+                fmt: Optional[str] = None, store=None):
+        """Resolve the coupling tier and build the stored operands for this
+        path (a ``CouplingStore``, sharded planes, …) — the cacheable,
+        host-side part of a solve. ``fmt`` is a tier override (the fallback
+        ladder); a prebuilt ``store`` passes straight through when no
+        override is in play. Returns None for paths with no separable
+        store (reference consumes the dense J as-is; the distributed store
+        is per-device by construction)."""
+        return None
+
+    @abc.abstractmethod
+    def run(self, problem: ising.IsingProblem, seed, config, *, mesh=None,
+            store=None):
+        """The monolithic jitted driver — one launch for the whole
+        trajectory (the fast path; `runner` is the resumable one)."""
+
+    @abc.abstractmethod
+    def runner(self, problem: ising.IsingProblem, seed, config, *,
+               mesh=None, chunk_steps: int = 256, fmt: Optional[str] = None,
+               store=None):
+        """The chunk-granular driver (see the module docstring for the
+        protocol) — bit-identical to ``run`` under any chunking."""
+
+
+# --------------------------------------------------------------------------
+# The registry.
+
+BACKENDS: dict[str, Backend] = {}
+
+
+def register(backend: Backend) -> Backend:
+    """Add an execution path to the registry (latest registration wins —
+    deliberate, so tests can shadow a backend). Registration is what joins
+    the resilience, parity, and serving contracts."""
+    BACKENDS[backend.name] = backend
+    return backend
+
+
+def backend_names() -> tuple:
+    return tuple(sorted(BACKENDS))
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}: registered backends are "
+            f"{backend_names()}; 'auto' resolves one from the config type"
+        ) from None
+
+
+def resolve_backend(config, backend: str = "auto", mesh=None) -> str:
+    """Registry-driven ``backend="auto"`` resolution: match the config type
+    against each registered path's ``config_cls`` and prefer the
+    mesh-matching candidate — ``TemperingConfig`` → tempering,
+    ``DistSolverConfig`` → distributed, ``SolverConfig`` → sharded when a
+    mesh is supplied, else fused. Explicit names are validated against the
+    registry."""
+    if backend != "auto":
+        get_backend(backend)
+        return backend
+    cands = [b for name, b in sorted(BACKENDS.items())
+             if b.capabilities.auto and isinstance(config, b.config_cls())]
+    if not cands:
+        raise TypeError(f"unrecognized config type {type(config).__name__}")
+    return min(cands, key=lambda b: b.capabilities.needs_mesh
+               != (mesh is not None)).name
+
+
+def current_fmt(problem: ising.IsingProblem, config, backend: str,
+                fmt: Optional[str]) -> str:
+    """The coupling tier a run attempt will use: the ladder override if one
+    is active, the backend's fixed tier if it has one, else the resolved
+    ``config.coupling_format``."""
+    if fmt is not None:
+        return fmt
+    fixed = get_backend(backend).capabilities.fixed_fmt
+    if fixed is not None:
+        return fixed
+    return resolve_format(getattr(config, "coupling_format", "auto"),
+                          problem.coupling_source, problem.num_spins)
+
+
+def fallback_enabled(config, backend: str) -> bool:
+    """Whether the tier-downgrade ladder applies: the backend opts in via
+    its capabilities AND the config left the tier on "auto"."""
+    return (get_backend(backend).capabilities.tier_fallback
+            and getattr(config, "coupling_format", None) == "auto")
+
+
+def capability_rows() -> list:
+    """(name, Capabilities) rows in name order — the DESIGN.md table and
+    the registry-completeness test read the same source of truth."""
+    return [(name, BACKENDS[name].capabilities) for name in backend_names()]
+
+
+# --------------------------------------------------------------------------
+# Per-backend chunk runners. Each runner drives the SAME chunk body the
+# monolithic driver scans over, one host-visible unit at a time; the state it
+# carries across units is a pytree of device arrays that round-trips through
+# the checkpoint losslessly.
+
+@partial(jax.jit, static_argnames=("config", "interpret"))
+def _fused_init(problem, seed, config: SolverConfig, store: CouplingStore,
+                interpret: bool):
+    from ..kernels import ops as _ops
+    base = jax.random.fold_in(jax.random.key(0), seed)
+    return _ops.fused_init_state(problem, base, config.num_replicas,
+                                 interpret=interpret, planes=store.planes)
+
+
+@partial(jax.jit, static_argnames=("config", "clen", "chunk_len", "gather",
+                                   "interpret"))
+def _fused_chunk(state, seed, c, store: CouplingStore, *,
+                 config: SolverConfig, clen: int, chunk_len: int,
+                 gather: str, interpret: bool):
+    from ..kernels import ops as _ops
+    base = jax.random.fold_in(jax.random.key(0), seed)
+    return _ops.anneal_chunk_step(store, state, base, c, clen=clen,
+                                  chunk_len=chunk_len, config=config,
+                                  gather=gather, block_r=8,
+                                  interpret=interpret)
+
+
+class FusedRunner:
+    """``solve(backend="fused")`` / ``fused_anneal``, chunk at a time."""
+
+    backend = "fused"
+
+    def __init__(self, problem, seed, config: SolverConfig,
+                 store: CouplingStore, chunk_steps: int):
+        from ..kernels import ops as _ops
+        self.problem = problem
+        self.config = config
+        self.store = store
+        self.fmt = store.fmt
+        self.seed = jnp.asarray(seed, jnp.uint32)
+        self.interpret = _ops.auto_interpret(None)
+        self.gather = _ops.anneal_gather(store, "dynamic", problem.num_spins)
+        self.chunk_len, self.num_chunks, self.rem_steps = (
+            _ops.anneal_chunk_plan(config, chunk_steps))
+        self.total_units = self.num_chunks + (1 if self.rem_steps else 0)
+        self.collect_trace = bool(config.trace_every)
+        self.num_replicas = config.num_replicas
+
+    def unit_len(self, k: int) -> int:
+        if self.rem_steps and k == self.num_chunks:
+            return self.rem_steps
+        return self.chunk_len
+
+    def init(self):
+        return _fused_init(self.problem, self.seed, self.config, self.store,
+                           self.interpret)
+
+    def run_chunk(self, state, k: int):
+        return _fused_chunk(state, self.seed, jnp.int32(k), self.store,
+                            config=self.config, clen=self.unit_len(k),
+                            chunk_len=self.chunk_len, gather=self.gather,
+                            interpret=self.interpret)
+
+    def best_energy(self, state) -> float:
+        return float(jnp.min(state[3])) + float(self.problem.offset)
+
+    def trace_row(self, state):
+        return state[3]
+
+    def finalize(self, state, rows) -> SolveResult:
+        u, s, e, be, bs, nf = state
+        off = self.problem.offset
+        r = self.num_replicas
+        if self.collect_trace and rows:
+            trace = (jnp.asarray(np.stack(rows)) + off).astype(jnp.float32)
+        else:
+            trace = jnp.zeros((0, r), jnp.float32)
+        return SolveResult(best_energy=be + off, best_spins=bs.astype(jnp.int8),
+                           final_energy=e + off, num_flips=nf,
+                           trace_energy=trace)
+
+
+@partial(jax.jit, static_argnames=("config",))
+def _reference_init(problem, seed, config: SolverConfig):
+    states, _ = reference_init_state(problem, seed, config)
+    return states
+
+
+@partial(jax.jit, static_argnames=("config", "clen", "chunk_len"))
+def _reference_chunk(problem, states, seed, c, *, config: SolverConfig,
+                     clen: int, chunk_len: int):
+    # Replica keys are a pure function of the seed — recomputed per chunk so
+    # the snapshot carries chain state only, never RNG state.
+    base = jax.random.fold_in(jax.random.key(0), seed)
+    keys = jax.vmap(lambda i: rng.stream(base, rng.Salt.REPLICA, i))(
+        jnp.arange(config.num_replicas))
+    return run_reference_chunk(problem, states, keys, c, clen=clen,
+                               chunk_len=chunk_len, config=config,
+                               mc=_mcmc_config(config))
+
+
+class ReferenceRunner:
+    """``solve(backend="reference")``, chunk at a time. Every step is keyed
+    by its absolute index, so *any* chunking composes to the same values as
+    the monolithic loop — traced runs use the trace cadence, untraced runs
+    the supervisor's ``chunk_steps``."""
+
+    backend = "reference"
+    fmt = "dense"
+
+    def __init__(self, problem, seed, config: SolverConfig, chunk_steps: int):
+        from ..kernels import ops as _ops
+        if problem.couplings is None:
+            raise ValueError(
+                "backend='reference' needs the dense J; edge-list "
+                "(dense-J-free) problems are served by backend='fused'")
+        self.problem = problem
+        self.config = config
+        self.seed = jnp.asarray(seed, jnp.uint32)
+        self.chunk_len, self.num_chunks, self.rem_steps = (
+            _ops.anneal_chunk_plan(config, chunk_steps))
+        self.total_units = self.num_chunks + (1 if self.rem_steps else 0)
+        self.collect_trace = bool(config.trace_every)
+        self.num_replicas = config.num_replicas
+
+    def unit_len(self, k: int) -> int:
+        if self.rem_steps and k == self.num_chunks:
+            return self.rem_steps
+        return self.chunk_len
+
+    def init(self):
+        return _reference_init(self.problem, self.seed, self.config)
+
+    def run_chunk(self, states, k: int):
+        return _reference_chunk(self.problem, states, self.seed,
+                                jnp.int32(k), config=self.config,
+                                clen=self.unit_len(k),
+                                chunk_len=self.chunk_len)
+
+    def best_energy(self, states) -> float:
+        return float(jnp.min(states.best_energy)) + float(self.problem.offset)
+
+    def trace_row(self, states):
+        return states.best_energy
+
+    def finalize(self, states, rows) -> SolveResult:
+        off = self.problem.offset
+        r = self.num_replicas
+        if self.collect_trace and rows:
+            trace = jnp.asarray(np.stack(rows)) + off
+        else:
+            trace = jnp.zeros((0, r), jnp.float32)
+        return SolveResult(best_energy=states.best_energy + off,
+                           best_spins=states.best_spins,
+                           final_energy=states.energy + off,
+                           num_flips=states.num_flips,
+                           trace_energy=trace)
+
+
+@partial(jax.jit, static_argnames=("config", "interpret"))
+def _tempering_init(problem, seed, config: TemperingConfig,
+                    store: CouplingStore, interpret: bool):
+    from ..kernels import ops as _ops
+    base = jax.random.fold_in(jax.random.key(0), seed)
+    state = _ops.fused_init_state(problem, base, config.num_replicas,
+                                  interpret=interpret, planes=store.planes)
+    return (state, jnp.int32(0), jnp.int32(0))
+
+
+@partial(jax.jit, static_argnames=("config", "interpret"))
+def _tempering_round(carry, seed, round_idx, store: CouplingStore, *,
+                     config: TemperingConfig, interpret: bool):
+    state, acc, tot = carry
+    base = jax.random.fold_in(jax.random.key(0), seed)
+    return fused_tempering_round(state, acc, tot, base, round_idx, config,
+                                 store, interpret=interpret)
+
+
+class TemperingRunner:
+    """``solve_tempering(backend="fused")``, one swap round per unit. The
+    carried state is ``(kernel 6-tuple, swap-accept, swap-total)`` so the
+    acceptance statistic survives resume too."""
+
+    backend = "tempering"
+
+    def __init__(self, problem, seed, config: TemperingConfig,
+                 store: CouplingStore):
+        from ..kernels import ops as _ops
+        if config.backend != "fused":
+            raise ValueError(
+                "the chunked tempering runner serves the fused backend only "
+                "— the reference chains run one flip per XLA op and have no "
+                "chunked surface to checkpoint at; set "
+                "TemperingConfig(backend='fused')")
+        self.problem = problem
+        self.config = config
+        self.store = store
+        self.fmt = store.fmt
+        self.seed = jnp.asarray(seed, jnp.uint32)
+        self.interpret = _ops.auto_interpret(None)
+        self.total_units = tempering_round_count(config)
+        self.collect_trace = False
+        self.num_replicas = config.num_replicas
+
+    def unit_len(self, k: int) -> int:
+        return self.config.swap_every
+
+    def init(self):
+        return _tempering_init(self.problem, self.seed, self.config,
+                               self.store, self.interpret)
+
+    def run_chunk(self, carry, k: int):
+        return _tempering_round(carry, self.seed, jnp.int32(k), self.store,
+                                config=self.config, interpret=self.interpret)
+
+    def best_energy(self, carry) -> float:
+        return float(jnp.min(carry[0][3])) + float(self.problem.offset)
+
+    def trace_row(self, carry):
+        return carry[0][3]
+
+    def finalize(self, carry, rows) -> TemperingResult:
+        (u, s, e, be, bs, nf), acc, tot = carry
+        off = self.problem.offset
+        return TemperingResult(
+            best_energy=be + off,
+            best_spins=bs.astype(ising.SPIN_DTYPE),
+            final_energy=e + off,
+            swap_acceptance=acc.astype(jnp.float32) / jnp.maximum(tot, 1),
+            num_flips=nf)
+
+
+@partial(jax.jit, static_argnames=("config", "clen", "chunk_len"))
+def _sharded_chunk_inputs(seed, c, *, config: SolverConfig, clen: int,
+                          chunk_len: int):
+    # Replicated per-chunk uniforms + temps — the identical values
+    # sharded_anneal_fn's local_anneal computes (replicated) on every device.
+    r = config.num_replicas
+    base = jax.random.fold_in(jax.random.key(0), seed)
+    steps = c * chunk_len + jnp.arange(clen)
+    temps = jax.vmap(config.schedule)(steps).astype(jnp.float32)
+    temps = jnp.broadcast_to(temps[:, None], (clen, r))
+    uniforms = rng.uniform01(rng.stream(base, rng.Salt.SWEEP, c),
+                             (clen, r, 4))
+    return uniforms, temps
+
+
+@jax.jit
+def _best_merge(be, bs, nf, ce, cs, cf):
+    # ops.fused_sweep_chunk's best-so-far merge, on (possibly sharded) arrays.
+    better = ce < be
+    return (jnp.where(better, ce, be), jnp.where(better[:, None], cs, bs),
+            nf + cf)
+
+
+class ShardedRunner:
+    """``solve_sharded``, chunk at a time: init via ``sharded_init_fn``, the
+    per-chunk sweep via ``sharded_sweep_fn``, the best merge identical to the
+    in-scan one. State leaves keep their spin-axis shardings across the
+    checkpoint round-trip (restore device_puts to the template shardings)."""
+
+    backend = "sharded"
+    fmt = "bitplane_sharded"
+
+    def __init__(self, problem, seed, config: SolverConfig, mesh,
+                 chunk_steps: int):
+        from ..distributed import solver_sharded as _ss
+        from ..kernels import ops as _ops
+        self.problem = problem
+        self.config = config
+        self.mesh = mesh
+        self.seed = jnp.asarray(seed, jnp.uint32)
+        self.planes = _ss.resolve_sharded_planes(problem, config, mesh)
+        n = problem.num_spins
+        self._init_fn = _ss.sharded_init_fn(config, mesh, n)
+        self._sweep_fn = _ss.sharded_sweep_fn(config, mesh, n)
+        self.chunk_len, self.num_chunks, self.rem_steps = (
+            _ops.anneal_chunk_plan(config, chunk_steps))
+        self.total_units = self.num_chunks + (1 if self.rem_steps else 0)
+        self.collect_trace = bool(config.trace_every)
+        self.num_replicas = config.num_replicas
+
+    def unit_len(self, k: int) -> int:
+        if self.rem_steps and k == self.num_chunks:
+            return self.rem_steps
+        return self.chunk_len
+
+    def init(self):
+        from jax.sharding import NamedSharding, PartitionSpec
+        seed_arr = jnp.asarray([self.seed], jnp.uint32)
+        u0, s0, e0 = self._init_fn(self.planes, self.problem.fields, seed_arr)
+        # num_flips replicated over the mesh like e0 — a default-device zeros
+        # would commit the resume template's leaf to one device and clash
+        # with the mesh-committed state in the merge.
+        nf = jax.device_put(np.zeros((self.num_replicas,), np.int32),
+                            NamedSharding(self.mesh, PartitionSpec()))
+        return (u0, s0, e0, e0, s0, nf)
+
+    def run_chunk(self, state, k: int):
+        u, s, e, be, bs, nf = state
+        uniforms, temps = _sharded_chunk_inputs(
+            self.seed, jnp.int32(k), config=self.config,
+            clen=self.unit_len(k), chunk_len=self.chunk_len)
+        u, s, e, ce, cs, cf = self._sweep_fn(self.planes, u, s, e, uniforms,
+                                             temps)
+        be, bs, nf = _best_merge(be, bs, nf, ce, cs, cf)
+        return (u, s, e, be, bs, nf)
+
+    def best_energy(self, state) -> float:
+        return float(jnp.min(state[3])) + float(self.problem.offset)
+
+    def trace_row(self, state):
+        return state[3]
+
+    def finalize(self, state, rows) -> SolveResult:
+        u, s, e, be, bs, nf = state
+        off = self.problem.offset
+        r = self.num_replicas
+        if self.collect_trace and rows:
+            trace = (jnp.asarray(np.stack(rows)) + off).astype(jnp.float32)
+        else:
+            trace = jnp.zeros((0, r), jnp.float32)
+        return SolveResult(best_energy=be + off, best_spins=bs.astype(jnp.int8),
+                           final_energy=e + off, num_flips=nf,
+                           trace_energy=trace)
+
+
+class DistRunner:
+    """``solve_distributed``, chunk at a time via
+    ``solver_dist.dist_resilient_fns`` — same per-device RNG, chunk cadence,
+    and elitist exchange as the monolithic scan. Excluded from the tier
+    ladder (the store choice is per-device by construction)."""
+
+    backend = "distributed"
+
+    def __init__(self, problem, seed, config, mesh):
+        from ..distributed import solver_dist as _sd
+        self.problem = problem
+        self.config = config
+        init_fn, chunk_fn, setup = _sd.dist_resilient_fns(problem, config,
+                                                          mesh)
+        self._init_fn = init_fn
+        self._chunk_fn = chunk_fn
+        self.operands = _sd.dist_operands(problem, seed, setup)
+        self.fmt = setup.store.fmt if setup.store is not None else "dense"
+        self.chunk_len = setup.chunk
+        self.total_units = setup.num_chunks
+        self.collect_trace = True   # the dist trace is always on
+        self.num_replicas = setup.r_total
+
+    def unit_len(self, k: int) -> int:
+        return self.chunk_len
+
+    def init(self):
+        return tuple(self._init_fn(*self.operands))
+
+    def run_chunk(self, state, k: int):
+        c_arr = jnp.asarray([k], jnp.int32)
+        h, seed_arr = self.operands[0], self.operands[1]
+        return tuple(self._chunk_fn(*state, h, seed_arr, c_arr,
+                                    *self.operands[2:]))
+
+    def best_energy(self, state) -> float:
+        return float(jnp.min(state[3])) + float(self.problem.offset)
+
+    def trace_row(self, state):
+        return state[3]
+
+    def finalize(self, state, rows) -> SolveResult:
+        sp, fu, en, be, bs, nf = state
+        off = self.problem.offset
+        r = self.num_replicas
+        trace = ((jnp.asarray(np.stack(rows)) + off) if rows
+                 else jnp.zeros((0, r), jnp.float32))
+        return SolveResult(best_energy=be + off, best_spins=bs,
+                           final_energy=en + off, num_flips=nf,
+                           trace_energy=trace)
+
+
+# --------------------------------------------------------------------------
+# The five registered execution paths.
+
+class ReferenceBackend(Backend):
+    name = "reference"
+    capabilities = Capabilities(
+        edge_list=False, needs_mesh=False, supports_store=False,
+        supports_resume=True, tier_fallback=False, fixed_fmt="dense",
+        auto=False,
+        summary="paper-faithful one-flip-per-XLA-op oracle scan")
+
+    def config_cls(self):
+        return SolverConfig
+
+    def run(self, problem, seed, config, *, mesh=None, store=None):
+        from .solver import _run_jit
+        self.check_config(config)
+        if store is not None:
+            raise ValueError(
+                "a prebuilt CouplingStore serves the fused backend only; "
+                "backend='reference' always consumes the dense J")
+        if problem.couplings is None:
+            raise ValueError(
+                "backend='reference' needs the dense J; edge-list "
+                "(dense-J-free) problems are served by backend='fused' or "
+                "solve_sharded")
+        return _run_jit(problem, jnp.asarray(seed, jnp.uint32), config)
+
+    def runner(self, problem, seed, config, *, mesh=None, chunk_steps=256,
+               fmt=None, store=None):
+        return ReferenceRunner(problem, seed, config, chunk_steps)
+
+
+def _resolve_store(problem, config, *, fmt=None, store=None, caller: str):
+    """The shared store-resolution contract of the fused-family paths: a
+    prebuilt store passes through untouched (unless a tier override ``fmt``
+    forces a rebuild — the fallback ladder must not resurrect the tier that
+    just OOMed), everything else resolves ``config.coupling_format`` and
+    runs the encoder once."""
+    if store is None or fmt is not None:
+        store = CouplingStore.build(problem.coupling_source,
+                                    fmt or config.coupling_format)
+    store.require(KERNEL_COUPLING_MODES, caller)
+    return store
+
+
+class FusedBackend(Backend):
+    name = "fused"
+    capabilities = Capabilities(
+        edge_list=True, needs_mesh=False, supports_store=True,
+        supports_resume=True, tier_fallback=True, fixed_fmt=None,
+        summary="VMEM-resident Pallas sweep over the dense/bitplane/"
+                "bitplane_hbm coupling tiers")
+
+    def config_cls(self):
+        return SolverConfig
+
+    def prepare(self, problem, config, *, mesh=None, fmt=None, store=None):
+        return _resolve_store(problem, config, fmt=fmt, store=store,
+                              caller=f"backend {self.name!r}")
+
+    def run(self, problem, seed, config, *, mesh=None, store=None):
+        from ..kernels import ops as _ops
+        self.check_config(config)
+        return _ops.fused_anneal(problem, seed, config, store=store)
+
+    def runner(self, problem, seed, config, *, mesh=None, chunk_steps=256,
+               fmt=None, store=None):
+        if fmt == "bitplane_sharded":
+            # The last rung of the tier ladder switches a fused solve onto
+            # the spin-sharded driver — trajectory-identical by contract.
+            if mesh is None:
+                raise ValueError("the bitplane_sharded tier needs a mesh")
+            return get_backend("sharded").runner(
+                problem, seed, config, mesh=mesh, chunk_steps=chunk_steps)
+        store = self.prepare(problem, config, fmt=fmt, store=store)
+        return FusedRunner(problem, seed, config, store, chunk_steps)
+
+
+class TemperingBackend(Backend):
+    name = "tempering"
+    capabilities = Capabilities(
+        edge_list=True, needs_mesh=False, supports_store=True,
+        supports_resume=True, tier_fallback=True, fixed_fmt=None,
+        summary="fused parallel tempering (swap rounds over a temperature "
+                "ladder)")
+
+    def config_cls(self):
+        return TemperingConfig
+
+    def prepare(self, problem, config, *, mesh=None, fmt=None, store=None):
+        return _resolve_store(problem, config, fmt=fmt, store=store,
+                              caller=f"backend {self.name!r}")
+
+    def run(self, problem, seed, config, *, mesh=None, store=None):
+        from .tempering import solve_tempering
+        self.check_config(config)
+        return solve_tempering(problem, seed, config, store=store)
+
+    def runner(self, problem, seed, config, *, mesh=None, chunk_steps=256,
+               fmt=None, store=None):
+        store = self.prepare(problem, config, fmt=fmt, store=store)
+        return TemperingRunner(problem, seed, config, store)
+
+
+class ShardedBackend(Backend):
+    name = "sharded"
+    capabilities = Capabilities(
+        edge_list=True, needs_mesh=True, supports_store=False,
+        supports_resume=True, tier_fallback=False,
+        fixed_fmt="bitplane_sharded",
+        summary="spin-row-sharded planes across the mesh (capacity scales "
+                "with aggregate HBM)")
+
+    def config_cls(self):
+        return SolverConfig
+
+    def prepare(self, problem, config, *, mesh=None, fmt=None, store=None):
+        from ..distributed import solver_sharded as _ss
+        if mesh is None:
+            raise ValueError("backend='sharded' needs a mesh")
+        return _ss.resolve_sharded_planes(problem, config, mesh)
+
+    def run(self, problem, seed, config, *, mesh=None, store=None):
+        from ..distributed import solver_sharded as _ss
+        self.check_config(config)
+        if mesh is None:
+            raise ValueError("backend='sharded' needs a mesh")
+        if store is not None:
+            raise ValueError(
+                "backend='sharded' builds per-device plane shards from the "
+                "problem; a prebuilt CouplingStore serves the fused backend "
+                "only")
+        return _ss.solve_sharded(problem, seed, config, mesh)
+
+    def runner(self, problem, seed, config, *, mesh=None, chunk_steps=256,
+               fmt=None, store=None):
+        if mesh is None:
+            raise ValueError("the bitplane_sharded tier needs a mesh")
+        return ShardedRunner(problem, seed, config, mesh, chunk_steps)
+
+
+class DistributedBackend(Backend):
+    name = "distributed"
+    capabilities = Capabilities(
+        edge_list=True, needs_mesh=True, supports_store=False,
+        supports_resume=True, tier_fallback=False, fixed_fmt=None,
+        summary="replica-parallel shard_map driver with elitist exchange "
+                "(J replicated per device)")
+
+    def config_cls(self):
+        from ..distributed.solver_dist import DistSolverConfig
+        return DistSolverConfig
+
+    def run(self, problem, seed, config, *, mesh=None, store=None):
+        from ..distributed.solver_dist import solve_distributed
+        self.check_config(config)
+        if mesh is None:
+            raise ValueError("backend='distributed' needs a mesh")
+        if store is not None:
+            raise ValueError(
+                "backend='distributed' builds its store per device; a "
+                "prebuilt CouplingStore serves the fused backend only")
+        return solve_distributed(problem, seed, config, mesh)
+
+    def runner(self, problem, seed, config, *, mesh=None, chunk_steps=256,
+               fmt=None, store=None):
+        if mesh is None:
+            raise ValueError("backend='distributed' needs a mesh")
+        return DistRunner(problem, seed, config, mesh)
+
+
+register(ReferenceBackend())
+register(FusedBackend())
+register(TemperingBackend())
+register(ShardedBackend())
+register(DistributedBackend())

@@ -2,25 +2,22 @@
 
 Long anneals die — preemption, OOM, a deadline, a ctrl-C — and the paper's
 TTS methodology (§V) only works if a killed trial can either finish later or
-report an honest best-so-far. This module wraps every solve driver
-(``core.solver.solve``, ``core.tempering.solve_tempering``,
-``distributed.solver_dist.solve_distributed``,
-``distributed.solver_sharded.solve_sharded``) in one chunk-granular
-supervisor, :func:`run_resilient`:
+report an honest best-so-far. This module wraps every registered execution
+path (``core.backend.BACKENDS`` — reference, fused, tempering, sharded,
+distributed) in one chunk-granular supervisor, :func:`run_resilient`:
 
-* **Checkpoint/resume, bit-identical.** Every driver already advances its
+* **Checkpoint/resume, bit-identical.** Every backend already advances its
   trajectory in chunks whose RNG is a pure function of ``(seed, chunk
   index)`` (the ``Salt.SWEEP`` streams / absolute-step keys) — no carried
-  RNG state. The supervisor drives the *same* chunk bodies the monolithic
-  scans use (``ops.anneal_chunk_step``, ``solver.run_reference_chunk``,
-  ``tempering.fused_tempering_round``, ``solver_sharded.sharded_sweep_fn``,
-  ``solver_dist.dist_resilient_fns``) one host-visible chunk at a time, and
-  atomically snapshots the full chain state at chunk boundaries
-  (``checkpoint.manager``: temp dir + rename + sha256). A restarted run
-  reconstructs the exact chunk cadence from ``(config, chunk_steps)`` and
-  replays the remaining chunks — the resumed trajectory is **bit-identical**
-  to the uninterrupted one (asserted across every coupling tier by
-  ``tests/test_resilience.py``).
+  RNG state. The supervisor drives each backend's chunk runner
+  (``core.backend.Backend.runner`` — the *same* chunk bodies the monolithic
+  scans use) one host-visible chunk at a time, and atomically snapshots the
+  full chain state at chunk boundaries (``checkpoint.manager``: temp dir +
+  rename + sha256). A restarted run reconstructs the exact chunk cadence
+  from ``(config, chunk_steps)`` and replays the remaining chunks — the
+  resumed trajectory is **bit-identical** to the uninterrupted one
+  (asserted across every coupling tier by ``tests/test_resilience.py`` and
+  for every registered backend by ``tests/test_backend_registry.py``).
 
 * **Corruption containment.** A snapshot that fails its checksum (torn
   write, flipped bit, truncation) raises ``SnapshotCorruptError`` at
@@ -44,8 +41,9 @@ supervisor, :func:`run_resilient`:
   completed work survives the downgrade. Because the tiers are
   trajectory-identical by contract, a downgraded run still produces
   bit-identical results. Downgrades are recorded on the result and in every
-  subsequent snapshot. The distributed driver is excluded (its store is
-  per-device by construction; losing a host is handled by replica
+  subsequent snapshot. Which paths ride the ladder is a registry capability
+  (``Capabilities.tier_fallback``); the distributed driver opts out (its
+  store is per-device by construction; losing a host is handled by replica
   independence, not by re-tiering).
 
 Fault injection for tests rides on :func:`inject_faults` — a context-local
@@ -59,19 +57,15 @@ import contextlib
 import dataclasses
 import hashlib
 import time
-from functools import partial
 from typing import Callable, NamedTuple, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from . import ising, rng
-from .coupling import KERNEL_COUPLING_MODES, CouplingStore, resolve_format
-from .solver import (SolveResult, SolverConfig, _mcmc_config,
-                     reference_init_state, run_reference_chunk)
-from .tempering import (TemperingConfig, TemperingResult,
-                        fused_tempering_round, tempering_round_count)
+from . import ising
+from .backend import (current_fmt as _current_fmt, fallback_enabled
+                      as _fallback_enabled, get_backend, resolve_backend)
+from .coupling import CouplingStore
 from ..checkpoint import manager as ckpt
 from ..checkpoint.manager import SnapshotCorruptError
 
@@ -218,451 +212,6 @@ def run_signature(problem: ising.IsingProblem, seed, config, *, backend: str,
 
 
 # --------------------------------------------------------------------------
-# Per-backend chunk runners. Each runner drives the SAME chunk body the
-# monolithic driver scans over, one host-visible unit at a time; the state it
-# carries across units is a pytree of device arrays that round-trips through
-# the checkpoint losslessly.
-
-@partial(jax.jit, static_argnames=("config", "interpret"))
-def _fused_init(problem, seed, config: SolverConfig, store: CouplingStore,
-                interpret: bool):
-    from ..kernels import ops as _ops
-    base = jax.random.fold_in(jax.random.key(0), seed)
-    return _ops.fused_init_state(problem, base, config.num_replicas,
-                                 interpret=interpret, planes=store.planes)
-
-
-@partial(jax.jit, static_argnames=("config", "clen", "chunk_len", "gather",
-                                   "interpret"))
-def _fused_chunk(state, seed, c, store: CouplingStore, *,
-                 config: SolverConfig, clen: int, chunk_len: int,
-                 gather: str, interpret: bool):
-    from ..kernels import ops as _ops
-    base = jax.random.fold_in(jax.random.key(0), seed)
-    return _ops.anneal_chunk_step(store, state, base, c, clen=clen,
-                                  chunk_len=chunk_len, config=config,
-                                  gather=gather, block_r=8,
-                                  interpret=interpret)
-
-
-class _FusedRunner:
-    """``solve(backend="fused")`` / ``fused_anneal``, chunk at a time."""
-
-    backend = "fused"
-
-    def __init__(self, problem, seed, config: SolverConfig,
-                 store: CouplingStore, chunk_steps: int):
-        from ..kernels import ops as _ops
-        self.problem = problem
-        self.config = config
-        self.store = store
-        self.fmt = store.fmt
-        self.seed = jnp.asarray(seed, jnp.uint32)
-        self.interpret = _ops.auto_interpret(None)
-        self.gather = _ops.anneal_gather(store, "dynamic", problem.num_spins)
-        self.chunk_len, self.num_chunks, self.rem_steps = (
-            _ops.anneal_chunk_plan(config, chunk_steps))
-        self.total_units = self.num_chunks + (1 if self.rem_steps else 0)
-        self.collect_trace = bool(config.trace_every)
-        self.num_replicas = config.num_replicas
-
-    def unit_len(self, k: int) -> int:
-        if self.rem_steps and k == self.num_chunks:
-            return self.rem_steps
-        return self.chunk_len
-
-    def init(self):
-        return _fused_init(self.problem, self.seed, self.config, self.store,
-                           self.interpret)
-
-    def run_chunk(self, state, k: int):
-        return _fused_chunk(state, self.seed, jnp.int32(k), self.store,
-                            config=self.config, clen=self.unit_len(k),
-                            chunk_len=self.chunk_len, gather=self.gather,
-                            interpret=self.interpret)
-
-    def best_energy(self, state) -> float:
-        return float(jnp.min(state[3])) + float(self.problem.offset)
-
-    def trace_row(self, state):
-        return state[3]
-
-    def finalize(self, state, rows) -> SolveResult:
-        u, s, e, be, bs, nf = state
-        off = self.problem.offset
-        r = self.num_replicas
-        if self.collect_trace and rows:
-            trace = (jnp.asarray(np.stack(rows)) + off).astype(jnp.float32)
-        else:
-            trace = jnp.zeros((0, r), jnp.float32)
-        return SolveResult(best_energy=be + off, best_spins=bs.astype(jnp.int8),
-                           final_energy=e + off, num_flips=nf,
-                           trace_energy=trace)
-
-
-@partial(jax.jit, static_argnames=("config",))
-def _reference_init(problem, seed, config: SolverConfig):
-    states, _ = reference_init_state(problem, seed, config)
-    return states
-
-
-@partial(jax.jit, static_argnames=("config", "clen", "chunk_len"))
-def _reference_chunk(problem, states, seed, c, *, config: SolverConfig,
-                     clen: int, chunk_len: int):
-    # Replica keys are a pure function of the seed — recomputed per chunk so
-    # the snapshot carries chain state only, never RNG state.
-    base = jax.random.fold_in(jax.random.key(0), seed)
-    keys = jax.vmap(lambda i: rng.stream(base, rng.Salt.REPLICA, i))(
-        jnp.arange(config.num_replicas))
-    return run_reference_chunk(problem, states, keys, c, clen=clen,
-                               chunk_len=chunk_len, config=config,
-                               mc=_mcmc_config(config))
-
-
-class _ReferenceRunner:
-    """``solve(backend="reference")``, chunk at a time. Every step is keyed
-    by its absolute index, so *any* chunking composes to the same values as
-    the monolithic loop — traced runs use the trace cadence, untraced runs
-    the supervisor's ``chunk_steps``."""
-
-    backend = "reference"
-    fmt = "dense"
-
-    def __init__(self, problem, seed, config: SolverConfig, chunk_steps: int):
-        from ..kernels import ops as _ops
-        if problem.couplings is None:
-            raise ValueError(
-                "backend='reference' needs the dense J; edge-list "
-                "(dense-J-free) problems are served by backend='fused'")
-        self.problem = problem
-        self.config = config
-        self.seed = jnp.asarray(seed, jnp.uint32)
-        self.chunk_len, self.num_chunks, self.rem_steps = (
-            _ops.anneal_chunk_plan(config, chunk_steps))
-        self.total_units = self.num_chunks + (1 if self.rem_steps else 0)
-        self.collect_trace = bool(config.trace_every)
-        self.num_replicas = config.num_replicas
-
-    def unit_len(self, k: int) -> int:
-        if self.rem_steps and k == self.num_chunks:
-            return self.rem_steps
-        return self.chunk_len
-
-    def init(self):
-        return _reference_init(self.problem, self.seed, self.config)
-
-    def run_chunk(self, states, k: int):
-        return _reference_chunk(self.problem, states, self.seed,
-                                jnp.int32(k), config=self.config,
-                                clen=self.unit_len(k),
-                                chunk_len=self.chunk_len)
-
-    def best_energy(self, states) -> float:
-        return float(jnp.min(states.best_energy)) + float(self.problem.offset)
-
-    def trace_row(self, states):
-        return states.best_energy
-
-    def finalize(self, states, rows) -> SolveResult:
-        off = self.problem.offset
-        r = self.num_replicas
-        if self.collect_trace and rows:
-            trace = jnp.asarray(np.stack(rows)) + off
-        else:
-            trace = jnp.zeros((0, r), jnp.float32)
-        return SolveResult(best_energy=states.best_energy + off,
-                           best_spins=states.best_spins,
-                           final_energy=states.energy + off,
-                           num_flips=states.num_flips,
-                           trace_energy=trace)
-
-
-@partial(jax.jit, static_argnames=("config", "interpret"))
-def _tempering_init(problem, seed, config: TemperingConfig,
-                    store: CouplingStore, interpret: bool):
-    from ..kernels import ops as _ops
-    base = jax.random.fold_in(jax.random.key(0), seed)
-    state = _ops.fused_init_state(problem, base, config.num_replicas,
-                                  interpret=interpret, planes=store.planes)
-    return (state, jnp.int32(0), jnp.int32(0))
-
-
-@partial(jax.jit, static_argnames=("config", "interpret"))
-def _tempering_round(carry, seed, round_idx, store: CouplingStore, *,
-                     config: TemperingConfig, interpret: bool):
-    state, acc, tot = carry
-    base = jax.random.fold_in(jax.random.key(0), seed)
-    return fused_tempering_round(state, acc, tot, base, round_idx, config,
-                                 store, interpret=interpret)
-
-
-class _TemperingRunner:
-    """``solve_tempering(backend="fused")``, one swap round per unit. The
-    carried state is ``(kernel 6-tuple, swap-accept, swap-total)`` so the
-    acceptance statistic survives resume too."""
-
-    backend = "tempering"
-
-    def __init__(self, problem, seed, config: TemperingConfig,
-                 store: CouplingStore):
-        from ..kernels import ops as _ops
-        if config.backend != "fused":
-            raise ValueError(
-                "run_resilient serves tempering's fused backend only — the "
-                "reference chains run one flip per XLA op and have no "
-                "chunked surface to checkpoint at; set "
-                "TemperingConfig(backend='fused')")
-        self.problem = problem
-        self.config = config
-        self.store = store
-        self.fmt = store.fmt
-        self.seed = jnp.asarray(seed, jnp.uint32)
-        self.interpret = _ops.auto_interpret(None)
-        self.total_units = tempering_round_count(config)
-        self.collect_trace = False
-        self.num_replicas = config.num_replicas
-
-    def unit_len(self, k: int) -> int:
-        return self.config.swap_every
-
-    def init(self):
-        return _tempering_init(self.problem, self.seed, self.config,
-                               self.store, self.interpret)
-
-    def run_chunk(self, carry, k: int):
-        return _tempering_round(carry, self.seed, jnp.int32(k), self.store,
-                                config=self.config, interpret=self.interpret)
-
-    def best_energy(self, carry) -> float:
-        return float(jnp.min(carry[0][3])) + float(self.problem.offset)
-
-    def trace_row(self, carry):
-        return carry[0][3]
-
-    def finalize(self, carry, rows) -> TemperingResult:
-        (u, s, e, be, bs, nf), acc, tot = carry
-        off = self.problem.offset
-        return TemperingResult(
-            best_energy=be + off,
-            best_spins=bs.astype(ising.SPIN_DTYPE),
-            final_energy=e + off,
-            swap_acceptance=acc.astype(jnp.float32) / jnp.maximum(tot, 1),
-            num_flips=nf)
-
-
-@partial(jax.jit, static_argnames=("config", "clen", "chunk_len"))
-def _sharded_chunk_inputs(seed, c, *, config: SolverConfig, clen: int,
-                          chunk_len: int):
-    # Replicated per-chunk uniforms + temps — the identical values
-    # sharded_anneal_fn's local_anneal computes (replicated) on every device.
-    r = config.num_replicas
-    base = jax.random.fold_in(jax.random.key(0), seed)
-    steps = c * chunk_len + jnp.arange(clen)
-    temps = jax.vmap(config.schedule)(steps).astype(jnp.float32)
-    temps = jnp.broadcast_to(temps[:, None], (clen, r))
-    uniforms = rng.uniform01(rng.stream(base, rng.Salt.SWEEP, c),
-                             (clen, r, 4))
-    return uniforms, temps
-
-
-@jax.jit
-def _best_merge(be, bs, nf, ce, cs, cf):
-    # ops.fused_sweep_chunk's best-so-far merge, on (possibly sharded) arrays.
-    better = ce < be
-    return (jnp.where(better, ce, be), jnp.where(better[:, None], cs, bs),
-            nf + cf)
-
-
-class _ShardedRunner:
-    """``solve_sharded``, chunk at a time: init via ``sharded_init_fn``, the
-    per-chunk sweep via ``sharded_sweep_fn``, the best merge identical to the
-    in-scan one. State leaves keep their spin-axis shardings across the
-    checkpoint round-trip (restore device_puts to the template shardings)."""
-
-    backend = "sharded"
-    fmt = "bitplane_sharded"
-
-    def __init__(self, problem, seed, config: SolverConfig, mesh,
-                 chunk_steps: int):
-        from ..distributed import solver_sharded as _ss
-        from ..kernels import ops as _ops
-        self.problem = problem
-        self.config = config
-        self.mesh = mesh
-        self.seed = jnp.asarray(seed, jnp.uint32)
-        self.planes = _ss.resolve_sharded_planes(problem, config, mesh)
-        n = problem.num_spins
-        self._init_fn = _ss.sharded_init_fn(config, mesh, n)
-        self._sweep_fn = _ss.sharded_sweep_fn(config, mesh, n)
-        self.chunk_len, self.num_chunks, self.rem_steps = (
-            _ops.anneal_chunk_plan(config, chunk_steps))
-        self.total_units = self.num_chunks + (1 if self.rem_steps else 0)
-        self.collect_trace = bool(config.trace_every)
-        self.num_replicas = config.num_replicas
-
-    def unit_len(self, k: int) -> int:
-        if self.rem_steps and k == self.num_chunks:
-            return self.rem_steps
-        return self.chunk_len
-
-    def init(self):
-        from jax.sharding import NamedSharding, PartitionSpec
-        seed_arr = jnp.asarray([self.seed], jnp.uint32)
-        u0, s0, e0 = self._init_fn(self.planes, self.problem.fields, seed_arr)
-        # num_flips replicated over the mesh like e0 — a default-device zeros
-        # would commit the resume template's leaf to one device and clash
-        # with the mesh-committed state in the merge.
-        nf = jax.device_put(np.zeros((self.num_replicas,), np.int32),
-                            NamedSharding(self.mesh, PartitionSpec()))
-        return (u0, s0, e0, e0, s0, nf)
-
-    def run_chunk(self, state, k: int):
-        u, s, e, be, bs, nf = state
-        uniforms, temps = _sharded_chunk_inputs(
-            self.seed, jnp.int32(k), config=self.config,
-            clen=self.unit_len(k), chunk_len=self.chunk_len)
-        u, s, e, ce, cs, cf = self._sweep_fn(self.planes, u, s, e, uniforms,
-                                             temps)
-        be, bs, nf = _best_merge(be, bs, nf, ce, cs, cf)
-        return (u, s, e, be, bs, nf)
-
-    def best_energy(self, state) -> float:
-        return float(jnp.min(state[3])) + float(self.problem.offset)
-
-    def trace_row(self, state):
-        return state[3]
-
-    def finalize(self, state, rows) -> SolveResult:
-        u, s, e, be, bs, nf = state
-        off = self.problem.offset
-        r = self.num_replicas
-        if self.collect_trace and rows:
-            trace = (jnp.asarray(np.stack(rows)) + off).astype(jnp.float32)
-        else:
-            trace = jnp.zeros((0, r), jnp.float32)
-        return SolveResult(best_energy=be + off, best_spins=bs.astype(jnp.int8),
-                           final_energy=e + off, num_flips=nf,
-                           trace_energy=trace)
-
-
-class _DistRunner:
-    """``solve_distributed``, chunk at a time via
-    ``solver_dist.dist_resilient_fns`` — same per-device RNG, chunk cadence,
-    and elitist exchange as the monolithic scan. Excluded from the tier
-    ladder (the store choice is per-device by construction)."""
-
-    backend = "distributed"
-
-    def __init__(self, problem, seed, config, mesh):
-        from ..distributed import solver_dist as _sd
-        self.problem = problem
-        self.config = config
-        init_fn, chunk_fn, setup = _sd.dist_resilient_fns(problem, config,
-                                                          mesh)
-        self._init_fn = init_fn
-        self._chunk_fn = chunk_fn
-        self.operands = _sd.dist_operands(problem, seed, setup)
-        self.fmt = setup.store.fmt if setup.store is not None else "dense"
-        self.chunk_len = setup.chunk
-        self.total_units = setup.num_chunks
-        self.collect_trace = True   # the dist trace is always on
-        self.num_replicas = setup.r_total
-
-    def unit_len(self, k: int) -> int:
-        return self.chunk_len
-
-    def init(self):
-        return tuple(self._init_fn(*self.operands))
-
-    def run_chunk(self, state, k: int):
-        c_arr = jnp.asarray([k], jnp.int32)
-        h, seed_arr = self.operands[0], self.operands[1]
-        return tuple(self._chunk_fn(*state, h, seed_arr, c_arr,
-                                    *self.operands[2:]))
-
-    def best_energy(self, state) -> float:
-        return float(jnp.min(state[3])) + float(self.problem.offset)
-
-    def trace_row(self, state):
-        return state[3]
-
-    def finalize(self, state, rows) -> SolveResult:
-        sp, fu, en, be, bs, nf = state
-        off = self.problem.offset
-        r = self.num_replicas
-        trace = ((jnp.asarray(np.stack(rows)) + off) if rows
-                 else jnp.zeros((0, r), jnp.float32))
-        return SolveResult(best_energy=be + off, best_spins=bs,
-                           final_energy=en + off, num_flips=nf,
-                           trace_energy=trace)
-
-
-# --------------------------------------------------------------------------
-# Backend resolution + runner construction.
-
-def _resolve_backend(config, backend: str, mesh) -> str:
-    if backend != "auto":
-        return backend
-    from ..distributed.solver_dist import DistSolverConfig
-    if isinstance(config, TemperingConfig):
-        return "tempering"
-    if isinstance(config, DistSolverConfig):
-        return "distributed"
-    if isinstance(config, SolverConfig):
-        return "sharded" if mesh is not None else "fused"
-    raise TypeError(f"unrecognized config type {type(config).__name__}")
-
-
-def _build_runner(problem, seed, config, *, backend: str, mesh,
-                  chunk_steps: int, fmt: Optional[str], store):
-    """Build the chunk runner for one tier attempt. ``fmt`` is the tier
-    override (None = as configured); "bitplane_sharded" switches a fused
-    solve onto the spin-sharded driver."""
-    if backend == "reference":
-        return _ReferenceRunner(problem, seed, config, chunk_steps)
-    if backend == "distributed":
-        if mesh is None:
-            raise ValueError("backend='distributed' needs a mesh")
-        return _DistRunner(problem, seed, config, mesh)
-    if backend == "sharded" or (backend == "fused"
-                                and fmt == "bitplane_sharded"):
-        if mesh is None:
-            raise ValueError("the bitplane_sharded tier needs a mesh")
-        return _ShardedRunner(problem, seed, config, mesh, chunk_steps)
-    if backend == "fused":
-        if store is None or fmt is not None:
-            store = CouplingStore.build(problem.coupling_source,
-                                        fmt or config.coupling_format)
-        store.require(KERNEL_COUPLING_MODES, "run_resilient")
-        return _FusedRunner(problem, seed, config, store, chunk_steps)
-    if backend == "tempering":
-        if store is None or fmt is not None:
-            store = CouplingStore.build(problem.coupling_source,
-                                        fmt or config.coupling_format)
-        store.require(KERNEL_COUPLING_MODES, "run_resilient")
-        return _TemperingRunner(problem, seed, config, store)
-    raise ValueError(
-        f"backend must be one of 'auto', 'fused', 'reference', 'tempering', "
-        f"'sharded', 'distributed', got {backend!r}")
-
-
-def _current_fmt(problem, config, backend: str, fmt: Optional[str]) -> str:
-    if fmt is not None:
-        return fmt
-    if backend == "reference":
-        return "dense"
-    if backend == "sharded":
-        return "bitplane_sharded"
-    return resolve_format(getattr(config, "coupling_format", "auto"),
-                          problem.coupling_source, problem.num_spins)
-
-
-def _fallback_enabled(config, backend: str) -> bool:
-    return (backend in ("fused", "tempering")
-            and getattr(config, "coupling_format", None) == "auto")
-
-
-# --------------------------------------------------------------------------
 # Snapshot plumbing.
 
 def _trace_template(runner, chunks: int):
@@ -743,13 +292,15 @@ def run_resilient(problem: ising.IsingProblem, seed, config,
                   keep: int = 3, resume: bool = True,
                   on_event: Optional[Callable] = None,
                   store: Optional[CouplingStore] = None) -> ResilientResult:
-    """Run any solve backend chunk-by-chunk with checkpointing, budgets, and
-    tier fallback — bit-identical to the monolithic driver it wraps.
+    """Run any registered backend chunk-by-chunk with checkpointing,
+    budgets, and tier fallback — bit-identical to the monolithic driver it
+    wraps.
 
-    ``backend="auto"`` dispatches on the config type: ``TemperingConfig`` →
-    fused tempering, ``DistSolverConfig`` → ``solve_distributed`` (needs
-    ``mesh``), ``SolverConfig`` → the fused anneal, or ``solve_sharded``
-    when a ``mesh`` is supplied. ``backend="reference"`` selects the oracle
+    ``backend`` names any ``core.backend.BACKENDS`` entry; ``"auto"``
+    resolves one from the config type (``TemperingConfig`` → fused
+    tempering, ``DistSolverConfig`` → ``solve_distributed`` — needs
+    ``mesh`` — ``SolverConfig`` → the fused anneal, or ``solve_sharded``
+    when a ``mesh`` is supplied). ``backend="reference"`` selects the oracle
     scan engine explicitly. ``run_dir=None`` disables checkpointing (budgets
     and interrupts still work); with a directory, a snapshot is written
     every ``checkpoint_every`` completed chunks (``CheckpointManager``
@@ -765,7 +316,7 @@ def run_resilient(problem: ising.IsingProblem, seed, config,
     "chunk", "snapshot", "snapshot_corrupt", "tier_downgrade", "stop".
     """
     t_start = time.monotonic()
-    backend = _resolve_backend(config, backend, mesh)
+    backend = resolve_backend(config, backend, mesh)
     budget = budget or BudgetConfig()
     emit = on_event or (lambda kind, info: None)
     signature = run_signature(problem, seed, config, backend=backend,
@@ -781,9 +332,9 @@ def run_resilient(problem: ising.IsingProblem, seed, config,
         _fault("store_build",
                fmt=_current_fmt(problem, config, backend, fmt),
                backend=backend)
-        return _build_runner(problem, seed, config, backend=backend,
-                             mesh=mesh, chunk_steps=chunk_steps, fmt=fmt,
-                             store=store)
+        return get_backend(backend).runner(
+            problem, seed, config, mesh=mesh, chunk_steps=chunk_steps,
+            fmt=fmt, store=store)
 
     def downgrade_or_raise(exc, at_chunk: int):
         nonlocal fmt

@@ -145,39 +145,32 @@ _run_jit = partial(jax.jit, static_argnames=("config",))(_run)
 
 
 def solve(problem: ising.IsingProblem, seed, config: SolverConfig,
-          backend: str = "reference", *, store=None) -> SolveResult:
-    """Entry point; the engines underneath are jitted. ``seed`` is a dynamic
-    int32 (host 64-bit seed).
+          backend: str = "reference", *, store=None, mesh=None) -> SolveResult:
+    """Entry point — a thin wrapper over the ``core.backend`` registry.
+    ``seed`` is a dynamic int32 (host 64-bit seed).
 
-    ``backend`` selects the engine: "reference" is the paper-faithful
-    one-flip-per-XLA-op scan (the semantic oracle); "fused" is the production
-    VMEM-resident Pallas sweep (``kernels.ops.fused_anneal``) — same modes,
-    schedule, PWL/uniformized options, and trace shape/dtype/cadence, O(N)
-    per-step work, different (documented) RNG stream layout. Dispatch happens
-    on the host (not under jit) so the fused path can resolve
-    ``config.coupling_format`` and pack bit-planes from the concrete J —
-    for edge-list (dense-J-free) problems via the O(nnz) sparse encoder.
+    ``backend`` names any registered execution path ("reference" is the
+    paper-faithful one-flip-per-XLA-op oracle scan; "fused" the production
+    VMEM-resident Pallas sweep with same modes, schedule, PWL/uniformized
+    options, and trace shape/dtype/cadence, O(N) per-step work, different
+    documented RNG stream layout; "sharded"/"distributed" need ``mesh``;
+    "tempering" consumes a ``TemperingConfig``) or "auto" to resolve one
+    from the config type. Dispatch happens on the host (not under jit) so
+    the fused path can resolve ``config.coupling_format`` and pack
+    bit-planes from the concrete J — for edge-list (dense-J-free) problems
+    via the O(nnz) sparse encoder.
 
     ``store`` takes a prebuilt ``core.coupling.CouplingStore`` so repeated
     solves of one instance (TTS sweeps, restarts) skip the resolve→encode
     entirely; fused backend only (the reference oracle always consumes the
     dense J). Edge-list problems require ``backend="fused"``.
     """
-    if backend == "fused":
-        # Lazy import: kernels.ops imports this module for SolverConfig.
-        from ..kernels import ops as _ops
-        return _ops.fused_anneal(problem, seed, config, store=store)
-    if backend != "reference":
-        raise ValueError(f"backend must be 'reference' or 'fused', got {backend!r}")
-    if store is not None:
-        raise ValueError("a prebuilt CouplingStore serves the fused backend "
-                         "only; backend='reference' always consumes the "
-                         "dense J")
-    if problem.couplings is None:
-        raise ValueError(
-            "backend='reference' needs the dense J; edge-list (dense-J-free) "
-            "problems are served by backend='fused' or solve_sharded")
-    return _run_jit(problem, jnp.asarray(seed, jnp.uint32), config)
+    # Lazy import: backend.py imports this module for the config/chunk fns.
+    from .backend import get_backend, resolve_backend
+    if backend == "auto":
+        backend = resolve_backend(config, backend, mesh)
+    return get_backend(backend).run(problem, seed, config, mesh=mesh,
+                                    store=store)
 
 
 def solve_many(problem: ising.IsingProblem, seeds, config: SolverConfig,

@@ -41,7 +41,11 @@ def build_instance(args):
     if name.startswith("torus"):
         side = int(name[5:])
         return torus_grid(side, side, seed=args.seed)
-    raise SystemExit(f"unknown instance {args.instance}")
+    raise SystemExit(
+        f"unknown instance {args.instance!r}: expected k<N> (complete "
+        "bipolar), er<N> (Erdős–Rényi, 24·N edges), sw<N> (small-world, "
+        "degree 12), or torus<side> (side×side grid) — e.g. k200, er500, "
+        "sw1000, torus32 — or pass a Gset-format file via --gset instead")
 
 
 def main():

@@ -1,0 +1,156 @@
+"""Shape-bucketed request batching for the serving layer.
+
+A jit cache entry is keyed on array shapes + static config, so a service
+facing many tenants wants requests to *collide* on shape:
+
+* **Spin bucketing** — :func:`bucket_spins` rounds N up to a bucket
+  boundary and :func:`pad_problem` embeds the instance into the bucket
+  with isolated zero-coupling, zero-field spins. Padded spins contribute
+  exactly zero energy, so every reported energy is exact for the original
+  instance; trajectories are those of the padded instance (the spin
+  selector sees N_pad sites), which is the documented serving trade — two
+  different 900- and 1000-spin instances now share one compiled program.
+* **Replica stacking** — compatible requests on the *same* problem (same
+  content hash, same config modulo ``num_replicas``) stack into the
+  replica axis of one fused launch: one launch of R_total replicas instead
+  of k launches, with per-request replica spans sliced back out
+  (:class:`StackPlan`). ``bucket_replicas`` pads R_total to a power of two
+  so stacked launches also collide in the jit cache; surplus replicas run
+  and are dropped. Replica streams are keyed by position in the launch, so
+  stacked results depend on batch composition — requests that pin a seed
+  for reproducibility take the vmap lane instead.
+* **vmap fallback** — seed-pinned requests with identical full configs
+  batch via ``solve_many`` (a vmap over seeds): still one launch, and each
+  lane is bit-identical to the request solved alone (asserted by
+  ``tests/test_serve.py``).
+
+:func:`plan_batches` is pure planning — grouping, stacking, and lane
+assignment with no execution — so the policy is unit-testable without
+touching a kernel; ``serve.service.SolverService`` executes the plans.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from ..core import ising
+
+#: Default N buckets: fine-grained where small instances live, then powers
+#: of two out to the HBM-streamed sizes.
+SPIN_BUCKETS = (64, 128, 256, 384, 512, 768, 1024, 1536, 2048, 4096, 8192,
+                16384)
+
+
+def bucket_spins(n: int, buckets: Sequence[int] = SPIN_BUCKETS) -> int:
+    """The smallest bucket boundary >= n (past the table: the next multiple
+    of the last bucket, so arbitrarily large instances still quantize)."""
+    if n <= 0:
+        raise ValueError(f"num_spins must be positive, got {n}")
+    for b in buckets:
+        if n <= b:
+            return b
+    last = buckets[-1]
+    return ((n + last - 1) // last) * last
+
+
+def bucket_replicas(r: int) -> int:
+    """Replica-axis bucket: the next power of two (>= 1)."""
+    if r <= 0:
+        raise ValueError(f"num_replicas must be positive, got {r}")
+    return 1 << (r - 1).bit_length()
+
+
+def pad_problem(problem: ising.IsingProblem,
+                n_pad: int) -> ising.IsingProblem:
+    """Embed the instance into ``n_pad`` spins with isolated zero-coupling,
+    zero-field padding spins — exact energies for the original spins, one
+    shared compiled program per bucket. Edge-list problems stay dense-J-free
+    (only ``num_spins`` grows; the edge set is untouched)."""
+    n = problem.num_spins
+    if n_pad < n:
+        raise ValueError(f"cannot pad N={n} down to {n_pad}")
+    if n_pad == n:
+        return problem
+    fields = np.zeros((n_pad,), np.float32)
+    fields[:n] = np.asarray(problem.fields)
+    if problem.couplings is None:
+        e = problem.edges
+        edges = ising.EdgeList.create(e.rows, e.cols, e.weights,
+                                      num_spins=n_pad)
+        return ising.IsingProblem.create_sparse(edges, fields,
+                                                offset=float(problem.offset))
+    J = np.zeros((n_pad, n_pad), np.float32)
+    J[:n, :n] = np.asarray(problem.couplings)
+    return ising.IsingProblem.create(J, fields, offset=float(problem.offset))
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPlan:
+    """One planned launch. ``kind`` is "stack" (one fused launch, requests
+    side by side on the replica axis; ``spans`` holds each request's
+    ``(offset, num_replicas)``), "vmap" (``solve_many`` over the requests'
+    pinned seeds), or "single" (one request, plain launch)."""
+    kind: str
+    requests: tuple            # the admitted requests, plan order
+    config: object             # the launch SolverConfig
+    spans: Optional[tuple] = None       # stack: ((offset, r), ...) per request
+    launch_replicas: int = 0            # stack: bucketed replica-axis width
+
+
+def _group_key(req) -> tuple:
+    # Stack-compatibility: same problem content + same config modulo the
+    # replica-axis width (which stacking itself determines).
+    return (req.problem_key,
+            dataclasses.replace(req.config, num_replicas=1))
+
+
+def plan_batches(requests: Sequence, *,
+                 max_stack_replicas: int = 256) -> list:
+    """Group admitted requests into launch plans. Within one (problem,
+    config-modulo-replicas) group: seed-pinned requests with identical full
+    configs form vmap lanes (>= 2 lanes; a lone request launches single),
+    seed-free requests stack into the replica axis up to
+    ``max_stack_replicas`` per launch. Plan order preserves request order
+    within each group, and groups are emitted in first-seen order."""
+    groups: dict = {}
+    for req in requests:
+        groups.setdefault(_group_key(req), []).append(req)
+    plans = []
+    for key, reqs in groups.items():
+        pinned = [r for r in reqs if r.seed is not None]
+        free = [r for r in reqs if r.seed is None]
+        by_cfg: dict = {}
+        for r in pinned:
+            by_cfg.setdefault(r.config, []).append(r)
+        for cfg, lane in by_cfg.items():
+            if len(lane) >= 2:
+                plans.append(BatchPlan(kind="vmap", requests=tuple(lane),
+                                       config=cfg))
+            else:
+                plans.append(BatchPlan(kind="single", requests=tuple(lane),
+                                       config=cfg))
+        while free:
+            # Greedy fill up to the stack cap; a lone oversized request
+            # still launches (singly) rather than starving.
+            take = [free.pop(0)]
+            total = take[0].config.num_replicas
+            while free and total + free[0].config.num_replicas <= max_stack_replicas:
+                r = free.pop(0)
+                take.append(r)
+                total += r.config.num_replicas
+            if len(take) == 1:
+                plans.append(BatchPlan(kind="single", requests=tuple(take),
+                                       config=take[0].config))
+                continue
+            spans, off = [], 0
+            for r in take:
+                spans.append((off, r.config.num_replicas))
+                off += r.config.num_replicas
+            width = bucket_replicas(off)
+            cfg = dataclasses.replace(take[0].config, num_replicas=width)
+            plans.append(BatchPlan(kind="stack", requests=tuple(take),
+                                   config=cfg, spans=tuple(spans),
+                                   launch_replicas=width))
+    return plans

@@ -1,0 +1,143 @@
+"""Content-hash-keyed caches for the serving layer.
+
+Two reuse levers dominate repeated solves of one instance (the reuse-aware
+near-memory study in PAPERS.md makes the same point for all-digital Ising
+machines):
+
+* the **coupling store** — the host-side resolve→encode is the expensive
+  per-instance setup (O(N²·B) for dense ingestion, O(nnz) for edge lists);
+  :class:`LRUStoreCache` keys built ``CouplingStore``s on the coupling
+  content hash + resolved tier so a repeat solve performs **zero**
+  re-encodes (the same memoization contract ``solve(store=)`` tests pin,
+  now held service-side), and
+* the **best solution seen** — :class:`WarmStartCache` remembers the best
+  (energy, spins) any request ever reached on a problem, keyed on the full
+  problem content hash; a later request whose target energy is already met
+  is answered from cache without any solver launch.
+
+Keys are *content* hashes, never object identities: ``EdgeList`` problems
+hash via the canonical-COO ``_digest`` (permutation/duplication-invariant —
+pinned by ``tests/test_core_ising.py``), dense problems via the J bytes, so
+two tenants submitting the same instance share cache entries.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from typing import NamedTuple, Optional
+
+import jax
+import numpy as np
+
+from ..core import ising
+from ..core.coupling import CouplingStore, resolve_format
+from ..core.resilience import problem_fingerprint
+
+
+def coupling_digest(problem: ising.IsingProblem) -> str:
+    """Content hash of the couplings alone (the store depends on J, not on
+    fields/offset): the canonical ``EdgeList`` digest for dense-J-free
+    problems, sha256 over the J bytes for dense ones."""
+    if problem.couplings is None:
+        return "edges:" + problem.edges._digest.hex()
+    J = np.ascontiguousarray(jax.device_get(problem.couplings))
+    h = hashlib.sha256()
+    h.update(repr(J.shape).encode())
+    h.update(J.tobytes())
+    return "dense:" + h.hexdigest()
+
+
+def problem_digest(problem: ising.IsingProblem) -> str:
+    """Content hash of the full problem (couplings + fields + offset) — the
+    warm-start cache key; identical to the resilience supervisor's snapshot
+    fingerprint so the two subsystems agree on problem identity."""
+    return problem_fingerprint(problem)
+
+
+class LRUStoreCache:
+    """Bounded LRU of built ``CouplingStore``s keyed on
+    ``(coupling_digest, resolved tier)``. ``get_or_build`` resolves
+    ``config.coupling_format`` first, so "auto" and an explicit matching
+    tier share one entry."""
+
+    def __init__(self, capacity: int = 16):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._entries: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get_or_build(self, problem: ising.IsingProblem,
+                     fmt: str = "auto") -> tuple:
+        """``(store, hit)`` for the problem's couplings at the resolved
+        tier; builds (one encode) and caches on miss, evicting the least
+        recently used entry past capacity."""
+        resolved = resolve_format(fmt, problem.coupling_source,
+                                  problem.num_spins)
+        key = (coupling_digest(problem), resolved)
+        store = self._entries.get(key)
+        if store is not None:
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return store, True
+        self.misses += 1
+        store = CouplingStore.build(problem.coupling_source, resolved)
+        self._entries[key] = store
+        if len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+        return store, False
+
+
+class BestRecord(NamedTuple):
+    energy: float          # ensemble-best energy incl. the problem offset
+    spins: np.ndarray      # (N,) the spins that reached it
+
+
+class WarmStartCache:
+    """Bounded LRU of the best solution ever observed per problem content
+    hash. ``observe`` folds in any ``SolveResult``-shaped result (keeps the
+    minimum); ``lookup`` answers a later request on the same instance."""
+
+    def __init__(self, capacity: int = 256):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._entries: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def observe(self, key: str, result) -> BestRecord:
+        """Fold a finished solve into the cache; returns the (possibly
+        pre-existing) best record for the key."""
+        energies = np.asarray(jax.device_get(result.best_energy)).ravel()
+        spins = np.asarray(jax.device_get(result.best_spins))
+        spins = spins.reshape(-1, spins.shape[-1])
+        i = int(np.argmin(energies))
+        record = BestRecord(float(energies[i]), spins[i])
+        prev = self._entries.get(key)
+        if prev is None or record.energy < prev.energy:
+            self._entries[key] = record
+        else:
+            record = prev
+        self._entries.move_to_end(key)
+        if len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+        return record
+
+    def lookup(self, key: str) -> Optional[BestRecord]:
+        record = self._entries.get(key)
+        if record is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        return record

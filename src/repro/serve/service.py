@@ -1,0 +1,301 @@
+"""The synchronous multi-tenant solver service.
+
+:class:`SolverService` is the front end the ROADMAP's serving item asks
+for, built **only** on the ``core.backend`` registry — it never touches a
+driver directly, so any registered execution path is servable:
+
+* **Admission** (:meth:`SolverService.submit`): a bounded pending queue,
+  instance-size and step-budget caps, and capability checks against the
+  registry (an edge-list problem aimed at a backend without edge-list
+  support is refused at submit, not deep in a kernel). Per-request
+  :class:`~repro.core.resilience.BudgetConfig` budgets ride the same
+  supervisor long solves use — a deadline/step-bounded request runs under
+  ``run_resilient`` and returns an honest best-so-far with its
+  ``stop_reason``.
+* **Caching**: a shared :class:`~repro.serve.cache.LRUStoreCache` makes
+  warm-instance solves perform zero re-encodes, and a
+  :class:`~repro.serve.cache.WarmStartCache` answers a request whose
+  ``target_energy`` was already reached on that instance without any
+  launch at all (``stop_reason="cached_target"``).
+* **Batching** (:meth:`SolverService.drain`): pending requests are
+  shape-bucketed and planned by :func:`~repro.serve.batching.plan_batches`
+  — same-instance requests stack into the replica axis of one fused
+  launch, seed-pinned requests take the bit-identical ``solve_many`` vmap
+  lane, everything else launches singly. ``ServeConfig(batching=False)``
+  forces one launch per request (the sequential baseline the throughput
+  benchmark compares against).
+
+The API is deliberately synchronous — ``submit`` then ``drain``, or the
+one-shot ``solve`` — because the batching/caching policy is what this
+layer owns; an async transport in front of it changes nothing below
+``drain``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import NamedTuple, Optional
+
+import jax
+import numpy as np
+
+from ..core import ising
+from ..core.backend import get_backend
+from ..core.resilience import BudgetConfig, run_resilient
+from ..core.solver import SolveResult, SolverConfig, solve_many
+from .batching import bucket_spins, pad_problem, plan_batches
+from .cache import LRUStoreCache, WarmStartCache, problem_digest
+
+
+class AdmissionError(RuntimeError):
+    """The request was refused at the door (queue full, instance or budget
+    over the service caps, or a capability mismatch) — resubmit later or
+    resize the request; nothing was enqueued."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Service policy knobs."""
+    max_pending: int = 256          # admission queue bound
+    max_spins: int = 16384          # largest admissible instance
+    max_steps: int = 1_000_000      # largest admissible per-request num_steps
+    store_cache_entries: int = 16
+    warm_cache_entries: int = 256
+    pad_spins: bool = True          # bucket N (see batching.SPIN_BUCKETS)
+    batching: bool = True           # False = one launch per request
+    max_stack_replicas: int = 256   # replica-axis cap per stacked launch
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveRequest:
+    """One tenant request. ``seed=None`` lets the service pick (and makes
+    the request stackable); a pinned seed guarantees the result is
+    bit-identical to ``solve(problem, seed, config)`` alone, batched or
+    not. ``budget`` routes the run through the resilient supervisor."""
+    problem: ising.IsingProblem
+    config: SolverConfig
+    seed: Optional[int] = None
+    budget: Optional[BudgetConfig] = None
+    backend: str = "fused"
+
+
+class ServeResult(NamedTuple):
+    request_id: int
+    result: SolveResult        # replica-sliced back to the request's shape
+    stop_reason: str           # "completed" | budget reasons | "cached_target"
+    batched: str               # plan kind: "stack" | "vmap" | "single" | ...
+    store_hit: bool            # coupling store came from cache (0 encodes)
+    warm_hit: bool             # answered/observed via the warm-start cache
+    wall_seconds: float        # admission -> result assembly
+
+
+@dataclasses.dataclass
+class _Admitted:
+    id: int
+    request: SolveRequest
+    problem: ising.IsingProblem     # padded to the spin bucket
+    orig_n: int
+    problem_key: str                # warm-start key (padded problem content)
+    config: SolverConfig
+    seed: Optional[int]
+    t_submit: float
+
+    # plan_batches reads .problem_key / .config / .seed from its items.
+
+
+class SolverService:
+    """See the module docstring. One instance per process; all state
+    (queue, caches, counters) is host-side and single-threaded by design."""
+
+    def __init__(self, config: ServeConfig = ServeConfig(), *, mesh=None):
+        self.config = config
+        self.mesh = mesh
+        self.stores = LRUStoreCache(config.store_cache_entries)
+        self.warm = WarmStartCache(config.warm_cache_entries)
+        self._pending: list = []
+        self._next_id = 0
+        self.stats = {"admitted": 0, "rejected": 0, "completed": 0,
+                      "launches": 0, "stacked_requests": 0,
+                      "vmapped_requests": 0, "single_requests": 0,
+                      "budgeted_requests": 0, "cached_answers": 0}
+
+    # ---------------------------------------------------------------- admit
+
+    def submit(self, request: SolveRequest) -> int:
+        """Admission-check and enqueue; returns the ticket id consumed by
+        :meth:`drain`. Raises :class:`AdmissionError` on refusal."""
+        cfg = self.config
+        if len(self._pending) >= cfg.max_pending:
+            self._reject(f"pending queue is full ({cfg.max_pending})")
+        n = request.problem.num_spins
+        if n > cfg.max_spins:
+            self._reject(f"instance N={n} over the service cap "
+                         f"{cfg.max_spins}")
+        if request.config.num_steps > cfg.max_steps:
+            self._reject(f"num_steps={request.config.num_steps} over the "
+                         f"service cap {cfg.max_steps}; lower it or pass a "
+                         f"BudgetConfig(max_steps=...) under the cap")
+        backend = get_backend(request.backend)   # unknown name raises here
+        caps = backend.capabilities
+        if request.problem.couplings is None and not caps.edge_list:
+            self._reject(f"backend {request.backend!r} cannot serve "
+                         "edge-list (dense-J-free) problems")
+        if caps.needs_mesh and self.mesh is None:
+            self._reject(f"backend {request.backend!r} needs a mesh; "
+                         "construct SolverService(mesh=...)")
+        problem = request.problem
+        if cfg.pad_spins:
+            problem = pad_problem(problem, bucket_spins(n))
+        admitted = _Admitted(
+            id=self._next_id, request=request, problem=problem, orig_n=n,
+            problem_key=problem_digest(problem), config=request.config,
+            seed=request.seed, t_submit=time.perf_counter())
+        self._next_id += 1
+        self._pending.append(admitted)
+        self.stats["admitted"] += 1
+        return admitted.id
+
+    def _reject(self, why: str):
+        self.stats["rejected"] += 1
+        raise AdmissionError(why)
+
+    # ---------------------------------------------------------------- drain
+
+    def drain(self) -> dict:
+        """Execute every pending request and return ``{ticket id:
+        ServeResult}``. Batched per :func:`plan_batches` unless
+        ``ServeConfig(batching=False)``."""
+        pending, self._pending = self._pending, []
+        out: dict = {}
+        plain = []
+        for a in pending:
+            if self._answer_from_warm_cache(a, out):
+                continue
+            if a.request.budget is not None:
+                self._run_budgeted(a, out)
+            elif a.request.backend != "fused" or not self.config.batching:
+                self._run_single(a, out)
+            else:
+                plain.append(a)
+        for plan in plan_batches(
+                plain, max_stack_replicas=self.config.max_stack_replicas):
+            self._run_plan(plan, out)
+        self.stats["completed"] += len(out)
+        return out
+
+    def solve(self, problem: ising.IsingProblem, config: SolverConfig, *,
+              seed: Optional[int] = None,
+              budget: Optional[BudgetConfig] = None,
+              backend: str = "fused") -> ServeResult:
+        """One-shot synchronous request: submit + drain + unwrap."""
+        ticket = self.submit(SolveRequest(problem=problem, config=config,
+                                          seed=seed, budget=budget,
+                                          backend=backend))
+        return self.drain()[ticket]
+
+    # ------------------------------------------------------------- execution
+
+    def _store_for(self, a: _Admitted):
+        """(store, hit) via the LRU cache when the backend takes one."""
+        caps = get_backend(a.request.backend).capabilities
+        if not caps.supports_store:
+            return None, False
+        store, hit = self.stores.get_or_build(
+            a.problem, getattr(a.config, "coupling_format", "auto"))
+        if store.dense is not None and store.dense is not a.problem.couplings:
+            # The cache key is a hash of the exact J bytes, so the cached
+            # store's dense array is byte-identical to this request's —
+            # rebind the problem to it to satisfy the driver's
+            # store-holds-this-problem's-J identity contract.
+            a.problem = dataclasses.replace(a.problem, couplings=store.dense)
+        return store, hit
+
+    def _effective_seed(self, a: _Admitted) -> int:
+        # Service-assigned seeds are the ticket id: deterministic for a
+        # given submission order, distinct across requests.
+        return a.seed if a.seed is not None else a.id
+
+    def _answer_from_warm_cache(self, a: _Admitted, out: dict) -> bool:
+        budget = a.request.budget
+        if budget is None or budget.target_energy is None:
+            return False
+        record = self.warm.lookup(a.problem_key)
+        if record is None or record.energy > budget.target_energy:
+            return False
+        n = a.orig_n
+        result = SolveResult(
+            best_energy=np.asarray([record.energy], np.float32),
+            best_spins=record.spins[None, :n],
+            final_energy=np.asarray([record.energy], np.float32),
+            num_flips=np.zeros((1,), np.int32),
+            trace_energy=np.zeros((0, 1), np.float32))
+        self.stats["cached_answers"] += 1
+        out[a.id] = ServeResult(
+            request_id=a.id, result=result, stop_reason="cached_target",
+            batched="cached", store_hit=True, warm_hit=True,
+            wall_seconds=time.perf_counter() - a.t_submit)
+        return True
+
+    def _run_budgeted(self, a: _Admitted, out: dict):
+        store, hit = self._store_for(a)
+        rr = run_resilient(a.problem, self._effective_seed(a), a.config,
+                           backend=a.request.backend, mesh=self.mesh,
+                           budget=a.request.budget, store=store)
+        self.stats["launches"] += 1
+        self.stats["budgeted_requests"] += 1
+        self._finish(a, rr.result, out, kind="budgeted", store_hit=hit,
+                     stop_reason=rr.stop_reason)
+
+    def _run_single(self, a: _Admitted, out: dict):
+        store, hit = self._store_for(a)
+        backend = get_backend(a.request.backend)
+        result = backend.run(a.problem, self._effective_seed(a), a.config,
+                             mesh=self.mesh, store=store)
+        self.stats["launches"] += 1
+        self.stats["single_requests"] += 1
+        self._finish(a, result, out, kind="single", store_hit=hit)
+
+    def _run_plan(self, plan, out: dict):
+        first = plan.requests[0]
+        if plan.kind == "single":
+            self._run_single(first, out)
+            return
+        store, hit = self._store_for(first)
+        self.stats["launches"] += 1
+        if plan.kind == "vmap":
+            seeds = [a.seed for a in plan.requests]
+            batched = solve_many(first.problem, seeds, plan.config,
+                                 backend="fused", store=store)
+            for i, a in enumerate(plan.requests):
+                lane = jax.tree_util.tree_map(lambda x: x[i], batched)
+                self.stats["vmapped_requests"] += 1
+                self._finish(a, lane, out, kind="vmap", store_hit=hit)
+            return
+        if plan.kind != "stack":
+            raise ValueError(f"unknown plan kind {plan.kind!r}")
+        backend = get_backend(first.request.backend)
+        result = backend.run(first.problem, first.id, plan.config,
+                             mesh=self.mesh, store=store)
+        for a, (off, r) in zip(plan.requests, plan.spans):
+            sliced = SolveResult(
+                best_energy=result.best_energy[off:off + r],
+                best_spins=result.best_spins[off:off + r],
+                final_energy=result.final_energy[off:off + r],
+                num_flips=result.num_flips[off:off + r],
+                trace_energy=result.trace_energy[:, off:off + r])
+            self.stats["stacked_requests"] += 1
+            self._finish(a, sliced, out, kind="stack", store_hit=hit)
+
+    def _finish(self, a: _Admitted, result, out: dict, *, kind: str,
+                store_hit: bool, stop_reason: str = "completed"):
+        record = self.warm.observe(a.problem_key, result)
+        n = a.orig_n
+        if result.best_spins.shape[-1] != n:
+            result = result._replace(
+                best_spins=result.best_spins[..., :n])
+        out[a.id] = ServeResult(
+            request_id=a.id, result=result, stop_reason=stop_reason,
+            batched=kind, store_hit=store_hit,
+            warm_hit=record.energy < float(np.min(np.asarray(
+                jax.device_get(result.best_energy)))),
+            wall_seconds=time.perf_counter() - a.t_submit)

@@ -252,3 +252,56 @@ def test_check_flags_fused_regression():
     # ...and the gate is a gate, not a tripwire for noise: 1.29x passes.
     cell["fused_us_per_step"] = 129.0
     assert check_bench_history(broken) == []
+
+
+def test_committed_history_has_serve_point():
+    """The serving layer is anchored too: the serve cell must exist, its
+    warm pass must have re-encoded nothing while the cold pass encoded at
+    least once, and its batched throughput must hold at or above the
+    sequential baseline recorded in the same run."""
+    payload = _load()
+    results = payload["results"]
+    key = next((k for k in results if k.endswith("_serve")), None)
+    assert key is not None, sorted(results)
+    cell = results[key]["rsa"]
+    assert cell["warm_encode_calls"] == 0
+    assert cell["cold_encode_calls"] >= 1
+    assert cell["batched_solves_per_sec"] >= cell["sequential_solves_per_sec"]
+    assert cell["batched_launches"] < cell["sequential_launches"]
+    assert cell["batched_p99_latency_s"] > 0
+
+
+def test_check_flags_broken_serve_points():
+    """--check knows the serve schema: a warm pass that re-encodes, a cold
+    pass that never encoded (a vacuous zero), batched throughput under the
+    sequential baseline, and missing columns all fail the gate."""
+    from benchmarks.run import check_serve_points
+
+    good = {
+        "N48_serve": {"rsa": {
+            "batched_solves_per_sec": 300.0,
+            "sequential_solves_per_sec": 200.0,
+            "batched_p50_latency_s": 0.03, "batched_p99_latency_s": 0.04,
+            "sequential_p50_latency_s": 0.04,
+            "sequential_p99_latency_s": 0.05,
+            "cold_encode_calls": 3, "warm_encode_calls": 0}},
+    }
+    assert check_serve_points(good) == []
+    leaky = copy.deepcopy(good)
+    leaky["N48_serve"]["rsa"]["warm_encode_calls"] = 2
+    assert any("skip the resolve" in e for e in check_serve_points(leaky))
+    vacuous = copy.deepcopy(good)
+    vacuous["N48_serve"]["rsa"]["cold_encode_calls"] = 0
+    assert any("proves nothing" in e for e in check_serve_points(vacuous))
+    slow = copy.deepcopy(good)
+    slow["N48_serve"]["rsa"]["batched_solves_per_sec"] = 150.0
+    assert any("must not lose" in e for e in check_serve_points(slow))
+    incomplete = {"N48_serve": {"rsa": {"batched_solves_per_sec": 1.0}}}
+    assert any("needs positive numeric" in e
+               for e in check_serve_points(incomplete))
+    # ...and the full checker routes through the same validation.
+    payload = _load()
+    broken = copy.deepcopy(payload)
+    broken["history"][-1]["results"].update(copy.deepcopy(leaky))
+    broken["results"] = broken["history"][-1]["results"]
+    assert any("skip the resolve" in e for e in check_bench_history(broken))

@@ -149,3 +149,32 @@ def test_edge_list_rejects_bad_weights_naming_edge():
     with pytest.raises(ValueError,
                        match=r"integer weights.*edge #2 \(2, 3\)"):
         ising.EdgeList.create(rows, cols, w, 4)
+
+
+def test_edge_list_content_hash_is_canonicalization_stable():
+    """The content hash the serving caches key on (``_digest`` / ``__hash__``
+    / ``__eq__``) is a function of the canonical edge set, not the input
+    order or encoding: a permuted triple, flipped (j, i) entries, and a
+    weight split across duplicate entries (duplicates sum) all canonicalize
+    to the same EdgeList and hash identically — while any real content
+    change (a weight, the spin count) changes the hash."""
+    rows = np.array([0, 1, 2, 0])
+    cols = np.array([1, 2, 3, 2])
+    w = np.array([2, -3, 4, 6])
+    a = ising.EdgeList.create(rows, cols, w, 8)
+
+    perm = np.array([3, 1, 0, 2])
+    b = ising.EdgeList.create(rows[perm], cols[perm], w[perm], 8)
+    flipped = ising.EdgeList.create(cols, rows, w, 8)  # (j, i) = same edges
+    split = ising.EdgeList.create(                     # (2, 3): 4 = 1 + 3
+        np.array([0, 1, 2, 0, 2]), np.array([1, 2, 3, 2, 3]),
+        np.array([2, -3, 1, 6, 3]), 8)
+    for other in (b, flipped, split):
+        assert other == a
+        assert hash(other) == hash(a)
+        assert other._digest == a._digest
+
+    reweighted = ising.EdgeList.create(rows, cols, np.array([2, -3, 5, 6]), 8)
+    wider = ising.EdgeList.create(rows, cols, w, 9)
+    assert reweighted != a and hash(reweighted) != hash(a)
+    assert wider != a and wider._digest != a._digest

@@ -1,0 +1,337 @@
+"""The serving layer's contracts (DESIGN.md §Serving layer).
+
+The load-bearing claims, each pinned here:
+
+* **Exactness under padding** — spin-bucketed launches report energies
+  identical to the unpadded instance's (padding spins are isolated and
+  zero-field, so they contribute exactly zero).
+* **Bit-identity of the vmap lane** — a seed-pinned request served in a
+  ``solve_many`` batch returns exactly what ``solve`` alone returns for
+  that (padded problem, seed, config).
+* **Span slicing of the stack lane** — replica-stacked requests get back
+  their own contiguous replica span, shaped as if they had launched alone.
+* **Cache contracts** — warm-instance solves perform zero re-encodes
+  (store LRU on the coupling content hash), and a target-energy request
+  already satisfied by the warm-start cache is answered without a launch,
+  with spins whose recomputed energy equals the cached energy.
+* **Admission** — over-cap instances/steps, full queues, unknown backends
+  and capability mismatches are refused at submit with actionable errors.
+
+Planning (``plan_batches``) is tested as pure policy, no kernels.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import coupling, ising, schedules
+from repro.core.resilience import BudgetConfig
+from repro.core.solver import SolverConfig, solve
+from repro.serve import (AdmissionError, LRUStoreCache, ServeConfig,
+                         SolveRequest, SolverService, WarmStartCache,
+                         bucket_replicas, bucket_spins, coupling_digest,
+                         pad_problem, plan_batches)
+
+N = 48
+STEPS = 96
+REPLICAS = 2
+
+
+def _problem(seed: int = 0) -> ising.IsingProblem:
+    rng = np.random.default_rng(seed)
+    J = rng.integers(-3, 4, size=(N, N)).astype(np.float32)
+    J = np.round((J + J.T) / 2)
+    np.fill_diagonal(J, 0)
+    h = rng.integers(-2, 3, size=N).astype(np.float32)
+    return ising.IsingProblem.create(J, h)
+
+
+def _cfg(**kw) -> SolverConfig:
+    base = dict(num_steps=STEPS, schedule=schedules.geometric(3.0, 0.1, STEPS),
+                mode="rsa", num_replicas=REPLICAS, trace_every=16)
+    base.update(kw)
+    return SolverConfig(**base)
+
+
+class TestBuckets:
+    def test_spin_buckets_round_up(self):
+        assert bucket_spins(1) == 64
+        assert bucket_spins(64) == 64
+        assert bucket_spins(65) == 128
+        assert bucket_spins(300) == 384
+        assert bucket_spins(16384) == 16384
+        # Past the table: next multiple of the last bucket.
+        assert bucket_spins(16385) == 32768
+        with pytest.raises(ValueError):
+            bucket_spins(0)
+
+    def test_replica_buckets_power_of_two(self):
+        assert [bucket_replicas(r) for r in (1, 2, 3, 5, 8, 9)] == \
+            [1, 2, 4, 8, 8, 16]
+        with pytest.raises(ValueError):
+            bucket_replicas(0)
+
+
+class TestPadding:
+    def test_padded_energies_exact(self):
+        """Isolated zero-coupling zero-field padding spins contribute zero:
+        any spin assignment extended arbitrarily into the pad scores the
+        same energy as the original instance."""
+        prob = _problem(3)
+        padded = pad_problem(prob, 64)
+        assert padded.num_spins == 64
+        rng = np.random.default_rng(0)
+        s = rng.choice(np.asarray([-1.0, 1.0], np.float32), size=N)
+        s_pad = np.concatenate([s, rng.choice(
+            np.asarray([-1.0, 1.0], np.float32), size=64 - N)])
+        np.testing.assert_allclose(float(ising.energy(prob, s)),
+                                   float(ising.energy(padded, s_pad)),
+                                   rtol=1e-6)
+
+    def test_pad_noop_and_shrink_rejected(self):
+        prob = _problem(3)
+        assert pad_problem(prob, N) is prob
+        with pytest.raises(ValueError, match="pad"):
+            pad_problem(prob, N - 1)
+
+    def test_edge_list_padding_stays_dense_j_free(self):
+        prob = _problem(4)
+        rows, cols = np.nonzero(np.triu(np.asarray(prob.couplings), 1))
+        w = np.asarray(prob.couplings)[rows, cols]
+        ep = ising.IsingProblem.create_sparse(
+            ising.EdgeList.create(rows, cols, w, num_spins=N),
+            np.asarray(prob.fields))
+        padded = pad_problem(ep, 64)
+        assert padded.couplings is None and padded.num_spins == 64
+        assert padded.edges.nnz == ep.edges.nnz
+
+
+class TestPlanBatches:
+    @dataclasses.dataclass
+    class Req:
+        problem_key: str
+        config: SolverConfig
+        seed: object = None
+
+    def test_seed_free_same_instance_stacks(self):
+        cfg = _cfg()
+        reqs = [self.Req("p1", cfg) for _ in range(3)]
+        plans = plan_batches(reqs)
+        assert len(plans) == 1 and plans[0].kind == "stack"
+        assert plans[0].spans == ((0, 2), (2, 2), (4, 2))
+        assert plans[0].launch_replicas == 8      # 6 -> power-of-two bucket
+        assert plans[0].config.num_replicas == 8
+
+    def test_pinned_seeds_take_the_vmap_lane(self):
+        cfg = _cfg()
+        reqs = [self.Req("p1", cfg, seed=i) for i in range(3)]
+        plans = plan_batches(reqs)
+        assert len(plans) == 1 and plans[0].kind == "vmap"
+        assert len(plans[0].requests) == 3
+
+    def test_distinct_instances_never_mix(self):
+        cfg = _cfg()
+        reqs = [self.Req("p1", cfg), self.Req("p2", cfg), self.Req("p1", cfg)]
+        plans = plan_batches(reqs)
+        kinds = sorted(p.kind for p in plans)
+        assert kinds == ["single", "stack"]
+        stack = next(p for p in plans if p.kind == "stack")
+        assert all(r.problem_key == "p1" for r in stack.requests)
+
+    def test_config_mismatch_splits_groups(self):
+        reqs = [self.Req("p1", _cfg()), self.Req("p1", _cfg(mode="rwa"))]
+        plans = plan_batches(reqs)
+        assert sorted(p.kind for p in plans) == ["single", "single"]
+
+    def test_stack_cap_splits_launches(self):
+        cfg = _cfg(num_replicas=100)
+        reqs = [self.Req("p1", cfg) for _ in range(3)]
+        plans = plan_batches(reqs, max_stack_replicas=256)
+        # 100+100 fits under 256; the third spills to its own launch.
+        assert sorted(p.kind for p in plans) == ["single", "stack"]
+
+    def test_lone_pinned_seed_launches_single(self):
+        plans = plan_batches([self.Req("p1", _cfg(), seed=5)])
+        assert len(plans) == 1 and plans[0].kind == "single"
+
+
+class TestServiceLanes:
+    def test_vmap_lane_bit_identical_to_solo_solve(self):
+        prob = _problem(1)
+        cfg = _cfg()
+        svc = SolverService()
+        t1 = svc.submit(SolveRequest(prob, cfg, seed=11))
+        t2 = svc.submit(SolveRequest(prob, cfg, seed=12))
+        out = svc.drain()
+        assert out[t1].batched == "vmap" and out[t2].batched == "vmap"
+        padded = pad_problem(prob, bucket_spins(N))
+        for ticket, seed in ((t1, 11), (t2, 12)):
+            ref = solve(padded, seed, cfg, backend="fused")
+            np.testing.assert_array_equal(
+                np.asarray(ref.best_energy),
+                np.asarray(out[ticket].result.best_energy))
+            np.testing.assert_array_equal(
+                np.asarray(ref.best_spins)[:, :N],
+                np.asarray(out[ticket].result.best_spins))
+
+    def test_stack_lane_slices_spans_to_request_shape(self):
+        prob = _problem(1)
+        svc = SolverService()
+        t1 = svc.submit(SolveRequest(prob, _cfg()))
+        t2 = svc.submit(SolveRequest(prob, _cfg(num_replicas=3)))
+        out = svc.drain()
+        assert out[t1].batched == "stack" and out[t2].batched == "stack"
+        assert out[t1].result.best_energy.shape == (REPLICAS,)
+        assert out[t1].result.best_spins.shape == (REPLICAS, N)
+        assert out[t2].result.best_energy.shape == (3,)
+        assert out[t2].result.trace_energy.shape == (STEPS // 16, 3)
+        # One launch served both requests.
+        assert svc.stats["launches"] == 1
+        # Reported energies are exact for the sliced spins.
+        e = ising.energy(prob, np.asarray(out[t2].result.best_spins[0]))
+        assert abs(float(e) - float(out[t2].result.best_energy[0])) < 1e-3
+
+    def test_batching_off_launches_singly_same_results(self):
+        prob = _problem(1)
+        cfg = _cfg()
+        svc = SolverService(ServeConfig(batching=False))
+        t1 = svc.submit(SolveRequest(prob, cfg, seed=11))
+        out = svc.drain()
+        assert out[t1].batched == "single"
+        padded = pad_problem(prob, bucket_spins(N))
+        ref = solve(padded, 11, cfg, backend="fused")
+        np.testing.assert_array_equal(np.asarray(ref.best_energy),
+                                      np.asarray(out[t1].result.best_energy))
+
+
+class TestServiceCaches:
+    def test_warm_instance_solves_reencode_nothing(self, monkeypatch):
+        calls = {"n": 0}
+        real = coupling.encode_couplings
+
+        def counting(*a, **k):
+            calls["n"] += 1
+            return real(*a, **k)
+        monkeypatch.setattr(coupling, "encode_couplings", counting)
+        prob = _problem(2)
+        cfg = _cfg(coupling_format="bitplane")
+        svc = SolverService()
+        svc.solve(prob, cfg, seed=1)
+        assert calls["n"] == 1
+        r = svc.solve(prob, cfg, seed=2)         # same instance, new request
+        assert calls["n"] == 1, "warm-instance solve must not re-encode"
+        assert r.store_hit
+        # A *content-equal* resubmission (fresh arrays) hits too.
+        r = svc.solve(_problem(2), cfg, seed=3)
+        assert calls["n"] == 1 and r.store_hit
+
+    def test_store_cache_lru_eviction(self):
+        cache = LRUStoreCache(capacity=2)
+        p1, p2, p3 = _problem(1), _problem(2), _problem(3)
+        cache.get_or_build(p1, "bitplane")
+        cache.get_or_build(p2, "bitplane")
+        _, hit = cache.get_or_build(p1, "bitplane")
+        assert hit
+        cache.get_or_build(p3, "bitplane")       # evicts p2 (LRU)
+        assert cache.evictions == 1
+        _, hit = cache.get_or_build(p2, "bitplane")
+        assert not hit and len(cache) == 2
+
+    def test_warm_start_cache_answers_met_targets_without_launch(self):
+        prob = _problem(2)
+        svc = SolverService()
+        first = svc.solve(prob, _cfg())
+        best = float(np.min(np.asarray(first.result.best_energy)))
+        launches = svc.stats["launches"]
+        hit = svc.solve(prob, _cfg(),
+                        budget=BudgetConfig(target_energy=best + 1.0))
+        assert hit.stop_reason == "cached_target" and hit.warm_hit
+        assert svc.stats["launches"] == launches, "no launch on a met target"
+        # The cached spins really score the cached energy.
+        e = ising.energy(prob, np.asarray(hit.result.best_spins[0]))
+        assert abs(float(e) - float(hit.result.best_energy[0])) < 1e-3
+        # An unmet (lower) target still launches, through the supervisor.
+        miss = svc.solve(prob, _cfg(),
+                         budget=BudgetConfig(target_energy=best - 1e9))
+        assert miss.batched == "budgeted"
+        assert svc.stats["launches"] == launches + 1
+
+    def test_warm_cache_folds_min_and_bounds_capacity(self):
+        cache = WarmStartCache(capacity=2)
+
+        class R:
+            def __init__(self, e, n=4):
+                self.best_energy = np.asarray([e], np.float32)
+                self.best_spins = np.ones((1, n), np.float32)
+        rec = cache.observe("a", R(-5.0))
+        assert rec.energy == -5.0
+        rec = cache.observe("a", R(-3.0))        # worse: keeps -5
+        assert rec.energy == -5.0
+        cache.observe("b", R(-1.0))
+        cache.observe("c", R(-2.0))              # evicts "a"
+        assert cache.lookup("a") is None and len(cache) == 2
+
+    def test_budgeted_request_reports_supervisor_stop_reason(self):
+        prob = _problem(2)
+        svc = SolverService()
+        r = svc.solve(prob, _cfg(), seed=3,
+                      budget=BudgetConfig(max_steps=STEPS // 2))
+        assert r.batched == "budgeted"
+        assert r.stop_reason == "max_steps"
+
+
+class TestAdmission:
+    def test_over_cap_instance_and_steps_rejected(self):
+        svc = SolverService(ServeConfig(max_spins=16, max_steps=50))
+        with pytest.raises(AdmissionError, match="N=48"):
+            svc.submit(SolveRequest(_problem(), _cfg()))
+        svc2 = SolverService(ServeConfig(max_steps=50))
+        with pytest.raises(AdmissionError, match="num_steps"):
+            svc2.submit(SolveRequest(_problem(), _cfg()))
+
+    def test_queue_bound(self):
+        svc = SolverService(ServeConfig(max_pending=1))
+        svc.submit(SolveRequest(_problem(), _cfg()))
+        with pytest.raises(AdmissionError, match="queue"):
+            svc.submit(SolveRequest(_problem(), _cfg()))
+
+    def test_unknown_backend_and_capability_mismatch(self):
+        svc = SolverService()
+        with pytest.raises(ValueError, match="backend"):
+            svc.submit(SolveRequest(_problem(), _cfg(), backend="nope"))
+        prob = _problem(4)
+        rows, cols = np.nonzero(np.triu(np.asarray(prob.couplings), 1))
+        w = np.asarray(prob.couplings)[rows, cols]
+        ep = ising.IsingProblem.create_sparse(
+            ising.EdgeList.create(rows, cols, w, num_spins=N))
+        with pytest.raises(AdmissionError, match="edge-list"):
+            svc.submit(SolveRequest(ep, _cfg(), backend="reference"))
+        with pytest.raises(AdmissionError, match="mesh"):
+            svc.submit(SolveRequest(_problem(), _cfg(), backend="sharded"))
+        # Nothing half-admitted: the queue is still empty.
+        assert svc.drain() == {}
+
+    def test_rejection_counters(self):
+        svc = SolverService(ServeConfig(max_spins=16))
+        with pytest.raises(AdmissionError):
+            svc.submit(SolveRequest(_problem(), _cfg()))
+        assert svc.stats["rejected"] == 1 and svc.stats["admitted"] == 0
+
+
+class TestDigests:
+    def test_coupling_digest_is_content_not_identity(self):
+        assert coupling_digest(_problem(1)) == coupling_digest(_problem(1))
+        assert coupling_digest(_problem(1)) != coupling_digest(_problem(2))
+
+    def test_edge_list_problems_digest_by_canonical_coo(self):
+        prob = _problem(4)
+        rows, cols = np.nonzero(np.triu(np.asarray(prob.couplings), 1))
+        w = np.asarray(prob.couplings)[rows, cols]
+        a = ising.IsingProblem.create_sparse(
+            ising.EdgeList.create(rows, cols, w, num_spins=N))
+        perm = np.random.default_rng(0).permutation(len(rows))
+        b = ising.IsingProblem.create_sparse(
+            ising.EdgeList.create(rows[perm], cols[perm], w[perm],
+                                  num_spins=N))
+        assert coupling_digest(a) == coupling_digest(b)
+        assert coupling_digest(a).startswith("edges:")

@@ -363,6 +363,36 @@ class TestPrebuiltStoreMemoization:
                                           np.asarray(getattr(plain, name)))
         assert np.isfinite(float(t1.best_energy.min()))
 
+    def test_solve_many_reuses_the_store_across_every_lane(self, monkeypatch):
+        """The batch entry point honors the same contract: one prebuilt
+        store serves every vmapped seed lane with zero re-encodes, and each
+        lane is bit-identical to the same seed solved alone."""
+        from repro.core.solver import solve_many
+
+        calls = {"n": 0}
+        real = coupling.encode_couplings
+
+        def counting(*a, **k):
+            calls["n"] += 1
+            return real(*a, **k)
+        monkeypatch.setattr(coupling, "encode_couplings", counting)
+
+        J = _sym_int(29, 48)
+        prob = ising.IsingProblem.create(J=J)
+        store = coupling.CouplingStore.build(J, "bitplane")
+        assert calls["n"] == 1
+        seeds = (5, 6, 7)
+        batch = solve_many(prob, seeds, _cfg("bitplane"), backend="fused",
+                           store=store)
+        assert calls["n"] == 1, "solve_many(store=) must never re-encode"
+        for i, s in enumerate(seeds):
+            solo = solve(prob, s, _cfg("bitplane"), backend="fused",
+                         store=store)
+            for name in RESULT_FIELDS:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(batch, name))[i],
+                    np.asarray(getattr(solo, name)))
+
     def test_store_contracts(self):
         J = _sym_int(31, 32)
         prob = ising.IsingProblem.create(J=J)
