@@ -1,0 +1,130 @@
+"""§Reuse-aware row fetch: unique-row HBM traffic vs the R-per-step fetch.
+
+N=512 with R=16 replicas on the HBM-streamed bit-plane tier under a cold rwa
+schedule. Two selection regimes, one cell (``N512_row_traffic``):
+
+* **iid** — independently initialized replicas with independent uniform
+  streams: reuse is the birthday rate (~C(R,2)/N per step), so the coalesced
+  counter lands strictly below the R·T uncoalesced traffic but close to it.
+  This is the honest steady-state number for uncorrelated chains.
+* **ensemble** — G=4 groups of bit-identical replicas (the collapsed low-T /
+  restart-batch regime of DESIGN §Reuse-aware row fetch): every group picks
+  one site per step, so the coalesced stream DMAs at most G·T rows instead
+  of R·T. The coalesce=True vs coalesce=False timing comparison runs on this
+  regime *in the same session* — ``benchmarks.run --check`` gates the
+  within-run ratio, load-robust like the fused gate.
+
+Both paths are bit-identical in trajectory (tests/test_row_coalescing.py
+proves it); this file records the traffic counters and the wall-time payoff.
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from .bench_solver_perf import merge_bench_results
+from .common import CsvEmitter, time_call
+
+TRAFFIC_N = 512
+TRAFFIC_REPLICAS = 16
+TRAFFIC_STEPS = 64
+TRAFFIC_GROUPS = 4
+
+
+def _problem(n: int):
+    g = np.random.default_rng(11)
+    J = np.clip(np.rint(g.normal(size=(n, n)) * 1.5), -3, 3)
+    J = np.triu(J, 1)
+    return J + J.T
+
+
+def _grouped_inputs(J, groups, steps, seed=0):
+    """(u0, s0, e0, uniforms) with replicas in a group sharing spins and
+    uniform streams — group structure is the reuse structure."""
+    import jax.numpy as jnp
+
+    g = np.random.default_rng(seed)
+    idx = np.asarray(groups)
+    n_groups = idx.max() + 1
+    s_g = np.where(g.random((n_groups, J.shape[0])) < 0.5, 1.0, -1.0)
+    s0 = s_g[idx].astype(np.float32)
+    u0 = (J @ s0.T).T.astype(np.float32)
+    e0 = (-0.5 * np.einsum("rn,rn->r", u0, s0)).astype(np.float32)
+    u_g = g.random((steps, n_groups, 4)).astype(np.float32)
+    return (jnp.asarray(u0), jnp.asarray(s0), jnp.asarray(e0),
+            jnp.asarray(u_g[:, idx, :]))
+
+
+def run_traffic_point(emit: CsvEmitter) -> dict:
+    import jax.numpy as jnp
+
+    from repro.core.bitplane import encode_couplings
+    from repro.kernels.sweep import mcmc_sweep
+
+    n, r, steps = TRAFFIC_N, TRAFFIC_REPLICAS, TRAFFIC_STEPS
+    J = _problem(n)
+    planes = encode_couplings(J, 2, align_words=128)
+    # Cold rwa schedule: the roulette concentrates, the regime where reuse
+    # matters most.
+    temps = jnp.asarray(np.tile(np.linspace(0.5, 0.05, steps,
+                                            dtype=np.float32)[:, None], (1, r)))
+
+    def sweep(inputs, coalesce):
+        u0, s0, e0, uniforms = inputs
+        return mcmc_sweep(planes, u0, s0, e0, uniforms, temps, mode="rwa",
+                          coupling="bitplane_hbm", block_r=r,
+                          coalesce=coalesce, interpret=True)
+
+    iid = _grouped_inputs(J, list(range(r)), steps)
+    rows_iid = int(np.asarray(sweep(iid, True)[6]).sum())
+    rows_iid_un = int(np.asarray(sweep(iid, False)[6]).sum())
+
+    groups = [i // (r // TRAFFIC_GROUPS) for i in range(r)]
+    ens = _grouped_inputs(J, groups, steps)
+    out_c, secs_c = time_call(sweep, ens, True)
+    out_u, secs_u = time_call(sweep, ens, False)
+    rows_ens = int(np.asarray(out_c[6]).sum())
+    rows_ens_un = int(np.asarray(out_u[6]).sum())
+    np.testing.assert_array_equal(np.asarray(out_c[4]), np.asarray(out_u[4]))
+
+    point = {
+        "n": n,
+        "mode": "rwa",
+        "num_replicas": r,
+        "num_steps": steps,
+        "replica_steps": r * steps,
+        "num_groups": TRAFFIC_GROUPS,
+        "rows_fetched_iid": rows_iid,
+        "rows_fetched_ensemble": rows_ens,
+        "uncoalesced_rows_fetched": rows_ens_un,
+        "coalesced_us_per_step": secs_c / steps * 1e6,
+        "uncoalesced_us_per_step": secs_u / steps * 1e6,
+        "coalesced_speedup": secs_u / secs_c,
+        "regimes": ("iid: independent replicas (birthday-rate reuse); "
+                    "ensemble: 4 groups of identical replicas (collapsed "
+                    "ensemble), also the timed pair"),
+    }
+    assert rows_iid_un == r * steps, rows_iid_un
+    emit.add(f"rowtraffic/N{n}/rwa/iid_R{r}", 0.0,
+             f"rows={rows_iid};uncoalesced={rows_iid_un}")
+    emit.add(f"rowtraffic/N{n}/rwa/ensemble_G{TRAFFIC_GROUPS}",
+             point["coalesced_us_per_step"],
+             f"rows={rows_ens};uncoalesced_rows={rows_ens_un};"
+             f"uncoalesced_us={point['uncoalesced_us_per_step']:.2f};"
+             f"speedup={point['coalesced_speedup']:.2f}x")
+    return point
+
+
+def main(run_id: str | None = None):
+    emit = CsvEmitter()
+    point = run_traffic_point(emit)
+    merge_bench_results({f"N{TRAFFIC_N}_row_traffic": {"rwa": point}},
+                        run_id=run_id)
+    return point
+
+
+if __name__ == "__main__":
+    rid = (sys.argv[sys.argv.index("--run-id") + 1]
+           if "--run-id" in sys.argv else None)
+    main(run_id=rid)

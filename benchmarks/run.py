@@ -134,6 +134,70 @@ def check_bench_history(payload: dict,
     errors.extend(check_sharded_points(latest))
     errors.extend(check_ingestion_points(latest))
     errors.extend(check_serve_points(latest))
+    errors.extend(check_row_traffic_points(latest))
+    return errors
+
+
+def check_row_traffic_points(latest: dict) -> list[str]:
+    """Schema + traffic gates for reuse-aware fetch cells (``N*_row_traffic``
+    keys, written by the ``row_traffic`` suite): the coalesced stream may
+    never fetch more than one row per replica-step; the iid point must land
+    *strictly* under the R·T uncoalesced traffic (birthday-rate reuse
+    actually recovered, not a counter that always reads R·T); the collapsed-
+    ensemble point must fetch at most one row per group-step; and at R ≥ 8
+    the coalesced sweep may not be slower than the uncoalesced one timed in
+    the same run — the within-run ratio, load-robust like the fused gate."""
+    errors = []
+    for n_key, modes in sorted(latest.items()):
+        if not n_key.endswith("_row_traffic") or not isinstance(modes, dict):
+            continue
+        for mode, cell in sorted(modes.items()):
+            if not isinstance(cell, dict):
+                continue
+            num = ("num_replicas", "num_steps", "replica_steps", "num_groups",
+                   "rows_fetched_iid", "rows_fetched_ensemble",
+                   "uncoalesced_rows_fetched", "coalesced_us_per_step",
+                   "uncoalesced_us_per_step")
+            if not all(isinstance(cell.get(k), (int, float)) and cell[k] > 0
+                       for k in num):
+                errors.append(f"{n_key}/{mode}: row-traffic point needs "
+                              f"positive numeric {num}")
+                continue
+            rt = cell["num_replicas"] * cell["num_steps"]
+            if cell["replica_steps"] != rt:
+                errors.append(f"{n_key}/{mode}: replica_steps "
+                              f"{cell['replica_steps']} != num_replicas x "
+                              f"num_steps ({rt})")
+                continue
+            for k in ("rows_fetched_iid", "rows_fetched_ensemble"):
+                if cell[k] > rt:
+                    errors.append(
+                        f"{n_key}/{mode}: {k} {cell[k]} exceeds the "
+                        f"replica-step count {rt} — coalescing can never "
+                        "fetch more than one row per replica per step")
+            if cell["rows_fetched_iid"] >= rt:
+                errors.append(
+                    f"{n_key}/{mode}: iid unique-row fetches "
+                    f"{cell['rows_fetched_iid']} did not land under the "
+                    f"{rt} uncoalesced fetches — no birthday-rate reuse "
+                    "recovered")
+            gt = cell["num_groups"] * cell["num_steps"]
+            if cell["rows_fetched_ensemble"] > gt:
+                errors.append(
+                    f"{n_key}/{mode}: ensemble unique-row fetches "
+                    f"{cell['rows_fetched_ensemble']} exceed one row per "
+                    f"group-step ({gt}) — identical replicas must coalesce "
+                    "to their group count")
+            if (cell["num_replicas"] >= 8
+                    and cell["coalesced_us_per_step"]
+                    > cell["uncoalesced_us_per_step"]):
+                errors.append(
+                    f"{n_key}/{mode}: coalesced "
+                    f"{cell['coalesced_us_per_step']:.1f} µs/step is slower "
+                    f"than the uncoalesced "
+                    f"{cell['uncoalesced_us_per_step']:.1f} in the same run "
+                    f"at R={cell['num_replicas']} — unique-row fetching must "
+                    "not lose to fetch-per-replica where reuse exists")
     return errors
 
 
@@ -302,8 +366,9 @@ def main(argv=None) -> None:
         sys.exit(run_check())
 
     from . import (bench_fig14_incremental, bench_fig15_bitplane,
-                   bench_roofline, bench_serve, bench_solver_perf,
-                   bench_solver_sharded, bench_table2_gset, bench_table3_tts)
+                   bench_roofline, bench_row_traffic, bench_serve,
+                   bench_solver_perf, bench_solver_sharded,
+                   bench_table2_gset, bench_table3_tts)
 
     print("name,us_per_call,derived")
     suites = [
@@ -317,6 +382,8 @@ def main(argv=None) -> None:
          partial(bench_solver_sharded.main, run_id=args.run_id)),
         ("serve",                                       # §Serving throughput
          partial(bench_serve.main, run_id=args.run_id)),
+        ("row_traffic",                                 # §Reuse-aware fetch
+         partial(bench_row_traffic.main, run_id=args.run_id)),
         ("roofline", bench_roofline.main),             # §Roofline table
     ]
     if args.suite is not None:

@@ -27,6 +27,7 @@ import json
 import os
 import re
 import shutil
+import struct
 import threading
 import zipfile
 from typing import Any, Optional
@@ -157,7 +158,14 @@ def restore(directory: str, step: int, like):
     try:
         with np.load(arrays_path) as data:
             arrays = {k: data[k] for k in data.files}
-    except (OSError, ValueError, zipfile.BadZipFile, KeyError) as e:
+    # np.load's failure surface is wide: zero-byte files raise EOFError
+    # ("No data left in file") and mangled zip/npy headers can raise
+    # struct.error — neither is an OSError/ValueError subclass, and a legacy
+    # manifest without arrays_sha256 reaches this load unchecked, so missing
+    # them here would crash the newest-first fallback walk instead of
+    # falling back to the next-older snapshot.
+    except (OSError, ValueError, zipfile.BadZipFile, KeyError, EOFError,
+            struct.error) as e:
         raise SnapshotCorruptError(
             f"unreadable arrays.npz for snapshot step_{step}: {e}") from e
     flat_like = _flatten_with_paths(like)

@@ -502,8 +502,11 @@ class ShardedRunner:
         uniforms, temps = _sharded_chunk_inputs(
             self.seed, jnp.int32(k), config=self.config,
             clen=self.unit_len(k), chunk_len=self.chunk_len)
-        u, s, e, ce, cs, cf = self._sweep_fn(self.planes, u, s, e, uniforms,
-                                             temps)
+        # The row-broadcast counter is dropped: runner state is the 6-tuple
+        # snapshot contract, and a resumed run could not reconstruct the
+        # pre-crash traffic anyway. Trajectories are unaffected.
+        u, s, e, ce, cs, cf, _rf = self._sweep_fn(self.planes, u, s, e,
+                                                  uniforms, temps)
         be, bs, nf = _best_merge(be, bs, nf, ce, cs, cf)
         return (u, s, e, be, bs, nf)
 

@@ -83,19 +83,24 @@ class CouplingFormatSpec:
     packed: bool        #: consumes a packed ``BitPlanes`` (vs a dense (N, N) J)
     align_words: int    #: word-axis padding the encoder applies for this tier
     kernel_mode: bool   #: implemented by the single-device Pallas sweep kernel
+    #: row fetches move data (HBM DMA / mesh psum) rather than read VMEM, so
+    #: duplicate per-step selections are worth coalescing to unique rows
+    #: (``kernels.common.coalesce_rows`` — the reuse-aware fetch plan).
+    coalescable: bool
     summary: str
 
 
 #: The format registry — the single source of truth for which coupling tiers
 #: exist, how their planes are padded, and which execution path serves them.
 FORMATS: dict[str, CouplingFormatSpec] = {spec.name: spec for spec in (
-    CouplingFormatSpec("dense", False, 1, True,
+    CouplingFormatSpec("dense", False, 1, True, False,
                        "(N, N) f32 J resident in VMEM"),
-    CouplingFormatSpec("bitplane", True, 1, True,
+    CouplingFormatSpec("bitplane", True, 1, True, False,
                        "packed signed bit-planes resident in VMEM"),
-    CouplingFormatSpec("bitplane_hbm", True, STREAM_ALIGN_WORDS, True,
+    CouplingFormatSpec("bitplane_hbm", True, STREAM_ALIGN_WORDS, True, True,
                        "planes in HBM, rows streamed through VMEM scratch"),
     CouplingFormatSpec("bitplane_sharded", True, STREAM_ALIGN_WORDS, False,
+                       True,
                        "planes row-sharded across the mesh (spin-parallel)"),
 )}
 
@@ -113,6 +118,11 @@ KERNEL_COUPLING_MODES = tuple(s.name for s in FORMATS.values() if s.kernel_mode)
 #: Kernel modes that consume a packed ``BitPlanes``.
 KERNEL_PLANE_MODES = tuple(
     s.name for s in FORMATS.values() if s.packed and s.kernel_mode)
+
+#: Formats whose per-step row fetch is real data movement (HBM DMA or mesh
+#: psum) and therefore benefits from the reuse-aware unique-row coalescing.
+COALESCABLE_FORMATS = tuple(
+    s.name for s in FORMATS.values() if s.coalescable)
 
 
 def resolve_format(fmt: Optional[str], couplings, n: int) -> str:

@@ -50,6 +50,13 @@ class SolveResult(NamedTuple):
     final_energy: jax.Array    # (R,) incl. problem offset
     num_flips: jax.Array       # (R,)
     trace_energy: jax.Array    # (num_chunks, R) best-so-far at chunk ends, or (0, R)
+    #: (R,) coupling-row fetches attributed per replica, or None on paths
+    #: that don't instrument row traffic (reference oracle, tempering, …).
+    #: Uncoalesced tiers count one fetch per replica per step (sum = R·T);
+    #: the reuse-aware coalesced tiers (``bitplane_hbm``/``bitplane_sharded``)
+    #: fetch each step's unique rows once, so the sum is the actual row
+    #: traffic — strictly below R·T whenever replicas collide on a row.
+    rows_fetched: Optional[jax.Array] = None
 
     @property
     def ensemble_best(self) -> jax.Array:

@@ -28,8 +28,14 @@ class TTSResult:
 
 
 def success_probability(best_energies, threshold: float) -> float:
-    """Fraction of runs reaching the target (energy ≤ threshold)."""
+    """Fraction of runs reaching the target (energy ≤ threshold).
+
+    Zero runs means zero observed successes — 0.0, matching ``estimate``
+    (``np.mean`` of an empty array would be NaN plus a RuntimeWarning).
+    """
     best = np.asarray(best_energies)
+    if best.size == 0:
+        return 0.0
     return float(np.mean(best <= threshold))
 
 

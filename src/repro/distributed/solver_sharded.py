@@ -120,29 +120,54 @@ def _sharded_roulette(p_loc, u_roulette, lane, g0, axes):
 
 def _sharded_sweep(planes_loc: BitPlanes, fields0, spins0, energy0, uniforms,
                    temps, pwl_table, *, mode: str, uniformized: bool, n: int,
-                   lane: int, axes, lo, g0):
+                   lane: int, axes, lo, g0, coalesce: bool = True):
     """T spin-sharded MCMC steps for R replicas — ``kernels.ref.mcmc_sweep``
     statement for statement, with every global op replaced by its collective
     counterpart (gathers → masked ``psum``, row fetch → psum row-tile
     broadcast + shared decode + local column slice). fields0/spins0 are the
     (R, N/D) local slices; energy0 and the uniforms/temps tensors are
-    replicated. Returns the local-slice analogue of the kernel's 6-tuple.
+    replicated. ``coalesce`` (default on) combines duplicate per-step row
+    selections into one psum broadcast per *unique* row. Returns the
+    local-slice analogue of the kernel's 7-tuple — the trailing (R,) int32
+    counts row-tile broadcasts attributed per replica.
     """
     pos, neg = planes_loc.pos, planes_loc.neg            # (B, N/D, W) rows
     r, n_loc = fields0.shape
     col = lo + jnp.arange(n_loc)                         # global column ids
 
     num_planes = pos.shape[0]
+    num_words = pos.shape[2]
+
+    def issue(site_l, is_own):
+        """One (2B, 1, W) stacked pos∥neg row-tile psum broadcast: the owner
+        contributes its packed words, everyone else exact integer zeros."""
+        tiles = jnp.concatenate(
+            [jnp.take(pos, site_l, axis=1),
+             jnp.take(neg, site_l, axis=1)], axis=0)[:, None, :]
+        tiles = jnp.where(is_own, tiles, jnp.uint32(0))  # (2B, 1, W)
+        return jax.lax.psum(tiles, axes)
+
+    def decode(tiles):
+        pr, nr = tiles[:num_planes], tiles[num_planes:]
+        if n_loc % WORD_BITS == 0:
+            w_lo = lo // WORD_BITS                   # lo % 32 == 0 too
+            w_loc = n_loc // WORD_BITS
+            pr = jax.lax.dynamic_slice_in_dim(pr, w_lo, w_loc, axis=2)
+            nr = jax.lax.dynamic_slice_in_dim(nr, w_lo, w_loc, axis=2)
+            return common.decode_bitplane_rows(pr, nr, n_loc)[0]  # (N/D,)
+        rows = common.decode_bitplane_rows(pr, nr, n)[0]  # shared decode
+        return jax.lax.dynamic_slice_in_dim(rows, lo, n_loc, axis=0)
 
     def fetch_rows(j):
-        """(R,) global sites → (R, N/D) decoded local row columns: the owner
-        broadcasts its packed (B, 1, W) row tiles via masked psum (integer
-        zeros add exactly), every device runs the identical
-        ``decode_bitplane_rows`` expansion on its own slice. When the shard
-        boundary is word-aligned (N/D % 32 == 0 — every lane-128 size) the
-        packed words are sliced *before* decoding, keeping the per-device
-        expansion O(B·N/D) instead of O(B·N); bit expansion is per-word, so
-        slice-then-decode equals decode-then-slice value for value.
+        """(R,) global sites → ((R, N/D) decoded local row columns, (R,)
+        int32 broadcast counts): the owner broadcasts its packed (B, 1, W)
+        row tiles via masked psum (integer zeros add exactly), every device
+        runs the identical ``decode_bitplane_rows`` expansion on its own
+        slice. When the shard boundary is word-aligned (N/D % 32 == 0 —
+        every lane-128 size) the packed words are sliced *before* decoding,
+        keeping the per-device expansion O(B·N/D) instead of O(B·N); bit
+        expansion is per-word, so slice-then-decode equals decode-then-slice
+        value for value.
 
         The replica-apply loop is **software-pipelined** — the cross-device
         analogue of the HBM tier's DMA double-buffer: replica r+1's row-tile
@@ -154,39 +179,53 @@ def _sharded_sweep(planes_loc: BitPlanes, fields0, spins0, energy0, uniforms,
         adds are exact, per-replica decode is the per-row expansion the
         batched form ran, and the stack keeps replica order — so the
         trajectory is bit-identical to the un-overlapped formulation (the
-        four-way parity tier asserts it end to end)."""
+        four-way parity tier asserts it end to end).
+
+        With ``coalesce`` the pipeline runs over the step's **unique** sites
+        (``common.coalesce_rows``): slot m's psum is ``lax.cond``-gated on
+        ``m < nu`` — the predicate is replicated (computed from the
+        replicated j), so every device takes the same branch and the
+        collective is jointly skipped, cutting interconnect traffic from R
+        to nu broadcasts — and the decoded unique rows are gathered back to
+        replica order with ``jnp.take``. The decoded row is a function of
+        the site alone, so the broadcast-back is byte-identical to
+        fetch-per-replica and the trajectory cannot move."""
+        if coalesce:
+            nu, usite, uo, fetched = common.coalesce_rows(j)
+            jl = jnp.clip(usite - lo, 0, n_loc - 1)
+            own = (usite >= lo) & (usite < lo + n_loc)
+            zeros = jnp.zeros((2 * num_planes, 1, num_words), jnp.uint32)
+
+            def issue_unique(mi):
+                return jax.lax.cond(mi < nu,
+                                    lambda: issue(jl[mi], own[mi]),
+                                    lambda: zeros)
+
+            in_flight = issue_unique(0)
+            rows = []
+            for mi in range(r):           # static unroll: R is small
+                tiles = in_flight
+                if mi + 1 < r:
+                    in_flight = issue_unique(mi + 1)
+                rows.append(decode(tiles))
+            # Broadcast the unique rows back to every selecting replica
+            # (slots ≥ nu hold zeros and are never referenced by uo < nu).
+            return jnp.take(jnp.stack(rows, axis=0), uo, axis=0), fetched
+
         jl = jnp.clip(j - lo, 0, n_loc - 1)
         own = (j >= lo) & (j < lo + n_loc)
-
-        def issue(ri):
-            tiles = jnp.concatenate(
-                [jnp.take(pos, jl[ri], axis=1),
-                 jnp.take(neg, jl[ri], axis=1)], axis=0)[:, None, :]
-            tiles = jnp.where(own[ri], tiles, jnp.uint32(0))  # (2B, 1, W)
-            return jax.lax.psum(tiles, axes)
-
-        def decode(tiles):
-            pr, nr = tiles[:num_planes], tiles[num_planes:]
-            if n_loc % WORD_BITS == 0:
-                w_lo = lo // WORD_BITS                   # lo % 32 == 0 too
-                w_loc = n_loc // WORD_BITS
-                pr = jax.lax.dynamic_slice_in_dim(pr, w_lo, w_loc, axis=2)
-                nr = jax.lax.dynamic_slice_in_dim(nr, w_lo, w_loc, axis=2)
-                return common.decode_bitplane_rows(pr, nr, n_loc)[0]  # (N/D,)
-            rows = common.decode_bitplane_rows(pr, nr, n)[0]  # shared decode
-            return jax.lax.dynamic_slice_in_dim(rows, lo, n_loc, axis=0)
-
-        in_flight = issue(0)
+        in_flight = issue(jl[0], own[0])
         rows = []
         for ri in range(r):               # static unroll: R is small
             tiles = in_flight
             if ri + 1 < r:
-                in_flight = issue(ri + 1)  # next broadcast under this decode
+                # next broadcast under this decode
+                in_flight = issue(jl[ri + 1], own[ri + 1])
             rows.append(decode(tiles))
-        return jnp.stack(rows, axis=0)                   # (R, N/D)
+        return jnp.stack(rows, axis=0), jnp.ones((r,), jnp.int32)
 
     def body(carry, xs):
-        u, s, e, be, bs, nf = carry
+        u, s, e, be, bs, nf, rf = carry
         u01, temp = xs                                   # (R, 4), (R,)
         sf = s.astype(jnp.float32)
         if mode == "rsa":
@@ -213,7 +252,8 @@ def _sharded_sweep(planes_loc: BitPlanes, fields0, spins0, energy0, uniforms,
             de = _psum_gather(de_all, j, lo, axes)
             s_old = _psum_gather(sf, j, lo, axes)
         acc_f = accept.astype(jnp.float32)
-        rows = fetch_rows(j)                             # (R, N/D)
+        rows, fetched = fetch_rows(j)                    # (R, N/D), (R,)
+        rf = rf + fetched
         u = u - (2.0 * acc_f * s_old)[:, None] * rows
         onehot = (col[None, :] == j[:, None]).astype(sf.dtype)
         s = jnp.where(accept[:, None], (sf * (1 - 2 * onehot)).astype(s.dtype), s)
@@ -222,13 +262,13 @@ def _sharded_sweep(planes_loc: BitPlanes, fields0, spins0, energy0, uniforms,
         better = e < be
         be = jnp.where(better, e, be)
         bs = jnp.where(better[:, None], s, bs)
-        return (u, s, e, be, bs, nf), None
+        return (u, s, e, be, bs, nf, rf), None
 
     init = (fields0.astype(jnp.float32), spins0,
             energy0.astype(jnp.float32), energy0.astype(jnp.float32),
-            spins0, jnp.zeros((r,), jnp.int32))
-    (u, s, e, be, bs, nf), _ = jax.lax.scan(body, init, (uniforms, temps))
-    return u, s, e, be, bs, nf
+            spins0, jnp.zeros((r,), jnp.int32), jnp.zeros((r,), jnp.int32))
+    (u, s, e, be, bs, nf, rf), _ = jax.lax.scan(body, init, (uniforms, temps))
+    return u, s, e, be, bs, nf, rf
 
 
 def _sharded_init(planes_loc: BitPlanes, fields, base, *, r: int, n: int,
@@ -263,10 +303,11 @@ def _sharded_init(planes_loc: BitPlanes, fields, base, *, r: int, n: int,
 
 @functools.lru_cache(maxsize=32)
 def sharded_anneal_fn(config: SolverConfig, mesh: Mesh, n: int, *,
-                      chunk_steps: int = 256):
+                      chunk_steps: int = 256, coalesce: bool = True):
     """Build the jitted shard_map'd anneal for one (config, mesh, N).
 
-    Returns ``fn(planes, fields, seed_arr) → (u, s, e, be, bs, nf, trace)``
+    Returns ``fn(planes, fields, seed_arr) → (u, s, e, be, bs, nf, rows,
+    trace)`` — ``rows`` is the (R,) per-replica row-broadcast count —
     with the planes sharded over the spin axis and ``fields`` (the (N,) h —
     O(N), not the O(N²) store) replicated; replica init runs *inside* the
     shard_map, plane-natively per device (:func:`_sharded_init`), so the
@@ -297,6 +338,7 @@ def sharded_anneal_fn(config: SolverConfig, mesh: Mesh, n: int, *,
         u0, s0, e0 = _sharded_init(planes_loc, fields, base, r=r, n=n,
                                    n_loc=n_loc, lo=lo, axes=axes)
         state = (u0, s0, e0, e0, s0, jnp.zeros((r,), jnp.int32))
+        rows0 = jnp.zeros((r,), jnp.int32)
 
         def chunk(carry, c, clen):
             # Same per-chunk Salt.SWEEP stream, temps tensor, and
@@ -307,28 +349,30 @@ def sharded_anneal_fn(config: SolverConfig, mesh: Mesh, n: int, *,
             temps = jnp.broadcast_to(temps[:, None], (clen, r))
             uniforms = rng.uniform01(
                 rng.stream(base, rng.Salt.SWEEP, c), (clen, r, 4))
-            u, s, e, be, bs, nf = carry
-            u, s, e, ce, cs, cf = _sharded_sweep(
+            (u, s, e, be, bs, nf), rows = carry
+            u, s, e, ce, cs, cf, rf = _sharded_sweep(
                 planes_loc, u, s, e, uniforms, temps, tbl,
                 mode=config.mode, uniformized=config.uniformized, n=n,
-                lane=lane, axes=axes, lo=lo, g0=g0)
+                lane=lane, axes=axes, lo=lo, g0=g0, coalesce=coalesce)
             better = ce < be
             state = (u, s, e, jnp.where(better, ce, be),
                      jnp.where(better[:, None], cs, bs), nf + cf)
-            return state, state[3]  # best-so-far energy at chunk end
+            return (state, rows + rf), state[3]  # best-so-far at chunk end
 
-        state, trace = jax.lax.scan(
-            partial(chunk, clen=chunk_len), state, jnp.arange(num_chunks))
+        (state, rows), trace = jax.lax.scan(
+            partial(chunk, clen=chunk_len), (state, rows0),
+            jnp.arange(num_chunks))
         if rem_steps:
-            state, _ = chunk(state, jnp.int32(num_chunks), clen=rem_steps)
+            (state, rows), _ = chunk((state, rows), jnp.int32(num_chunks),
+                                     clen=rem_steps)
         u, s, e, be, bs, nf = state
-        return u, s, e, be, bs, nf, trace
+        return u, s, e, be, bs, nf, rows, trace
 
     shard = P(None, axes)        # (R, N) / (B, N, W) spin-axis sharding
     return jax.jit(shard_map_compat(
         local_anneal, mesh=mesh,
         in_specs=(P(None, axes, None), P(), P()),
-        out_specs=(shard, shard, P(), P(), shard, P(), P())))
+        out_specs=(shard, shard, P(), P(), shard, P(), P(), P())))
 
 
 @functools.lru_cache(maxsize=32)
@@ -359,7 +403,8 @@ def sharded_init_fn(config: SolverConfig, mesh: Mesh, n: int):
         out_specs=(shard, shard, P())))
 
 
-def sharded_sweep_fn(config: SolverConfig, mesh: Mesh, n: int):
+def sharded_sweep_fn(config: SolverConfig, mesh: Mesh, n: int, *,
+                     coalesce: bool = True):
     """A jitted shard_map around :func:`_sharded_sweep` alone — the per-step
     engine without the one-time init. This is the jaxpr-pin surface: the
     *step* must move data with collectives (psum row-tile broadcast,
@@ -367,7 +412,9 @@ def sharded_sweep_fn(config: SolverConfig, mesh: Mesh, n: int):
     contraction (``dot_general``) — the O(N)/step incremental-update
     contract extended across the mesh. Signature:
     ``fn(planes, u0_loc, s0_loc, e0, uniforms, temps)`` with planes/u/s
-    sharded over the spin axis.
+    sharded over the spin axis; the seventh output is the (R,) replicated
+    row-broadcast counter. ``coalesce=False`` restores the one-psum-per-
+    replica fetch — the uncoalesced oracle the parity tests diff against.
     """
     axes = tuple(mesh.axis_names)
     num_shards = _mesh_size(mesh, axes)
@@ -381,13 +428,13 @@ def sharded_sweep_fn(config: SolverConfig, mesh: Mesh, n: int):
         return _sharded_sweep(
             planes_loc, u0, s0, e0, uniforms, temps, tbl, mode=config.mode,
             uniformized=config.uniformized, n=n, lane=lane, axes=axes,
-            lo=idx * n_loc, g0=idx * g_loc)
+            lo=idx * n_loc, g0=idx * g_loc, coalesce=coalesce)
 
     shard = P(None, axes)
     return jax.jit(shard_map_compat(
         local_sweep, mesh=mesh,
         in_specs=(P(None, axes, None), shard, shard, P(), P(), P()),
-        out_specs=(shard, shard, P(), P(), shard, P())))
+        out_specs=(shard, shard, P(), P(), shard, P(), P())))
 
 
 def shard_planes_from_edges(edges: ising.EdgeList, mesh: Mesh,
@@ -472,7 +519,8 @@ def resolve_sharded_planes(problem, config: SolverConfig, mesh: Mesh, *,
 def solve_sharded(problem, seed, config: SolverConfig, mesh: Mesh, *,
                   chunk_steps: int = 256,
                   coupling: Optional[BitPlanes] = None,
-                  num_planes: Optional[int] = None) -> SolveResult:
+                  num_planes: Optional[int] = None,
+                  coalesce: bool = True) -> SolveResult:
     """Anneal with the coupling planes row-sharded across ``mesh``.
 
     Trajectory-identical to ``solve(..., backend="fused")`` on the same
@@ -493,14 +541,18 @@ def solve_sharded(problem, seed, config: SolverConfig, mesh: Mesh, *,
     ``config.coupling_format`` must be "auto" or "bitplane_sharded".
     ``coupling`` takes pre-packed tile-aligned planes to skip the re-encode
     (the benchmark path); ``num_planes`` forces the precision B.
+    ``coalesce`` (default on) broadcasts each step's unique rows once
+    instead of once per replica — identical trajectories, and the result's
+    ``rows_fetched`` records the realized per-replica broadcast counts.
     """
     n = problem.num_spins
     planes = resolve_sharded_planes(problem, config, mesh, coupling=coupling,
                                     num_planes=num_planes)
     r = config.num_replicas
-    fn = sharded_anneal_fn(config, mesh, n, chunk_steps=chunk_steps)
+    fn = sharded_anneal_fn(config, mesh, n, chunk_steps=chunk_steps,
+                           coalesce=coalesce)
     seed_arr = jnp.asarray([seed], jnp.uint32)
-    u, s, e, be, bs, nf, trace = fn(planes, problem.fields, seed_arr)
+    u, s, e, be, bs, nf, rows, trace = fn(planes, problem.fields, seed_arr)
     return SolveResult(
         best_energy=be + problem.offset,
         best_spins=bs.astype(jnp.int8),
@@ -508,4 +560,5 @@ def solve_sharded(problem, seed, config: SolverConfig, mesh: Mesh, *,
         num_flips=nf,
         trace_energy=((trace + problem.offset).astype(jnp.float32)
                       if config.trace_every else jnp.zeros((0, r), jnp.float32)),
+        rows_fetched=rows,
     )

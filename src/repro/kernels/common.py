@@ -214,3 +214,56 @@ def roulette_pick(p_all: jax.Array, u_roulette: jax.Array, lane: int):
 def site_from_uniform(u01: jax.Array, n: int) -> jax.Array:
     """Random-scan site pick — the canonical ``core.rng`` rescaling (Eq. 22)."""
     return rng.index_from_uniform(u01, n)
+
+
+def coalesce_rows(j: jax.Array):
+    """Duplicate structure of one step's (R,) selected sites — the reuse-aware
+    row-fetch plan shared by the HBM-streamed kernel and the spin-sharded
+    driver (ROADMAP item 4: R fetches/step → unique(R) fetches/step).
+
+    Returns ``(nu, usite, uo, fetched)``:
+
+    * ``nu``      — scalar int32, the number of *unique* sites in ``j``
+                    (1 ≤ nu ≤ R; nu row fetches replace R).
+    * ``usite``   — (R,) int32, the m-th unique site in first-occurrence
+                    order for m < nu (entries at m ≥ nu repeat site 0's
+                    value harmlessly — fetch loops run ``nu`` iterations).
+    * ``uo``      — (R,) int32, each replica's index into the unique list
+                    (``usite[uo[r]] == j[r]`` for every r), so the decoded
+                    unique rows broadcast back to every replica that
+                    selected them.
+    * ``fetched`` — (R,) int32 one-hot-per-group fetch attribution: 1 on the
+                    lowest-index replica of each duplicate group, 0 on the
+                    replicas reusing its row (``sum(fetched) == nu`` — the
+                    per-step unique-rows-fetched counter).
+
+    The decoded row is a deterministic function of the site alone, so
+    fetch-once-broadcast is byte-identical to fetch-per-replica — coalescing
+    can never move a trajectory (the five-way parity gate). Everything is
+    O(R²) masked reductions over 2-D ``broadcasted_iota`` — no ``sort``, no
+    1-D iota, no ``dot_general`` — so the identical code runs inside the
+    Pallas kernel (Mosaic-safe) and in the shard_map'd jnp driver.
+    """
+    r = j.shape[0]
+    rr = jax.lax.broadcasted_iota(jnp.int32, (r, r), 0)   # row ids
+    cc = jax.lax.broadcasted_iota(jnp.int32, (r, r), 1)   # column ids
+    eq = j[:, None] == j[None, :]                          # (R, R)
+    # first_idx[r]: lowest replica index selecting the same site as r.
+    first_idx = jnp.min(jnp.where(eq, cc, r), axis=1)
+    rid = rr[:, 0]                                         # (R,) 0..R-1, 2-D born
+    is_first = first_idx == rid
+    fetched = is_first.astype(jnp.int32)
+    # Position of each first occurrence in the compacted unique list
+    # (inclusive prefix count of firsts, minus one), via a masked 2-D sum —
+    # the Pallas-safe cumsum.
+    uo_first = jnp.sum(jnp.where((cc <= rr) & is_first[None, :], 1, 0),
+                       axis=1) - 1
+    uo = jnp.sum(jnp.where(cc == first_idx[:, None], uo_first[None, :], 0),
+                 axis=1)
+    nu = jnp.sum(fetched)
+    usite = jnp.sum(jnp.where((rr == uo_first[None, :]) & is_first[None, :],
+                              j[None, :], 0), axis=1)
+    # Fetch loops index usite at m < nu only; park the tail on a valid site
+    # so a clamped prefetch can never read out of range.
+    usite = jnp.where(rid < nu, usite, usite[0])
+    return nu, usite, uo, fetched

@@ -157,7 +157,8 @@ def fused_sweep_chunk(couplings: Union[jax.Array, BitPlanes], state,
                       *, mode: str, uniformized: bool = False,
                       pwl_table: Optional[jax.Array] = None,
                       gather: str = "dynamic", block_r: int = 8,
-                      coupling: Optional[str] = None,
+                      coupling: Optional[str] = None, coalesce: bool = True,
+                      with_rows_fetched: bool = False,
                       interpret: bool = False):
     """One fused sweep chunk + best-so-far merge — the single chunk driver
     shared by ``fused_anneal``, fused tempering, and the fused distributed
@@ -170,21 +171,26 @@ def fused_sweep_chunk(couplings: Union[jax.Array, BitPlanes], state,
     requested explicitly (the drivers pass their resolved format through).
     ``state`` is the 6-tuple ``(u, s, e, best_e, best_s, num_flips)`` with a
     leading replica axis; ``chunk_key`` is the chunk's ``Salt.SWEEP`` stream;
-    ``temps`` is the (num_steps, R) per-replica temperature tensor. Returns
-    the updated state tuple.
+    ``temps`` is the (num_steps, R) per-replica temperature tensor.
+    ``coalesce`` flows to the kernel's reuse-aware unique-row fetch (only the
+    HBM-streamed tier reacts; trajectories are bit-identical either way).
+    Returns the updated state tuple — the 6-tuple is the snapshot/resume
+    contract, so the kernel's rows-fetched counter is only surfaced when
+    ``with_rows_fetched`` asks for it, as a second ``(state, rf)`` element.
     """
     u, s, e, be, bs, nf = state
     r = e.shape[0]
     if coupling is None:
         coupling = "bitplane" if isinstance(couplings, BitPlanes) else "dense"
     uniforms = rng.uniform01(chunk_key, (num_steps, r, 4))
-    u, s, e, ce, cs, cf = _sweep.mcmc_sweep(
+    u, s, e, ce, cs, cf, rf = _sweep.mcmc_sweep(
         couplings, u, s, e, uniforms, temps, pwl_table, mode=mode,
         uniformized=uniformized, gather=gather, coupling=coupling,
-        block_r=block_r, interpret=interpret)
+        block_r=block_r, coalesce=coalesce, interpret=interpret)
     better = ce < be
-    return (u, s, e, jnp.where(better, ce, be),
-            jnp.where(better[:, None], cs, bs), nf + cf)
+    state = (u, s, e, jnp.where(better, ce, be),
+             jnp.where(better[:, None], cs, bs), nf + cf)
+    return (state, rf) if with_rows_fetched else state
 
 
 def anneal_chunk_plan(config: SolverConfig, chunk_steps: int):
@@ -225,14 +231,16 @@ def anneal_gather(store: CouplingStore, gather: str, n: int) -> str:
 def anneal_chunk_step(store: CouplingStore, state, base: jax.Array,
                       c: jax.Array, *, clen: int, chunk_len: int,
                       config: SolverConfig, gather: str, block_r: int,
-                      interpret: bool):
+                      interpret: bool, with_rows_fetched: bool = False):
     """One annealing chunk of the fused trajectory: the temps tensor for
     global steps ``[c·chunk_len, c·chunk_len + clen)``, the chunk's
     ``Salt.SWEEP`` stream, and the sweep+merge of :func:`fused_sweep_chunk`.
     This is the single chunk body under ``_fused_anneal_impl``'s scan AND the
     resilient supervisor's per-chunk jit (``core.resilience``) — one
     definition is what makes the resumed trajectory bit-identical to the
-    uninterrupted scan."""
+    uninterrupted scan. ``with_rows_fetched`` surfaces the kernel's
+    rows-fetched counter as a second return (the resilient path keeps the
+    bare 6-tuple — its snapshot contract)."""
     r = config.num_replicas
     steps = c * chunk_len + jnp.arange(clen)
     temps = jax.vmap(config.schedule)(steps).astype(jnp.float32)
@@ -242,7 +250,7 @@ def anneal_chunk_step(store: CouplingStore, state, base: jax.Array,
         clen, temps, mode=config.mode, uniformized=config.uniformized,
         pwl_table=solver_pwl_table(config), gather=gather,
         block_r=fit_block(r, block_r), coupling=store.fmt,
-        interpret=interpret)
+        with_rows_fetched=with_rows_fetched, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("config", "chunk_steps", "block_r",
@@ -262,17 +270,21 @@ def _fused_anneal_impl(problem: ising.IsingProblem, seed: jax.Array,
     chunk_len, num_chunks, rem_steps = anneal_chunk_plan(config, chunk_steps)
 
     def chunk(carry, c, clen):
-        state = anneal_chunk_step(store, carry, base, c, clen=clen,
-                                  chunk_len=chunk_len, config=config,
-                                  gather=gather, block_r=block_r,
-                                  interpret=interpret)
-        return state, state[3]  # best-so-far energy at chunk end
+        state, rows = carry
+        state, rf = anneal_chunk_step(store, state, base, c, clen=clen,
+                                      chunk_len=chunk_len, config=config,
+                                      gather=gather, block_r=block_r,
+                                      interpret=interpret,
+                                      with_rows_fetched=True)
+        return (state, rows + rf), state[3]  # best-so-far energy at chunk end
 
-    (u, s, e, be, bs, nf), trace = jax.lax.scan(
+    init = (init, jnp.zeros((r,), jnp.int32))
+    ((u, s, e, be, bs, nf), rows), trace = jax.lax.scan(
         partial(chunk, clen=chunk_len), init, jnp.arange(num_chunks))
     if rem_steps:
-        (u, s, e, be, bs, nf), _ = chunk((u, s, e, be, bs, nf),
-                                         jnp.int32(num_chunks), clen=rem_steps)
+        ((u, s, e, be, bs, nf), rows), _ = chunk(
+            ((u, s, e, be, bs, nf), rows), jnp.int32(num_chunks),
+            clen=rem_steps)
     return SolveResult(
         best_energy=be + problem.offset,
         best_spins=bs.astype(jnp.int8),
@@ -280,6 +292,7 @@ def _fused_anneal_impl(problem: ising.IsingProblem, seed: jax.Array,
         num_flips=nf,
         trace_energy=((trace + problem.offset).astype(jnp.float32)
                       if config.trace_every else jnp.zeros((0, r), jnp.float32)),
+        rows_fetched=rows,
     )
 
 

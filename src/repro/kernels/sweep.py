@@ -79,12 +79,12 @@ COUPLING_MODES = coupling_store.KERNEL_COUPLING_MODES
 PLANE_MODES = coupling_store.KERNEL_PLANE_MODES
 
 
-def _dense_layout(couplings, n):
+def _dense_layout(couplings, n, br, coalesce):
     """VMEM-resident (N, N) f32 J, broadcast to every replica block."""
     return [pl.BlockSpec((n, n), lambda i: (0, 0))], [couplings], []
 
 
-def _bitplane_layout(couplings, n):
+def _bitplane_layout(couplings, n, br, coalesce):
     """VMEM-resident packed planes: pos/neg (B, N, W) broadcast."""
     bp, _, w = couplings.pos.shape
     return ([pl.BlockSpec((bp, n, w), lambda i: (0, 0, 0)),
@@ -92,17 +92,21 @@ def _bitplane_layout(couplings, n):
             [couplings.pos, couplings.neg], [])
 
 
-def _bitplane_hbm_layout(couplings, n):
+def _bitplane_hbm_layout(couplings, n, br, coalesce):
     """HBM-resident planes: never enter the block pipeline (ANY pins them to
     HBM); the kernel streams (B, 1, W) row tiles into a 2-slot VMEM scratch
-    double-buffer with one DMA semaphore per (slot, sign) in-flight copy."""
+    double-buffer with one DMA semaphore per (slot, sign) in-flight copy.
+    With coalescing, a (br, N) f32 row cache holds the step's decoded unique
+    rows so duplicate selections replay a VMEM read instead of a second DMA."""
     bp, _, w = couplings.pos.shape
+    scratch = [pltpu.VMEM((2, bp, 1, w), jnp.uint32),  # pos row tiles
+               pltpu.VMEM((2, bp, 1, w), jnp.uint32),  # neg row tiles
+               pltpu.SemaphoreType.DMA((2, 2))]        # (slot, sign) DMAs
+    if coalesce:
+        scratch.append(pltpu.VMEM((br, n), jnp.float32))  # decoded row cache
     return ([pl.BlockSpec(memory_space=pltpu.ANY),
              pl.BlockSpec(memory_space=pltpu.ANY)],
-            [couplings.pos, couplings.neg],
-            [pltpu.VMEM((2, bp, 1, w), jnp.uint32),   # pos row tiles
-             pltpu.VMEM((2, bp, 1, w), jnp.uint32),   # neg row tiles
-             pltpu.SemaphoreType.DMA((2, 2))])        # (slot, sign) DMAs
+            [couplings.pos, couplings.neg], scratch)
 
 
 #: Kernel-side half of the coupling-store contract: resolved format name →
@@ -142,13 +146,20 @@ def _gather_scalar_pair(a: jax.Array, b: jax.Array, sites: jax.Array,
 
 
 def _kernel(*refs, num_steps: int, mode: str, uniformized: bool,
-            gather: str, lane: int, has_pwl: bool, coupling: str):
+            gather: str, lane: int, has_pwl: bool, coupling: str,
+            coalesce: bool):
     streamed = coupling == "bitplane_hbm"
+    cache_scr = None
     if streamed:
         # HBM-streaming scratch: 2-slot (double-buffered) row tiles per sign
-        # plane plus one DMA semaphore per (slot, sign) in-flight copy.
-        pos_scr, neg_scr, row_sems = refs[-3:]
-        refs = refs[:-3]
+        # plane plus one DMA semaphore per (slot, sign) in-flight copy; the
+        # coalesced path adds the (br, N) decoded-row cache.
+        if coalesce:
+            pos_scr, neg_scr, row_sems, cache_scr = refs[-4:]
+            refs = refs[:-4]
+        else:
+            pos_scr, neg_scr, row_sems = refs[-3:]
+            refs = refs[:-3]
     num_j = 2 if coupling in PLANE_MODES else 1
     j_refs = refs[:num_j]
     (u0_ref, s0_ref, e0_ref, unif_ref, temp_ref) = refs[num_j:num_j + 5]
@@ -157,7 +168,8 @@ def _kernel(*refs, num_steps: int, mode: str, uniformized: bool,
         tbl = pwl_ref[...].astype(jnp.float32)
     else:
         tbl = None
-    (u_out, s_out, e_out, be_out, bs_out, nf_out) = refs[num_j + 5 + int(has_pwl):]
+    (u_out, s_out, e_out, be_out, bs_out, nf_out,
+     rf_out) = refs[num_j + 5 + int(has_pwl):]
     n = u0_ref.shape[1]
     br = u0_ref.shape[0]
     # Only the opt-in MXU path materializes J as a value; the default O(N)
@@ -198,7 +210,7 @@ def _kernel(*refs, num_steps: int, mode: str, uniformized: bool,
     e = e0_ref[...].astype(jnp.float32)[:, 0]  # (br,)
 
     def step(t, carry):
-        u, s, e, be, bs, nf = carry
+        u, s, e, be, bs, nf, rf = carry
         temp = temp_ref[t]                  # (br,) per-replica ladder rung
         u_site = unif_ref[t, :, 0]
         u_acc = unif_ref[t, :, 1]
@@ -232,6 +244,7 @@ def _kernel(*refs, num_steps: int, mode: str, uniformized: bool,
         better = e < be
         be = jnp.where(better, e, be)
         if gather == "onehot":
+            rf = rf + 1                      # one row materialized per replica
             iota = jax.lax.broadcasted_iota(jnp.int32, (br, n), 1)
             onehot = (iota == j[:, None]).astype(jnp.float32)
             rows = jax.lax.dot_general(onehot, J, (((1,), (0,)), ((), ())),
@@ -261,7 +274,39 @@ def _kernel(*refs, num_steps: int, mode: str, uniformized: bool,
                     lambda b: b, bs)
                 return (u, s, bs)
 
-            if streamed:
+            if streamed and coalesce:
+                # Reuse-aware streaming (ROADMAP item 4): DMA each *unique*
+                # selected row exactly once — still double-buffered across
+                # the dynamic-trip fetch loop — into the (br, N) decoded-row
+                # cache, then apply replicas in their original order reading
+                # the cache. The decoded row depends only on the site, so
+                # fetch-once-broadcast is byte-identical to fetch-per-replica
+                # and the trajectory cannot move; only rf (rows fetched)
+                # drops from br to nu per step.
+                nu, usite, uo, fetched = common.coalesce_rows(j)
+                rf = rf + fetched
+
+                def fetch_one(m, c):
+                    slot = jax.lax.rem(m, 2)
+
+                    @pl.when(m + 1 < nu)
+                    def _():
+                        nxt = jnp.minimum(m + 1, br - 1)
+                        stream_start(jax.lax.rem(m + 1, 2), usite[nxt])
+
+                    cache_scr[pl.ds(m, 1), :] = stream_wait_decode(
+                        slot, usite[m])
+                    return c
+
+                stream_start(0, usite[0])
+                jax.lax.fori_loop(0, nu, fetch_one, 0)
+
+                def apply_one(rix, carry):
+                    u, s, bs = carry
+                    row = cache_scr[pl.ds(uo[rix], 1), :]  # (1, N)
+                    return apply_row(rix, j[rix], row, u, s, bs)
+            elif streamed:
+                rf = rf + 1
                 # Double-buffered HBM streaming: replica r+1's row tiles are
                 # DMA'd into the other scratch slot while replica r's row is
                 # decoded and applied (sites j are all known before the apply
@@ -282,6 +327,8 @@ def _kernel(*refs, num_steps: int, mode: str, uniformized: bool,
 
                 stream_start(0, j[0])
             else:
+                rf = rf + 1
+
                 def apply_one(rix, carry):
                     u, s, bs = carry
                     jr = j[rix]
@@ -289,27 +336,30 @@ def _kernel(*refs, num_steps: int, mode: str, uniformized: bool,
                     return apply_row(rix, jr, row, u, s, bs)
 
             u, s, bs = jax.lax.fori_loop(0, br, apply_one, (u, s, bs))
-        return (u, s, e, be, bs, nf)
+        return (u, s, e, be, bs, nf, rf)
 
-    init = (u, s, e, e, s, jnp.zeros((br,), jnp.int32))
-    u, s, e, be, bs, nf = jax.lax.fori_loop(0, num_steps, step, init)
+    init = (u, s, e, e, s, jnp.zeros((br,), jnp.int32),
+            jnp.zeros((br,), jnp.int32))
+    u, s, e, be, bs, nf, rf = jax.lax.fori_loop(0, num_steps, step, init)
     u_out[...] = u
     s_out[...] = s.astype(s_out.dtype)
     e_out[...] = e[:, None]
     be_out[...] = be[:, None]
     bs_out[...] = bs.astype(bs_out.dtype)
     nf_out[...] = nf[:, None]
+    rf_out[...] = rf[:, None]
 
 
 @functools.partial(jax.jit, static_argnames=(
     "mode", "uniformized", "gather", "coupling", "block_r", "lane",
-    "interpret"))
+    "coalesce", "interpret"))
 def mcmc_sweep(couplings, fields0: jax.Array, spins0: jax.Array,
                energy0: jax.Array, uniforms: jax.Array, temps: jax.Array,
                pwl_table: Optional[jax.Array] = None, *, mode: str = "rsa",
                uniformized: bool = False, gather: str = "dynamic",
                coupling: str = "dense", block_r: int = 8,
-               lane: Optional[int] = None, interpret: bool = False):
+               lane: Optional[int] = None, coalesce: bool = True,
+               interpret: bool = False):
     """T fused MCMC steps for R replicas.
 
     couplings: (N, N) f32 with ``coupling="dense"``, or a packed
@@ -323,8 +373,17 @@ def mcmc_sweep(couplings, fields0: jax.Array, spins0: jax.Array,
     ``core.pwl.pwl_table`` (None = exact sigmoid). ``gather``: "dynamic"
     (default, O(N)/step row fetch) or "onehot" (opt-in O(N²)/step MXU
     contraction for tiny N; dense-only). ``block_r`` clamps to the largest
-    divisor of R. Returns (fields, spins, energy, best_energy, best_spins,
-    num_flips); see ``ref.mcmc_sweep`` for the exact-semantics oracle.
+    divisor of R. ``coalesce`` (default on; only the HBM-streamed tier is
+    affected — VMEM-resident fetches are free) DMAs each step's *unique*
+    selected rows once and broadcasts the decoded row to every replica that
+    picked it (``common.coalesce_rows``) — bit-identical trajectories, up to
+    br× less row traffic. Returns (fields, spins, energy, best_energy,
+    best_spins, num_flips, rows_fetched) where rows_fetched is the (R,)
+    int32 count of coupling-row fetches each replica block attributed to
+    that replica (uncoalesced paths count one per replica per step; the
+    coalesced stream attributes each unique row to the lowest-index replica
+    selecting it, so the block sum is the unique-row traffic); see
+    ``ref.mcmc_sweep`` for the exact-semantics oracle.
     """
     r, n = fields0.shape
     t = uniforms.shape[0]
@@ -338,7 +397,12 @@ def mcmc_sweep(couplings, fields0: jax.Array, spins0: jax.Array,
     if n % lane:
         raise ValueError(f"N={n} not divisible by lane={lane}")
     grid = (r // br,)
-    in_specs, j_args, scratch_shapes = _STORE_LAYOUTS[coupling](couplings, n)
+    # Coalescing only changes behavior where the row fetch is real data
+    # movement (the registry's coalescable tiers); VMEM-resident stores keep
+    # their direct per-replica reads so the flag never perturbs their layout.
+    coalesce = coalesce and coupling_store.FORMATS[coupling].coalescable
+    in_specs, j_args, scratch_shapes = _STORE_LAYOUTS[coupling](
+        couplings, n, br, coalesce)
     in_specs = in_specs + [
         pl.BlockSpec((br, n), lambda i: (i, 0)),       # u0
         pl.BlockSpec((br, n), lambda i: (i, 0)),       # s0
@@ -353,7 +417,8 @@ def mcmc_sweep(couplings, fields0: jax.Array, spins0: jax.Array,
     outs = pl.pallas_call(
         functools.partial(_kernel, num_steps=t, mode=mode,
                           uniformized=uniformized, gather=gather, lane=lane,
-                          has_pwl=pwl_table is not None, coupling=coupling),
+                          has_pwl=pwl_table is not None, coupling=coupling,
+                          coalesce=coalesce),
         grid=grid,
         in_specs=in_specs,
         out_specs=[
@@ -363,6 +428,7 @@ def mcmc_sweep(couplings, fields0: jax.Array, spins0: jax.Array,
             pl.BlockSpec((br, 1), lambda i: (i, 0)),
             pl.BlockSpec((br, n), lambda i: (i, 0)),
             pl.BlockSpec((br, 1), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((r, n), jnp.float32),
@@ -371,9 +437,10 @@ def mcmc_sweep(couplings, fields0: jax.Array, spins0: jax.Array,
             jax.ShapeDtypeStruct((r, 1), jnp.float32),
             jax.ShapeDtypeStruct((r, n), spins0.dtype),
             jax.ShapeDtypeStruct((r, 1), jnp.int32),
+            jax.ShapeDtypeStruct((r, 1), jnp.int32),
         ],
         scratch_shapes=scratch_shapes,
         interpret=interpret,
     )(*args)
-    u, s, e, be, bs, nf = outs
-    return u, s, e[:, 0], be[:, 0], bs, nf[:, 0]
+    u, s, e, be, bs, nf, rf = outs
+    return u, s, e[:, 0], be[:, 0], bs, nf[:, 0], rf[:, 0]

@@ -42,6 +42,11 @@ def coupling_digest(problem: ising.IsingProblem) -> str:
         return "edges:" + problem.edges._digest.hex()
     J = np.ascontiguousarray(jax.device_get(problem.couplings))
     h = hashlib.sha256()
+    # dtype is part of the content: an int32 J and its float32 bit-pattern
+    # twin have identical shape+bytes but encode different couplings — a
+    # shared cache key would hand one tenant a store built from the other's
+    # matrix.
+    h.update(str(J.dtype).encode())
     h.update(repr(J.shape).encode())
     h.update(J.tobytes())
     return "dense:" + h.hexdigest()

@@ -76,9 +76,12 @@ def oom_once_hook(site: str, at_chunk: int | None = None,
 def corrupt_snapshot(run_dir: str, step: int, how: str = "flip") -> str:
     """Damage snapshot ``step_<step>`` under ``run_dir``. ``how``:
     "flip" (one byte of arrays.npz inverted — the checksum must catch it),
-    "truncate" (arrays.npz cut to 10 bytes — a torn write), or
-    "manifest" (manifest.json replaced with junk). Returns the damaged
-    path."""
+    "truncate" (arrays.npz cut to 10 bytes — a torn write),
+    "manifest" (manifest.json replaced with junk), or
+    "legacy_empty" (arrays.npz emptied *and* ``arrays_sha256`` stripped from
+    an otherwise-valid manifest — a torn write on a pre-checksum snapshot,
+    so recovery must survive ``np.load``'s raw ``EOFError`` with no checksum
+    to catch it first). Returns the damaged path."""
     snap = os.path.join(run_dir, f"step_{step}")
     if how == "manifest":
         path = os.path.join(snap, "manifest.json")
@@ -90,6 +93,16 @@ def corrupt_snapshot(run_dir: str, step: int, how: str = "flip") -> str:
         with open(path, "r+b") as fh:
             fh.truncate(10)
         return path
+    if how == "legacy_empty":
+        mpath = os.path.join(snap, "manifest.json")
+        with open(mpath) as fh:
+            manifest = json.load(fh)
+        manifest.pop("arrays_sha256", None)
+        with open(mpath, "w") as fh:
+            json.dump(manifest, fh)
+        with open(path, "r+b") as fh:
+            fh.truncate(0)
+        return path
     if how == "flip":
         size = os.path.getsize(path)
         with open(path, "r+b") as fh:
@@ -98,8 +111,8 @@ def corrupt_snapshot(run_dir: str, step: int, how: str = "flip") -> str:
             fh.seek(size // 2)
             fh.write(bytes([b[0] ^ 0xFF]))
         return path
-    raise ValueError(f"how must be 'flip' | 'truncate' | 'manifest', "
-                     f"got {how!r}")
+    raise ValueError(f"how must be 'flip' | 'truncate' | 'manifest' | "
+                     f"'legacy_empty', got {how!r}")
 
 
 def resilient_subprocess_code(*, run_dir: str, seed: int = 5, n: int = 256,

@@ -196,6 +196,75 @@ def test_check_flags_broken_ingestion_points():
     assert any("must not cost more" in e for e in check_bench_history(broken))
 
 
+def test_committed_history_has_row_traffic_point():
+    """The reuse-aware fetch anchor: the multi-replica row-traffic cell must
+    exist, its iid unique-row fetches must land strictly under the R·T
+    uncoalesced traffic, its collapsed-ensemble fetches at or under one row
+    per group-step, and coalescing must not have lost the within-run timing
+    comparison at R ≥ 8."""
+    payload = _load()
+    results = payload["results"]
+    key = next((k for k in results if k.endswith("_row_traffic")), None)
+    assert key is not None, sorted(results)
+    cell = results[key]["rwa"]
+    rt = cell["num_replicas"] * cell["num_steps"]
+    assert cell["replica_steps"] == rt
+    assert cell["num_replicas"] >= 8
+    assert 0 < cell["rows_fetched_iid"] < rt
+    assert 0 < cell["rows_fetched_ensemble"] <= cell["num_groups"] * cell["num_steps"]
+    assert cell["uncoalesced_rows_fetched"] == rt
+    assert cell["coalesced_us_per_step"] <= cell["uncoalesced_us_per_step"]
+
+
+def test_check_flags_broken_row_traffic_points():
+    """--check knows the row-traffic schema: a counter at/over the R·T
+    uncoalesced traffic (no reuse recovered), fetches above one row per
+    replica-step (counter broken), an ensemble point over its group-step
+    budget, a coalesced sweep slower than the uncoalesced one, and missing
+    columns all fail the gate."""
+    from benchmarks.run import check_row_traffic_points
+
+    good = {
+        "N512_row_traffic": {"rwa": {
+            "num_replicas": 16, "num_steps": 64, "replica_steps": 1024,
+            "num_groups": 4, "rows_fetched_iid": 1000,
+            "rows_fetched_ensemble": 250, "uncoalesced_rows_fetched": 1024,
+            "coalesced_us_per_step": 50.0,
+            "uncoalesced_us_per_step": 80.0}},
+    }
+    assert check_row_traffic_points(good) == []
+    no_reuse = copy.deepcopy(good)
+    no_reuse["N512_row_traffic"]["rwa"]["rows_fetched_iid"] = 1024
+    assert any("no birthday-rate reuse" in e
+               for e in check_row_traffic_points(no_reuse))
+    over = copy.deepcopy(good)
+    over["N512_row_traffic"]["rwa"]["rows_fetched_ensemble"] = 1100
+    errors = check_row_traffic_points(over)
+    assert any("never fetch more than one row per replica" in e
+               for e in errors)
+    grouped = copy.deepcopy(good)
+    grouped["N512_row_traffic"]["rwa"]["rows_fetched_ensemble"] = 400
+    assert any("group-step" in e for e in check_row_traffic_points(grouped))
+    slow = copy.deepcopy(good)
+    slow["N512_row_traffic"]["rwa"]["coalesced_us_per_step"] = 90.0
+    assert any("must not lose to fetch-per-replica" in e
+               for e in check_row_traffic_points(slow))
+    mismatched = copy.deepcopy(good)
+    mismatched["N512_row_traffic"]["rwa"]["replica_steps"] = 999
+    assert any("replica_steps" in e
+               for e in check_row_traffic_points(mismatched))
+    incomplete = {"N512_row_traffic": {"rwa": {"num_replicas": 16}}}
+    assert any("needs positive numeric" in e
+               for e in check_row_traffic_points(incomplete))
+    # ...and the full checker routes through the same validation.
+    payload = _load()
+    broken = copy.deepcopy(payload)
+    broken["history"][-1]["results"].update(copy.deepcopy(no_reuse))
+    broken["results"] = broken["history"][-1]["results"]
+    assert any("no birthday-rate reuse" in e
+               for e in check_bench_history(broken))
+
+
 def test_check_flags_diverged_top_level_results():
     payload = _load()
     broken = copy.deepcopy(payload)

@@ -72,3 +72,36 @@ def test_estimate_from_replicas():
     assert r.success_probability == 0.5
     assert r.num_successes == 2
     assert r.tts == pytest.approx(2.0 * math.log(0.01) / math.log(0.5), rel=1e-9)
+
+
+def test_success_probability_empty_agrees_with_estimate():
+    """Zero runs ⇒ 0.0 (not NaN), matching ``estimate`` — and no NumPy
+    mean-of-empty RuntimeWarning leaks."""
+    empty = np.array([], np.float32)
+    with np.errstate(invalid="raise"):
+        p = tts.success_probability(empty, threshold=-10.0)
+    assert p == 0.0
+    r = tts.estimate(empty, threshold=-10.0, time_per_run=2.0)
+    assert r.success_probability == p == 0.0
+    assert r.num_runs == 0 and r.num_successes == 0
+    assert math.isinf(r.tts)
+
+
+def test_success_probability_all_inf_energies():
+    """Runs that never found a finite energy are failures, not NaNs."""
+    best = np.full(4, np.inf, np.float32)
+    p = tts.success_probability(best, threshold=-10.0)
+    assert p == 0.0
+    r = tts.estimate(best, threshold=-10.0, time_per_run=1.0)
+    assert r.success_probability == 0.0 and math.isinf(r.tts)
+
+
+def test_success_probability_at_or_above_target_gives_single_run_tts():
+    """P_a ≥ p (every replica hit the target) ⇒ one run suffices, TTS = t_a —
+    for both the bare estimator and ``estimate``."""
+    best = np.array([-12.0, -11.0, -10.0])
+    p = tts.success_probability(best, threshold=-10.0)
+    assert p == 1.0
+    r = tts.estimate(best, threshold=-10.0, time_per_run=3.5, target=0.99)
+    assert r.success_probability == 1.0
+    assert r.tts == 3.5

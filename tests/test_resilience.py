@@ -208,7 +208,7 @@ def test_corrupt_newest_snapshot_falls_back(problem, tmp_path):
     _assert_same_solve(solve(problem, 7, cfg, backend="fused"), res.result)
 
 
-@pytest.mark.parametrize("how", ["truncate", "manifest"])
+@pytest.mark.parametrize("how", ["truncate", "manifest", "legacy_empty"])
 def test_all_snapshots_corrupt_restarts_fresh(problem, tmp_path, how):
     cfg = _cfg("rwa", "bitplane")
     run_dir = str(tmp_path / f"run_{how}")
@@ -220,6 +220,25 @@ def test_all_snapshots_corrupt_restarts_fresh(problem, tmp_path, how):
     res = run_resilient(problem, 7, cfg, run_dir=run_dir)
     assert res.resumed_from_chunk is None
     assert res.stop_reason == STOP_COMPLETED
+    _assert_same_solve(solve(problem, 7, cfg, backend="fused"), res.result)
+
+
+def test_legacy_snapshot_truncated_npz_falls_back(problem, tmp_path):
+    """A pre-checksum snapshot (no ``arrays_sha256`` in the manifest) whose
+    arrays.npz was torn to zero bytes: ``np.load`` raises ``EOFError`` with
+    no checksum gate in front of it, and the newest-first walk must convert
+    that into fallback to the next-older snapshot, not crash."""
+    cfg = _cfg("rwa", "bitplane")
+    run_dir = str(tmp_path / "run")
+    with pytest.raises(SimulatedCrash):
+        run_resilient(problem, 7, cfg, run_dir=run_dir, keep=10,
+                      on_event=kill_after_chunk_hook(4))
+    corrupt_snapshot(run_dir, 4, how="legacy_empty")
+    events = []
+    res = run_resilient(problem, 7, cfg, run_dir=run_dir, keep=10,
+                        on_event=lambda k, i: events.append(k))
+    assert res.resumed_from_chunk == 3
+    assert "snapshot_corrupt" in events
     _assert_same_solve(solve(problem, 7, cfg, backend="fused"), res.result)
 
 

@@ -323,6 +323,23 @@ class TestDigests:
         assert coupling_digest(_problem(1)) == coupling_digest(_problem(1))
         assert coupling_digest(_problem(1)) != coupling_digest(_problem(2))
 
+    def test_coupling_digest_separates_dtypes_with_identical_bytes(self):
+        """An int32 J and its float32 bit-pattern twin are different
+        couplings with identical shape+bytes — their cache keys must differ
+        or one tenant is served a store built from the other's matrix.
+        (``IsingProblem.create`` canonicalizes to f32, but problems also
+        enter as pytrees — ``tree_unflatten`` preserves whatever dtype the
+        couplings leaf carries.)"""
+        g = np.random.default_rng(0)
+        J_i = np.rint(g.normal(size=(N, N)) * 2).astype(np.int32)
+        J_i = np.triu(J_i, 1) + np.triu(J_i, 1).T
+        J_f = J_i.view(np.float32)          # same bytes, same shape
+        assert J_i.tobytes() == J_f.tobytes()
+        h = np.zeros(N, np.float32)
+        a = ising.IsingProblem(couplings=J_i, fields=h, offset=0.0)
+        b = ising.IsingProblem(couplings=J_f, fields=h, offset=0.0)
+        assert coupling_digest(a) != coupling_digest(b)
+
     def test_edge_list_problems_digest_by_canonical_coo(self):
         prob = _problem(4)
         rows, cols = np.nonzero(np.triu(np.asarray(prob.couplings), 1))
