@@ -1,0 +1,129 @@
+"""§Graph-colored parallel flips: colored vs single-flip throughput on the
+N=16384 sparse anchor (the same ``sparse_bipolar_edges`` instance as the
+sparse-ingest cell, HBM-streamed bit-plane tier).
+
+Single-flip async updates do at most one flip per replica per step; the
+colored mode flips one whole conflict-graph color class per step (exact
+block Gibbs — DESIGN.md §Graph-colored parallel flips), so on this instance
+(χ ≈ 11, mean class ≈ N/χ ≈ 1500) each kernel step carries hundreds of
+flips. The recorded cell (``N16384_colored``) holds both engines' µs/step,
+µs/flip, flips/sec and steps-to-target **measured in the same session**, so
+``benchmarks.run --check`` can gate the claim as a within-run inequality
+(colored flips/sec strictly above single-flip; per-step flips bounded by
+the largest color class), load-robust like the fused gate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+
+import numpy as np
+
+from repro.configs.snowball import default_solver
+from repro.core.coupling import CouplingStore
+from repro.core.ising import IsingProblem
+from repro.graphs import sparse_bipolar_edges
+from repro.graphs.coloring import greedy_coloring
+from repro.kernels import fused_anneal, ops
+
+from .bench_solver_perf import merge_bench_results
+from .common import CsvEmitter, time_call
+
+COLORED_N = 16384
+COLORED_EDGES = 8 * COLORED_N
+COLORED_REPLICAS = 4
+#: Single-flip step budget: matches the HBM-streamed anchor point.
+SINGLE_STEPS = 48
+#: Colored step budget: full class sweeps (multiples of χ) so every spin
+#: gets the same number of update opportunities; set after coloring.
+SWEEPS = 4
+
+
+def _steps_to_target(trace, trace_every, target):
+    """First step count at which the ensemble best-so-far trace reaches
+    ``target`` (the trace is monotone non-increasing per replica)."""
+    best = np.min(np.asarray(trace), axis=1)
+    hit = np.nonzero(best <= target)[0]
+    return int((hit[0] + 1) * trace_every) if hit.size else None
+
+
+def run_colored_point(emit: CsvEmitter) -> dict:
+    n, r = COLORED_N, COLORED_REPLICAS
+    edges = sparse_bipolar_edges(n, COLORED_EDGES, seed=n)
+    col = greedy_coloring(edges)
+    prob = IsingProblem.create_sparse(edges)
+
+    single_cfg = dataclasses.replace(
+        default_solver(n, SINGLE_STEPS, mode="rsa", num_replicas=r),
+        coupling_format="bitplane_hbm", trace_every=8)
+    store = CouplingStore.build(edges, "bitplane_hbm")
+    single, s_secs = time_call(fused_anneal, prob, 0, single_cfg,
+                               store=store, repeats=2)
+
+    chi = col.num_classes
+    colored_steps = SWEEPS * chi
+    colored_cfg = dataclasses.replace(
+        default_solver(n, colored_steps, mode="rsa", num_replicas=r),
+        coupling_format="bitplane_hbm", trace_every=chi,
+        flip_mode="colored")
+    plan = ops.colored_plan(prob, "bitplane_hbm")
+    colored, c_secs = time_call(ops.colored_anneal, prob, 0, colored_cfg,
+                                plan=plan, repeats=2)
+
+    s_flips = int(np.asarray(single.num_flips).sum())
+    c_flips = int(np.asarray(colored.num_flips).sum())
+    # Common quality target: the worse of the two final ensemble bests —
+    # both traces reach it by construction, so steps-to-target is defined
+    # for both engines.
+    target = max(float(np.min(np.asarray(single.best_energy))),
+                 float(np.min(np.asarray(colored.best_energy))))
+    point = {
+        "n": n,
+        "mode": "rsa",
+        "nnz": edges.nnz,
+        "num_replicas": r,
+        "num_color_classes": chi,
+        "max_class_size": int(col.max_class_size),
+        "single_steps": SINGLE_STEPS,
+        "colored_steps": colored_steps,
+        "single_us_per_step": s_secs / SINGLE_STEPS * 1e6,
+        "colored_us_per_step": c_secs / colored_steps * 1e6,
+        "single_flips": s_flips,
+        "colored_flips": c_flips,
+        "single_us_per_flip": s_secs / max(s_flips, 1) * 1e6,
+        "colored_us_per_flip": c_secs / max(c_flips, 1) * 1e6,
+        "single_flips_per_sec": s_flips / s_secs,
+        "colored_flips_per_sec": c_flips / c_secs,
+        "colored_flips_per_step_per_replica":
+            c_flips / colored_steps / r,
+        "target_energy": target,
+        "steps_to_target_single":
+            _steps_to_target(single.trace_energy, 8, target),
+        "steps_to_target_colored":
+            _steps_to_target(colored.trace_energy, chi, target),
+        "engines": ("single: fused async sweep (1 flip/replica/step); "
+                    "colored: one conflict-graph color class per step, "
+                    f"{SWEEPS} full sweeps — same instance, same tier, "
+                    "same session"),
+    }
+    emit.add(f"colored/N{n}/rsa/single", point["single_us_per_step"],
+             f"flips={s_flips};flips_per_sec={point['single_flips_per_sec']:.0f}")
+    emit.add(f"colored/N{n}/rsa/colored", point["colored_us_per_step"],
+             f"flips={c_flips};flips_per_sec={point['colored_flips_per_sec']:.0f};"
+             f"classes={chi};max_class={point['max_class_size']};"
+             f"speedup={point['colored_flips_per_sec'] / point['single_flips_per_sec']:.1f}x")
+    return point
+
+
+def main(run_id: str | None = None):
+    emit = CsvEmitter()
+    point = run_colored_point(emit)
+    merge_bench_results({f"N{COLORED_N}_colored": {"rsa": point}},
+                        run_id=run_id)
+    return point
+
+
+if __name__ == "__main__":
+    rid = (sys.argv[sys.argv.index("--run-id") + 1]
+           if "--run-id" in sys.argv else None)
+    main(run_id=rid)

@@ -135,6 +135,56 @@ def check_bench_history(payload: dict,
     errors.extend(check_ingestion_points(latest))
     errors.extend(check_serve_points(latest))
     errors.extend(check_row_traffic_points(latest))
+    errors.extend(check_colored_points(latest))
+    return errors
+
+
+def check_colored_points(latest: dict) -> list[str]:
+    """Schema + throughput gates for graph-colored cells (``N*_colored``
+    keys, written by the ``colored_flips`` suite): colored flips/sec must
+    land *strictly* above the single-flip engine's measured in the same run
+    (the O(N/χ) flips-per-step claim as a within-run inequality, load-robust
+    like the fused gate), and the per-step ensemble flip count may never
+    exceed the largest color class — a count above it means the kernel
+    flipped spins outside the scheduled class."""
+    errors = []
+    for n_key, modes in sorted(latest.items()):
+        if not n_key.endswith("_colored") or not isinstance(modes, dict):
+            continue
+        for mode, cell in sorted(modes.items()):
+            if not isinstance(cell, dict):
+                continue
+            num = ("num_replicas", "num_color_classes", "max_class_size",
+                   "single_steps", "colored_steps", "single_flips",
+                   "colored_flips", "single_flips_per_sec",
+                   "colored_flips_per_sec", "single_us_per_flip",
+                   "colored_us_per_flip")
+            if not all(isinstance(cell.get(k), (int, float)) and cell[k] > 0
+                       for k in num):
+                errors.append(f"{n_key}/{mode}: colored point needs positive "
+                              f"numeric {num}")
+                continue
+            if cell["colored_flips_per_sec"] <= cell["single_flips_per_sec"]:
+                errors.append(
+                    f"{n_key}/{mode}: colored {cell['colored_flips_per_sec']:.0f} "
+                    f"flips/sec did not beat the single-flip engine's "
+                    f"{cell['single_flips_per_sec']:.0f} in the same run — "
+                    "the colored mode exists to multiply flip throughput "
+                    "on sparse instances")
+            per_step = (cell["colored_flips"]
+                        / (cell["colored_steps"] * cell["num_replicas"]))
+            if per_step > cell["max_class_size"]:
+                errors.append(
+                    f"{n_key}/{mode}: {per_step:.1f} flips per replica-step "
+                    f"exceeds the largest color class "
+                    f"({cell['max_class_size']}) — the kernel flipped spins "
+                    "outside the scheduled class")
+            if cell["num_color_classes"] < 2:
+                errors.append(
+                    f"{n_key}/{mode}: num_color_classes "
+                    f"{cell['num_color_classes']} < 2 — a one-class "
+                    "'coloring' means an edgeless conflict graph; the cell "
+                    "proves nothing about colored scheduling")
     return errors
 
 
@@ -365,9 +415,9 @@ def main(argv=None) -> None:
     if args.check:
         sys.exit(run_check())
 
-    from . import (bench_fig14_incremental, bench_fig15_bitplane,
-                   bench_roofline, bench_row_traffic, bench_serve,
-                   bench_solver_perf, bench_solver_sharded,
+    from . import (bench_colored_flips, bench_fig14_incremental,
+                   bench_fig15_bitplane, bench_roofline, bench_row_traffic,
+                   bench_serve, bench_solver_perf, bench_solver_sharded,
                    bench_table2_gset, bench_table3_tts)
 
     print("name,us_per_call,derived")
@@ -384,6 +434,8 @@ def main(argv=None) -> None:
          partial(bench_serve.main, run_id=args.run_id)),
         ("row_traffic",                                 # §Reuse-aware fetch
          partial(bench_row_traffic.main, run_id=args.run_id)),
+        ("colored_flips",                               # §Graph-colored flips
+         partial(bench_colored_flips.main, run_id=args.run_id)),
         ("roofline", bench_roofline.main),             # §Roofline table
     ]
     if args.suite is not None:

@@ -100,6 +100,14 @@ class Backend(abc.ABC):
                 f"backend {self.name!r} consumes {cls.__name__}, got "
                 f"{type(config).__name__}")
 
+    def matches_config(self, config) -> bool:
+        """Whether ``backend="auto"`` may resolve to this path for
+        ``config``. Default: the config-type check alone; paths that split
+        one config class across execution modes (``SolverConfig.flip_mode``
+        routes "single" to fused/sharded and "colored" to the colored
+        backend) refine this so resolution is unambiguous."""
+        return isinstance(config, self.config_cls())
+
     def prepare(self, problem: ising.IsingProblem, config, *, mesh=None,
                 fmt: Optional[str] = None, store=None):
         """Resolve the coupling tier and build the stored operands for this
@@ -164,7 +172,7 @@ def resolve_backend(config, backend: str = "auto", mesh=None) -> str:
         get_backend(backend)
         return backend
     cands = [b for name, b in sorted(BACKENDS.items())
-             if b.capabilities.auto and isinstance(config, b.config_cls())]
+             if b.capabilities.auto and b.matches_config(config)]
     if not cands:
         raise TypeError(f"unrecognized config type {type(config).__name__}")
     return min(cands, key=lambda b: b.capabilities.needs_mesh
@@ -279,6 +287,86 @@ class FusedRunner:
         return SolveResult(best_energy=be + off, best_spins=bs.astype(jnp.int8),
                            final_energy=e + off, num_flips=nf,
                            trace_energy=trace)
+
+
+@partial(jax.jit, static_argnames=("config", "interpret"))
+def _colored_init(plan, seed, config: SolverConfig, interpret: bool):
+    from ..kernels import ops as _ops
+    base = jax.random.fold_in(jax.random.key(0), seed)
+    return _ops.fused_init_state(plan.problem, base, config.num_replicas,
+                                 interpret=interpret,
+                                 planes=plan.store.planes)
+
+
+@partial(jax.jit, static_argnames=("config", "clen", "chunk_len",
+                                   "interpret"))
+def _colored_chunk(state, seed, c, plan, *, config: SolverConfig, clen: int,
+                   chunk_len: int, interpret: bool):
+    from ..kernels import ops as _ops
+    base = jax.random.fold_in(jax.random.key(0), seed)
+    return _ops.colored_chunk_step(plan, state, base, c, clen=clen,
+                                   chunk_len=chunk_len, config=config,
+                                   block_r=8, interpret=interpret)
+
+
+class ColoredRunner:
+    """``solve(backend="colored")`` / ``colored_anneal``, chunk at a time.
+    The carried 6-tuple lives in the plan's color-sorted spin order (the
+    permutation is deterministic from the problem, so a resumed run rebuilds
+    the identical layout); ``finalize`` maps best spins back to original
+    vertex order."""
+
+    backend = "colored"
+
+    def __init__(self, problem, seed, config: SolverConfig, plan,
+                 chunk_steps: int):
+        from ..kernels import ops as _ops
+        self.problem = problem
+        self.config = config
+        self.plan = plan
+        self.fmt = plan.store.fmt
+        self.seed = jnp.asarray(seed, jnp.uint32)
+        self.interpret = _ops.auto_interpret(None)
+        self.chunk_len, self.num_chunks, self.rem_steps = (
+            _ops.anneal_chunk_plan(config, chunk_steps))
+        self.total_units = self.num_chunks + (1 if self.rem_steps else 0)
+        self.collect_trace = bool(config.trace_every)
+        self.num_replicas = config.num_replicas
+
+    def unit_len(self, k: int) -> int:
+        if self.rem_steps and k == self.num_chunks:
+            return self.rem_steps
+        return self.chunk_len
+
+    def init(self):
+        return _colored_init(self.plan, self.seed, self.config,
+                             self.interpret)
+
+    def run_chunk(self, state, k: int):
+        return _colored_chunk(state, self.seed, jnp.int32(k), self.plan,
+                              config=self.config, clen=self.unit_len(k),
+                              chunk_len=self.chunk_len,
+                              interpret=self.interpret)
+
+    def best_energy(self, state) -> float:
+        return float(jnp.min(state[3])) + float(self.problem.offset)
+
+    def trace_row(self, state):
+        return state[3]
+
+    def finalize(self, state, rows) -> SolveResult:
+        from ..kernels import ops as _ops
+        u, s, e, be, bs, nf = state
+        off = self.problem.offset
+        r = self.num_replicas
+        if self.collect_trace and rows:
+            trace = (jnp.asarray(np.stack(rows)) + off).astype(jnp.float32)
+        else:
+            trace = jnp.zeros((0, r), jnp.float32)
+        return SolveResult(
+            best_energy=be + off,
+            best_spins=_ops.unpermute_spins(self.plan, bs.astype(jnp.int8)),
+            final_energy=e + off, num_flips=nf, trace_energy=trace)
 
 
 @partial(jax.jit, static_argnames=("config",))
@@ -598,6 +686,7 @@ class ReferenceBackend(Backend):
     def run(self, problem, seed, config, *, mesh=None, store=None):
         from .solver import _run_jit
         self.check_config(config)
+        _require_single_flip(config, self.name)
         if store is not None:
             raise ValueError(
                 "a prebuilt CouplingStore serves the fused backend only; "
@@ -612,6 +701,17 @@ class ReferenceBackend(Backend):
     def runner(self, problem, seed, config, *, mesh=None, chunk_steps=256,
                fmt=None, store=None):
         return ReferenceRunner(problem, seed, config, chunk_steps)
+
+
+def _require_single_flip(config, name: str) -> None:
+    """The routing guard of the single-flip paths: a colored config reaching
+    them directly (bypassing ``backend="auto"``) must fail loudly, never
+    silently run single-flip sweeps."""
+    if getattr(config, "flip_mode", "single") != "single":
+        raise ValueError(
+            f"backend {name!r} runs single-flip updates (flip_mode="
+            f"{config.flip_mode!r}); colored block updates are served by "
+            "backend='colored'")
 
 
 def _resolve_store(problem, config, *, fmt=None, store=None, caller: str):
@@ -638,6 +738,10 @@ class FusedBackend(Backend):
     def config_cls(self):
         return SolverConfig
 
+    def matches_config(self, config) -> bool:
+        return (isinstance(config, SolverConfig)
+                and config.flip_mode == "single")
+
     def prepare(self, problem, config, *, mesh=None, fmt=None, store=None):
         return _resolve_store(problem, config, fmt=fmt, store=store,
                               caller=f"backend {self.name!r}")
@@ -649,6 +753,7 @@ class FusedBackend(Backend):
 
     def runner(self, problem, seed, config, *, mesh=None, chunk_steps=256,
                fmt=None, store=None):
+        _require_single_flip(config, self.name)
         if fmt == "bitplane_sharded":
             # The last rung of the tier ladder switches a fused solve onto
             # the spin-sharded driver — trajectory-identical by contract.
@@ -658,6 +763,60 @@ class FusedBackend(Backend):
                 problem, seed, config, mesh=mesh, chunk_steps=chunk_steps)
         store = self.prepare(problem, config, fmt=fmt, store=store)
         return FusedRunner(problem, seed, config, store, chunk_steps)
+
+
+class ColoredBackend(Backend):
+    name = "colored"
+    capabilities = Capabilities(
+        edge_list=True, needs_mesh=False, supports_store=False,
+        supports_resume=True, tier_fallback=True, fixed_fmt=None,
+        summary="graph-colored block updates — one conflict-graph color "
+                "class per step, O(N/χ) flips on sparse instances")
+
+    def config_cls(self):
+        return SolverConfig
+
+    def matches_config(self, config) -> bool:
+        return (isinstance(config, SolverConfig)
+                and config.flip_mode == "colored")
+
+    def _check(self, config, store) -> None:
+        if getattr(config, "flip_mode", None) != "colored":
+            raise ValueError(
+                f"backend 'colored' serves flip_mode='colored' configs, got "
+                f"{getattr(config, 'flip_mode', None)!r}")
+        if store is not None:
+            # A prebuilt store was encoded from the ORIGINAL spin order; the
+            # colored path runs in color-sorted order, so accepting it would
+            # silently corrupt trajectories. The plan (coloring + permuted
+            # store) is the colored path's memoization unit instead — pass it
+            # to ops.colored_anneal directly.
+            raise ValueError(
+                "backend='colored' rebuilds its store in color-sorted spin "
+                "order; a prebuilt CouplingStore (original order) cannot be "
+                "reused — memoize the ops.colored_plan instead")
+
+    def prepare(self, problem, config, *, mesh=None, fmt=None, store=None):
+        from ..kernels import ops as _ops
+        self._check(config, store)
+        return _ops.colored_plan(problem,
+                                 fmt if fmt is not None
+                                 else config.coupling_format)
+
+    def run(self, problem, seed, config, *, mesh=None, store=None):
+        from ..kernels import ops as _ops
+        self.check_config(config)
+        self._check(config, store)
+        return _ops.colored_anneal(problem, seed, config)
+
+    def runner(self, problem, seed, config, *, mesh=None, chunk_steps=256,
+               fmt=None, store=None):
+        if fmt == "bitplane_sharded":
+            raise ValueError(
+                "the colored path has no spin-sharded tier — the tier "
+                "ladder ends at bitplane_hbm for backend='colored'")
+        plan = self.prepare(problem, config, fmt=fmt, store=store)
+        return ColoredRunner(problem, seed, config, plan, chunk_steps)
 
 
 class TemperingBackend(Backend):
@@ -698,6 +857,10 @@ class ShardedBackend(Backend):
     def config_cls(self):
         return SolverConfig
 
+    def matches_config(self, config) -> bool:
+        return (isinstance(config, SolverConfig)
+                and config.flip_mode == "single")
+
     def prepare(self, problem, config, *, mesh=None, fmt=None, store=None):
         from ..distributed import solver_sharded as _ss
         if mesh is None:
@@ -707,6 +870,7 @@ class ShardedBackend(Backend):
     def run(self, problem, seed, config, *, mesh=None, store=None):
         from ..distributed import solver_sharded as _ss
         self.check_config(config)
+        _require_single_flip(config, self.name)
         if mesh is None:
             raise ValueError("backend='sharded' needs a mesh")
         if store is not None:
@@ -718,6 +882,7 @@ class ShardedBackend(Backend):
 
     def runner(self, problem, seed, config, *, mesh=None, chunk_steps=256,
                fmt=None, store=None):
+        _require_single_flip(config, self.name)
         if mesh is None:
             raise ValueError("the bitplane_sharded tier needs a mesh")
         return ShardedRunner(problem, seed, config, mesh, chunk_steps)
@@ -755,6 +920,7 @@ class DistributedBackend(Backend):
 
 register(ReferenceBackend())
 register(FusedBackend())
+register(ColoredBackend())
 register(TemperingBackend())
 register(ShardedBackend())
 register(DistributedBackend())

@@ -42,6 +42,12 @@ class SolverConfig:
     num_replicas: int = 8
     trace_every: int = 0            # 0 disables the energy trace
     coupling_format: str = "auto"   # fused-backend J store; see COUPLING_FORMATS
+    #: "single" = one spin per replica per step (the paper's async update);
+    #: "colored" = one conflict-graph color class per step — O(N/χ) flips on
+    #: sparse instances with exact block-Gibbs semantics (ROADMAP item 3,
+    #: DESIGN.md §Graph-colored parallel flips). Served by the "colored"
+    #: backend; the selection-mode knobs (mode/uniformized) don't apply there.
+    flip_mode: str = "single"       # "single" | "colored"
 
 
 class SolveResult(NamedTuple):

@@ -43,6 +43,11 @@ class TemperingConfig:
     use_pwl: bool = True
     backend: str = "reference"   # "reference" | "fused"
     coupling_format: str = "auto"  # fused-backend J store; COUPLING_FORMATS
+    #: Tempering moves are single-spin by construction (the swap-acceptance
+    #: argument of §IV-A is about one-flip chains); the field exists so the
+    #: knob is uniform across configs and "colored" is rejected loudly here
+    #: instead of silently running single-flip chains.
+    flip_mode: str = "single"    # "single" only
 
     @property
     def ladder(self) -> np.ndarray:
@@ -216,6 +221,11 @@ def solve_tempering(problem: ising.IsingProblem, seed,
     repeated ladder sweeps of one instance skip the re-resolve→re-encode
     (fused backend only — the reference chains consume the dense J).
     """
+    if config.flip_mode != "single":
+        raise ValueError(
+            f"tempering runs single-flip chains only (flip_mode="
+            f"{config.flip_mode!r}); colored block updates are served by "
+            "solve(..., backend='colored') on a SolverConfig")
     if config.backend == "fused":
         from .coupling import KERNEL_COUPLING_MODES, CouplingStore
         if store is None:

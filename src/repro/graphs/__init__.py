@@ -1,5 +1,7 @@
 from .maxcut import MaxCutInstance, maxcut_to_ising, maxcut_edges_to_ising, cut_value  # noqa: F401
 from .generators import (erdos_renyi, small_world, torus_grid,  # noqa: F401
-                         complete_bipolar, sparse_bipolar_edges)
+                         torus_grid_edges, complete_bipolar,
+                         sparse_bipolar_edges)
+from .coloring import Coloring, greedy_coloring  # noqa: F401
 from .qubo import qubo_to_ising, ising_to_qubo  # noqa: F401
 from .gset import parse_gset, parse_gset_edges, GSET_SAMPLE  # noqa: F401

@@ -59,6 +59,35 @@ def sparse_bipolar_edges(n: int, num_edges: int, seed: int = 0):
     return EdgeList.create(key // n, key % n, w, n)
 
 
+def torus_grid_edges(rows: int, cols: int, seed: int = 0,
+                     signed: bool = True):
+    """2D periodic torus (G11/G62 family) as a canonical
+    ``core.ising.EdgeList`` — the deterministic known-χ instance for the
+    colored execution mode: with both dimensions even the torus is
+    bipartite, so ``graphs.coloring.greedy_coloring`` returns exactly two
+    color classes of N/2 spins each (the checkerboard), and a colored sweep
+    flips O(N/2) spins per step. Dense-J-free from birth (O(N) edges, no
+    (N, N) mask — scales to the N=16k benches). Edge weights are ±1 drawn
+    from the same PCG64 stream family as the dense generators (``signed=
+    False`` gives the uniform ferromagnet, weight +1)."""
+    from ..core.ising import EdgeList
+
+    if rows < 3 or cols < 3:
+        raise ValueError(f"torus needs rows, cols >= 3, got {rows}x{cols} "
+                         "(smaller dims collapse wrap-around edges)")
+    rng = _rng(seed)
+    n = rows * cols
+    idx = np.arange(n, dtype=np.int64)
+    r, c = idx // cols, idx % cols
+    down = ((r + 1) % rows) * cols + c
+    right = r * cols + (c + 1) % cols
+    i = np.concatenate([idx, idx])
+    j = np.concatenate([down, right])
+    w = (rng.choice(np.array([-1, 1], np.int64), size=i.size) if signed
+         else np.ones(i.size, np.int64))
+    return EdgeList.create(i, j, w, n)
+
+
 def small_world(n: int, k: int, rewire_p: float = 0.1, seed: int = 0,
                 signed: bool = True, name: str = "sw") -> MaxCutInstance:
     """Watts–Strogatz ring lattice with rewiring (G18/G64 family)."""

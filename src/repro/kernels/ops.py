@@ -296,6 +296,235 @@ def _fused_anneal_impl(problem: ising.IsingProblem, seed: jax.Array,
     )
 
 
+class ColoredPlan:
+    """Host-side execution plan for the colored sweep: the coloring, the
+    color-permuted problem, and the static window math the kernel schedule is
+    built from. Built once per (problem, format) by :func:`colored_plan`;
+    the permuted spin order is ``coloring.perm`` and results map back through
+    ``coloring.inverse_perm``.
+
+    Window math: with ``lane = common.default_lane(n)`` the static class
+    window is ``S = min(n, roundup(max_class_size + lane - 1, lane))`` and
+    class c starts its window at ``w_c = min((offsets[c] // lane)·lane,
+    n - S)``. Coverage: ``w_c ≤ offsets[c]`` (floor) and ``w_c + S ≥
+    offsets[c] - (lane-1) + (size_c + lane - 1) = offsets[c] + size_c``, so
+    every class fits its lane-aligned window.
+    """
+
+    def __init__(self, coloring, problem: ising.IsingProblem, fmt,
+                 num_planes: Optional[int] = None):
+        from .common import default_lane
+
+        n = problem.num_spins
+        self.coloring = coloring
+        perm = coloring.perm
+        inv = coloring.inverse_perm
+        if problem.edges is not None:
+            pedges = ising.EdgeList.create(
+                inv[problem.edges.rows], inv[problem.edges.cols],
+                problem.edges.weights, n)
+            self.problem = ising.IsingProblem.create_sparse(
+                pedges, h=problem.fields[jnp.asarray(perm)],
+                offset=problem.offset)
+        else:
+            p = jnp.asarray(perm)
+            self.problem = ising.IsingProblem.create(
+                problem.couplings[p][:, p], h=problem.fields[p],
+                offset=problem.offset, check=False)
+        self.store = CouplingStore.build(self.problem.coupling_source, fmt,
+                                         num_planes=num_planes)
+        self.store.require(KERNEL_COUPLING_MODES, "colored_anneal")
+        lane = default_lane(n)
+        import numpy as _np
+
+        max_class = coloring.max_class_size
+        self.window = min(n, -(-(max_class + lane - 1) // lane) * lane)
+        offs = coloring.offsets[:-1]
+        w = _np.minimum((offs // lane) * lane, n - self.window)
+        self.wstarts = jnp.asarray(w, jnp.int32)
+        self.offsets = jnp.asarray(offs, jnp.int32)
+        self.sizes = jnp.asarray(coloring.class_sizes, jnp.int32)
+
+    # Registered as a pytree (coloring + static window in aux — Coloring is
+    # content-hashed, so jit caches key on coloring identity) so the jitted
+    # anneal impl takes the plan whole.
+    def tree_flatten(self):
+        return ((self.problem, self.store, self.wstarts, self.offsets,
+                 self.sizes), (self.coloring, self.window))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        plan = cls.__new__(cls)
+        (plan.problem, plan.store, plan.wstarts, plan.offsets,
+         plan.sizes) = children
+        plan.coloring, plan.window = aux
+        return plan
+
+
+jax.tree_util.register_pytree_node_class(ColoredPlan)
+
+
+def colored_plan(problem: ising.IsingProblem, fmt: str = "auto",
+                 num_planes: Optional[int] = None) -> ColoredPlan:
+    """Coloring + permutation + store for a colored solve of ``problem``.
+
+    The greedy coloring runs on the conflict graph of
+    ``problem.coupling_source`` (memoized per edge-list digest), the problem
+    and its coupling store are rebuilt in color-sorted spin order (classes
+    contiguous — the kernel schedules one contiguous window per step), and
+    the lane-aligned window schedule is precomputed. Dense-J-free for
+    edge-list problems end to end: coloring is O(N + nnz) over the COO
+    edges and the permuted store runs the O(nnz) sparse encoder.
+    """
+    from ..graphs.coloring import greedy_coloring
+
+    return ColoredPlan(greedy_coloring(problem.coupling_source), problem, fmt,
+                       num_planes=num_planes)
+
+
+def colored_sweep_chunk(couplings, state, chunk_key: jax.Array,
+                        num_steps: int, temps: jax.Array, sched: jax.Array, *,
+                        window: int, pwl_table: Optional[jax.Array] = None,
+                        block_r: int = 8, coupling: str = "dense",
+                        with_rows_fetched: bool = False,
+                        interpret: bool = False):
+    """One colored sweep chunk + best-so-far merge — the colored counterpart
+    of :func:`fused_sweep_chunk`, with the identical 6-tuple state contract
+    (snapshot/resume) and per-chunk ``Salt.SWEEP`` uniform stream. The chunk
+    draws ``(num_steps, R, window)`` accept uniforms (one per window slot —
+    the colored analogue of the single-flip path's 4 streams/step); ``sched``
+    is the (num_steps, 3) class schedule from the plan arrays."""
+    u, s, e, be, bs, nf = state
+    r = e.shape[0]
+    uniforms = rng.uniform01(chunk_key, (num_steps, r, window))
+    u, s, e, ce, cs, cf, rf = _sweep.colored_sweep(
+        couplings, u, s, e, uniforms, temps, sched, pwl_table,
+        coupling=coupling, block_r=block_r, interpret=interpret)
+    better = ce < be
+    state = (u, s, e, jnp.where(better, ce, be),
+             jnp.where(better[:, None], cs, bs), nf + cf)
+    return (state, rf) if with_rows_fetched else state
+
+
+def colored_class_schedule(wstarts: jax.Array, offsets: jax.Array,
+                           sizes: jax.Array, steps: jax.Array) -> jax.Array:
+    """(T, 3) int32 kernel schedule for absolute step indices ``steps``:
+    round-robin over the χ color classes keyed on the *global* step, so a
+    chunked/resumed trajectory visits the identical class sequence as one
+    monolithic run (the colored leg of the resume-parity contract)."""
+    cls = (steps % wstarts.shape[0]).astype(jnp.int32)
+    return jnp.stack([jnp.take(wstarts, cls), jnp.take(offsets, cls),
+                      jnp.take(sizes, cls)], axis=1)
+
+
+def colored_chunk_step(plan: ColoredPlan, state, base: jax.Array,
+                       c: jax.Array, *, clen: int, chunk_len: int,
+                       config: SolverConfig, block_r: int, interpret: bool,
+                       with_rows_fetched: bool = False):
+    """One annealing chunk of the colored trajectory — the single chunk body
+    under ``_colored_anneal_impl``'s scan AND the resilient supervisor's
+    per-chunk jit, mirroring :func:`anneal_chunk_step` (same temps tensor,
+    same per-chunk ``Salt.SWEEP`` stream), so chunked resume is bit-identical
+    to the uninterrupted scan."""
+    r = config.num_replicas
+    steps = c * chunk_len + jnp.arange(clen)
+    temps = jax.vmap(config.schedule)(steps).astype(jnp.float32)
+    temps = jnp.broadcast_to(temps[:, None], (clen, r))
+    sched = colored_class_schedule(plan.wstarts, plan.offsets, plan.sizes,
+                                   steps)
+    return colored_sweep_chunk(
+        plan.store.kernel_operand, state,
+        rng.stream(base, rng.Salt.SWEEP, c), clen, temps, sched,
+        window=plan.window, pwl_table=solver_pwl_table(config),
+        block_r=fit_block(r, block_r), coupling=plan.store.fmt,
+        with_rows_fetched=with_rows_fetched, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("config", "chunk_steps", "block_r",
+                                   "interpret"))
+def _colored_anneal_run(plan: ColoredPlan, seed: jax.Array,
+                        config: SolverConfig, chunk_steps: int, block_r: int,
+                        interpret: bool) -> SolveResult:
+    problem = plan.problem
+    r = config.num_replicas
+    base = jax.random.fold_in(jax.random.key(0), seed)
+    init = fused_init_state(problem, base, r, interpret=interpret,
+                            block_r=block_r, planes=plan.store.planes)
+    chunk_len, num_chunks, rem_steps = anneal_chunk_plan(config, chunk_steps)
+
+    def chunk(carry, c, clen):
+        state, rows = carry
+        state, rf = colored_chunk_step(plan, state, base, c, clen=clen,
+                                       chunk_len=chunk_len, config=config,
+                                       block_r=block_r, interpret=interpret,
+                                       with_rows_fetched=True)
+        return (state, rows + rf), state[3]
+
+    init = (init, jnp.zeros((r,), jnp.int32))
+    ((u, s, e, be, bs, nf), rows), trace = jax.lax.scan(
+        partial(chunk, clen=chunk_len), init, jnp.arange(num_chunks))
+    if rem_steps:
+        ((u, s, e, be, bs, nf), rows), _ = chunk(
+            ((u, s, e, be, bs, nf), rows), jnp.int32(num_chunks),
+            clen=rem_steps)
+    return SolveResult(
+        best_energy=be + problem.offset,
+        best_spins=bs.astype(jnp.int8),
+        final_energy=e + problem.offset,
+        num_flips=nf,
+        trace_energy=((trace + problem.offset).astype(jnp.float32)
+                      if config.trace_every else jnp.zeros((0, r), jnp.float32)),
+        rows_fetched=rows,
+    )
+
+
+def unpermute_spins(plan: ColoredPlan, spins: jax.Array) -> jax.Array:
+    """Map (..., N) permuted-order spins back to original vertex order
+    (``s_orig[..., i] = s_perm[..., inverse_perm[i]]``)."""
+    return spins[..., jnp.asarray(plan.coloring.inverse_perm)]
+
+
+def colored_anneal(problem: ising.IsingProblem, seed, config: SolverConfig,
+                   *, chunk_steps: int = 256, block_r: int = 8,
+                   coupling: Optional[str] = None,
+                   num_planes: Optional[int] = None,
+                   interpret: Optional[bool] = None,
+                   plan: Optional[ColoredPlan] = None) -> SolveResult:
+    """Graph-colored annealing driver (``SolverConfig(flip_mode="colored")``).
+
+    Flips one conflict-graph color class per step — every class member takes
+    an independent heat-bath flip off the live local fields, exact block
+    Gibbs because same-color spins share no coupling — so sparse instances
+    do O(N/χ) flips per kernel step instead of 1 (ROADMAP item 3, DESIGN.md
+    §Graph-colored parallel flips). The selection-mode knobs
+    (``config.mode``/``uniformized``) do not enter colored semantics; PWL vs
+    exact flip probability, the schedule, trace cadence, ``num_flips`` and
+    ``rows_fetched`` telemetry all behave as in :func:`fused_anneal`.
+
+    ``plan`` takes a prebuilt :func:`colored_plan` so repeated solves of one
+    instance (TTS sweeps, benchmarks) skip the coloring + permutation +
+    store encode; ``coupling`` overrides ``config.coupling_format`` when no
+    plan is passed. Results are reported in the original vertex order — the
+    color-sorted permutation is internal.
+    """
+    if config.flip_mode != "colored":
+        raise ValueError(
+            f"colored_anneal serves flip_mode='colored' configs, got "
+            f"{config.flip_mode!r} — use fused_anneal / solve()")
+    if plan is None:
+        plan = colored_plan(
+            problem, coupling if coupling is not None
+            else config.coupling_format, num_planes=num_planes)
+    elif coupling is not None:
+        raise ValueError("pass a prebuilt plan= or a coupling= override, "
+                         "not both")
+    result = _colored_anneal_run(plan, jnp.asarray(seed, jnp.uint32), config,
+                                 chunk_steps, block_r,
+                                 auto_interpret(interpret))
+    return result._replace(best_spins=unpermute_spins(plan,
+                                                      result.best_spins))
+
+
 def fused_anneal(problem: ising.IsingProblem, seed, config: SolverConfig,
                  *, chunk_steps: int = 256, block_r: int = 8,
                  gather: str = "dynamic",
@@ -340,6 +569,11 @@ def fused_anneal(problem: ising.IsingProblem, seed, config: SolverConfig,
     O(nnz) sparse encoder — the dense (N, N) matrix is never materialized
     anywhere on this path.
     """
+    if config.flip_mode != "single":
+        raise ValueError(
+            f"fused_anneal runs single-flip sweeps (flip_mode="
+            f"{config.flip_mode!r}); colored block updates are served by "
+            "colored_anneal / the 'colored' backend")
     if store is not None:
         if coupling is not None:
             raise ValueError("pass a prebuilt store= or a coupling= override, "

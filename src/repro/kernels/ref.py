@@ -33,6 +33,97 @@ def bitplane_field_init(pos: jax.Array, neg: jax.Array, spin_words: jax.Array,
     return jnp.einsum("b,rbn->rn", w, contrib.astype(jnp.float32))
 
 
+def colored_sweep(couplings, fields0: jax.Array, spins0: jax.Array,
+                  energy0: jax.Array, uniforms: jax.Array, temps: jax.Array,
+                  sched: jax.Array, pwl_table: jax.Array | None = None, *,
+                  block_r: int = 8):
+    """Exact-semantics oracle for ``kernels.sweep.colored_sweep``.
+
+    Same contract: spins in color-sorted order, ``sched`` (T, 3) int32 rows of
+    (window_start, class_offset, class_size), ``uniforms`` (T, R, S) accept
+    streams over the static class window S. Per step every member of the
+    scheduled class takes an independent heat-bath flip off the live local
+    fields (exact block Gibbs — same-color spins share no coupling), then the
+    accepted subset's rank-1 row updates are applied slot by slot through the
+    same row decode as the single-flip oracle. The kernel gates each slot's
+    fetch+FMA on "any replica in the *block* accepted", so the oracle takes
+    ``block_r`` and reproduces the identical block-shaped select — parity
+    tests require trajectory-exact agreement on all 7 outputs, including the
+    coalesced ``rows_fetched`` attribution (one count per fetched row, on the
+    block's lowest-index accepting replica). Returns (fields, spins, energy,
+    best_energy, best_spins, num_flips, rows_fetched).
+    """
+    from . import common  # local import: ref stays importable standalone
+    from ..core.bitplane import BitPlanes
+
+    if isinstance(couplings, BitPlanes):
+        n = couplings.num_spins
+        pos, neg = couplings.pos, couplings.neg
+
+        def fetch_row(jr):  # scalar site -> (1, N) f32 decoded coupling row
+            return common.decode_bitplane_rows(
+                jax.lax.dynamic_slice_in_dim(pos, jr, 1, axis=1),
+                jax.lax.dynamic_slice_in_dim(neg, jr, 1, axis=1), n)
+    else:
+        n = couplings.shape[0]
+        J = couplings.astype(jnp.float32)
+
+        def fetch_row(jr):
+            return jax.lax.dynamic_slice_in_dim(J, jr, 1, axis=0)
+
+    r = fields0.shape[0]
+    br = common.fit_block(r, block_r)
+    g = r // br
+    win = uniforms.shape[2]
+    ids = jnp.arange(br, dtype=jnp.int32)
+
+    def body(carry, xs):
+        u, s, e, be, bs, nf, rf = carry
+        u01, temp, row_sched = xs            # (R, S), (R,), (3,)
+        w, off, size = row_sched[0], row_sched[1], row_sched[2]
+        u_win = jax.lax.dynamic_slice(u, (0, w), (r, win))
+        s_win = jax.lax.dynamic_slice(s, (0, w), (r, win))
+        de = 2.0 * s_win * u_win
+        p = common.flip_probability(de, temp[:, None], pwl_table)
+        idx = jax.lax.broadcasted_iota(jnp.int32, (r, win), 1) + w
+        valid = (idx >= off) & (idx < off + size)
+        accept = (u01 < p) & valid
+        acc_f = accept.astype(jnp.float32)
+        e = e + jnp.sum(acc_f * de, axis=1)
+        nf = nf + jnp.sum(accept.astype(jnp.int32), axis=1)
+        s = jax.lax.dynamic_update_slice(s, s_win * (1.0 - 2.0 * acc_f),
+                                         (0, w))
+
+        def apply_slot(k, carry):
+            u, rf = carry
+            acc_k = jax.lax.dynamic_slice(acc_f, (0, k), (r, 1))   # (R, 1)
+            s_old_k = jax.lax.dynamic_slice(s_win, (0, k), (r, 1))
+            acc_b = acc_k.reshape(g, br)
+            anyacc = jnp.sum(acc_b, axis=1) > 0.0                  # (G,)
+            row = fetch_row(w + k)                                 # (1, N)
+            gate = jnp.repeat(anyacc, br)[:, None]
+            u = jnp.where(gate, u - (2.0 * acc_k * s_old_k) * row, u)
+            first = jnp.min(jnp.where(acc_b > 0.0, ids[None, :], br), axis=1)
+            hit = anyacc[:, None] & (ids[None, :] == first[:, None])
+            return u, rf + hit.reshape(r).astype(jnp.int32)
+
+        lo = off - w
+        u, rf = jax.lax.fori_loop(lo, lo + size, apply_slot, (u, rf))
+        better = e < be
+        be = jnp.where(better, e, be)
+        bs = jnp.where(better[:, None], s, bs)
+        return (u, s, e, be, bs, nf, rf), None
+
+    init = (fields0.astype(jnp.float32), spins0.astype(jnp.float32),
+            energy0.astype(jnp.float32), energy0.astype(jnp.float32),
+            spins0.astype(jnp.float32), jnp.zeros((r,), jnp.int32),
+            jnp.zeros((r,), jnp.int32))
+    (u, s, e, be, bs, nf, rf), _ = jax.lax.scan(
+        body, init, (uniforms, temps, sched.astype(jnp.int32)))
+    return (u, s.astype(spins0.dtype), e, be, bs.astype(spins0.dtype),
+            nf, rf)
+
+
 def mcmc_sweep(couplings, fields0: jax.Array, spins0: jax.Array,
                energy0: jax.Array, uniforms: jax.Array, temps: jax.Array,
                pwl_table: jax.Array | None = None, *, mode: str = "rsa",

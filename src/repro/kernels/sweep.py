@@ -350,6 +350,205 @@ def _kernel(*refs, num_steps: int, mode: str, uniformized: bool,
     rf_out[...] = rf[:, None]
 
 
+def _colored_kernel(*refs, num_steps: int, has_pwl: bool, coupling: str):
+    """Graph-colored block sweep: per step, every spin of the scheduled color
+    class accepts an independent heat-bath flip off the live local fields,
+    then the accepted subset's rank-1 field updates are applied through the
+    same per-row fetch/decode the single-flip kernel uses. Same-color spins
+    share no coupling, so the ΔE computed at step start stays valid at every
+    member site regardless of apply order — exact block Gibbs (DESIGN.md
+    §Graph-colored parallel flips). The selection-mode knob (rsa/rwa/
+    uniformized) does not enter: class membership replaces spin selection,
+    so colored trajectories are mode-independent by construction.
+
+    The driver hands the class schedule as a (T, 3) int32 ``sched`` tensor —
+    per step the lane-aligned window start ``w``, the class offset, and the
+    class size in the color-sorted (permuted) spin order — so the kernel
+    slices one static-width window per step and masks to the live class.
+    """
+    streamed = coupling == "bitplane_hbm"
+    if streamed:
+        pos_scr, neg_scr, row_sems = refs[-3:]
+        refs = refs[:-3]
+    num_j = 2 if coupling in PLANE_MODES else 1
+    j_refs = refs[:num_j]
+    (u0_ref, s0_ref, e0_ref, unif_ref, temp_ref,
+     sched_ref) = refs[num_j:num_j + 6]
+    if has_pwl:
+        pwl_ref = refs[num_j + 6]
+        tbl = pwl_ref[...].astype(jnp.float32)
+    else:
+        tbl = None
+    (u_out, s_out, e_out, be_out, bs_out, nf_out,
+     rf_out) = refs[num_j + 6 + int(has_pwl):]
+    n = u0_ref.shape[1]
+    br = u0_ref.shape[0]
+    win = unif_ref.shape[2]
+
+    def fetch_row(jr):
+        """(1, N) f32 coupling row jr — identical decode to the single-flip
+        kernel, so the colored oracle can require bit-exact trajectories."""
+        if coupling == "bitplane":
+            pos_ref, neg_ref = j_refs
+            return common.decode_bitplane_rows(
+                pos_ref[:, pl.ds(jr, 1), :], neg_ref[:, pl.ds(jr, 1), :], n)
+        if streamed:
+            pos_ref, neg_ref = j_refs
+            dmas = (pltpu.make_async_copy(pos_ref.at[:, pl.ds(jr, 1), :],
+                                          pos_scr.at[0], row_sems.at[0, 0]),
+                    pltpu.make_async_copy(neg_ref.at[:, pl.ds(jr, 1), :],
+                                          neg_scr.at[0], row_sems.at[0, 1]))
+            for dma in dmas:
+                dma.start()
+            for dma in dmas:
+                dma.wait()
+            return common.decode_bitplane_rows(pos_scr[0], neg_scr[0], n)
+        return j_refs[0][pl.ds(jr, 1), :].astype(jnp.float32)
+
+    u = u0_ref[...].astype(jnp.float32)
+    s = s0_ref[...].astype(jnp.float32)
+    e = e0_ref[...].astype(jnp.float32)[:, 0]
+
+    def step(t, carry):
+        u, s, e, be, bs, nf, rf = carry
+        temp = temp_ref[t]                       # (br,)
+        w = sched_ref[t, 0]
+        off = sched_ref[t, 1]
+        size = sched_ref[t, 2]
+        u_win = jax.lax.dynamic_slice(u, (0, w), (br, win))
+        s_win = jax.lax.dynamic_slice(s, (0, w), (br, win))
+        de = 2.0 * s_win * u_win
+        p = common.flip_probability(de, temp[:, None], tbl)
+        idx = jax.lax.broadcasted_iota(jnp.int32, (br, win), 1) + w
+        valid = (idx >= off) & (idx < off + size)
+        accept = (unif_ref[t] < p) & valid
+        acc_f = accept.astype(jnp.float32)
+        e = e + jnp.sum(acc_f * de, axis=1)
+        nf = nf + jnp.sum(accept.astype(jnp.int32), axis=1)
+        s = jax.lax.dynamic_update_slice(s, s_win * (1.0 - 2.0 * acc_f),
+                                         (0, w))
+
+        def apply_slot(k, carry):
+            # One class member per iteration: fetch its row once — the fetch
+            # is shared by every replica, cross-replica coalescing for free —
+            # and FMA it into all br field rows, gated so idle slots cost
+            # nothing (and the streamed tier skips the DMA entirely).
+            u, rf = carry
+            acc_k = jax.lax.dynamic_slice(acc_f, (0, k), (br, 1))  # (br, 1)
+            s_old_k = jax.lax.dynamic_slice(s_win, (0, k), (br, 1))
+            anyacc = jnp.sum(acc_k) > 0.0
+
+            def do(carry):
+                u, rf = carry
+                row = fetch_row(w + k)                 # (1, N)
+                u = u - (2.0 * acc_k * s_old_k) * row
+                # Attribute the single shared fetch to the lowest-index
+                # accepting replica (the coalesce_rows convention), so the
+                # block sum of rf is the true unique-row traffic.
+                ids = jax.lax.broadcasted_iota(jnp.int32, (br, 1), 0)
+                first = jnp.min(jnp.where(acc_k > 0.0, ids, br))
+                return u, rf + (ids[:, 0] == first).astype(jnp.int32)
+
+            return jax.lax.cond(anyacc, do, lambda c: c, (u, rf))
+
+        lo = off - w
+        u, rf = jax.lax.fori_loop(lo, lo + size, apply_slot, (u, rf))
+        better = e < be
+        be = jnp.where(better, e, be)
+        bs = jnp.where(better[:, None], s, bs)
+        return (u, s, e, be, bs, nf, rf)
+
+    init = (u, s, e, e, s, jnp.zeros((br,), jnp.int32),
+            jnp.zeros((br,), jnp.int32))
+    u, s, e, be, bs, nf, rf = jax.lax.fori_loop(0, num_steps, step, init)
+    u_out[...] = u
+    s_out[...] = s.astype(s_out.dtype)
+    e_out[...] = e[:, None]
+    be_out[...] = be[:, None]
+    bs_out[...] = bs.astype(bs_out.dtype)
+    nf_out[...] = nf[:, None]
+    rf_out[...] = rf[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("coupling", "block_r",
+                                             "interpret"))
+def colored_sweep(couplings, fields0: jax.Array, spins0: jax.Array,
+                  energy0: jax.Array, uniforms: jax.Array, temps: jax.Array,
+                  sched: jax.Array, pwl_table: Optional[jax.Array] = None, *,
+                  coupling: str = "dense", block_r: int = 8,
+                  interpret: bool = False):
+    """T graph-colored block-update steps for R replicas.
+
+    The colored counterpart of :func:`mcmc_sweep`: state and coupling-store
+    contracts are identical (same 7 outputs, same ``_STORE_LAYOUTS`` tiers,
+    same decode, no ``dot_general``), but each step updates the whole
+    scheduled color class instead of selecting one spin. Spins must already
+    be in color-sorted (permuted) order — ``kernels.ops.colored_anneal``
+    owns the permutation. ``uniforms`` is (T, R, S) with S the static
+    lane-aligned class window; ``sched`` is (T, 3) int32 rows of
+    ``(window_start, class_offset, class_size)`` per step. ``rows_fetched``
+    counts each fetched coupling row once, attributed to the lowest-index
+    accepting replica (the row fetch is shared across replicas — colored
+    mode is coalesced by construction on every tier).
+    """
+    r, n = fields0.shape
+    t = uniforms.shape[0]
+    win = uniforms.shape[2]
+    assert spins0.shape == (r, n)
+    assert uniforms.shape == (t, r, win) and temps.shape == (t, r)
+    assert sched.shape == (t, 3)
+    coupling_store.validate_kernel_operand(coupling, couplings, n, "dynamic")
+    br = common.fit_block(r, block_r)
+    grid = (r // br,)
+    in_specs, j_args, scratch_shapes = _STORE_LAYOUTS[coupling](
+        couplings, n, br, False)
+    if coupling == "bitplane_hbm":
+        # The colored fetch is cond-gated (no double-buffer overlap), so only
+        # the 2-slot tile scratch + semaphores of the layout are consumed.
+        scratch_shapes = scratch_shapes[:3]
+    in_specs = in_specs + [
+        pl.BlockSpec((br, n), lambda i: (i, 0)),         # u0
+        pl.BlockSpec((br, n), lambda i: (i, 0)),         # s0
+        pl.BlockSpec((br, 1), lambda i: (i, 0)),         # e0
+        pl.BlockSpec((t, br, win), lambda i: (0, i, 0)),  # uniforms
+        pl.BlockSpec((t, br), lambda i: (0, i)),         # temps
+        pl.BlockSpec((t, 3), lambda i: (0, 0)),          # class schedule
+    ]
+    args = j_args + [fields0, spins0, energy0.reshape(r, 1), uniforms, temps,
+                     sched.astype(jnp.int32)]
+    if pwl_table is not None:
+        in_specs.append(pl.BlockSpec(pwl_table.shape, lambda i: (0, 0)))
+        args.append(pwl_table)
+    outs = pl.pallas_call(
+        functools.partial(_colored_kernel, num_steps=t,
+                          has_pwl=pwl_table is not None, coupling=coupling),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, n), jnp.float32),
+            jax.ShapeDtypeStruct((r, n), spins0.dtype),
+            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+            jax.ShapeDtypeStruct((r, n), spins0.dtype),
+            jax.ShapeDtypeStruct((r, 1), jnp.int32),
+            jax.ShapeDtypeStruct((r, 1), jnp.int32),
+        ],
+        scratch_shapes=scratch_shapes,
+        interpret=interpret,
+    )(*args)
+    u, s, e, be, bs, nf, rf = outs
+    return u, s, e[:, 0], be[:, 0], bs, nf[:, 0], rf[:, 0]
+
+
 @functools.partial(jax.jit, static_argnames=(
     "mode", "uniformized", "gather", "coupling", "block_r", "lane",
     "coalesce", "interpret"))

@@ -13,6 +13,7 @@ budgets, bit-identical resume — see DESIGN.md §Resilient solves):
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import numpy as np
@@ -57,6 +58,11 @@ def main():
     ap.add_argument("--steps", type=int, default=5000)
     ap.add_argument("--replicas", type=int, default=8)
     ap.add_argument("--engine", choices=("scan", "fused"), default="scan")
+    ap.add_argument("--flip-mode", choices=("single", "colored"),
+                    default="single",
+                    help="colored = one conflict-graph color class per step "
+                    "(O(N/χ) flips/step on sparse instances; runs under the "
+                    "resilient supervisor on the 'colored' backend)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--tts-threshold", type=float, default=None,
                     help="cut value for TTS(0.99) estimation")
@@ -83,13 +89,18 @@ def main():
     problem = maxcut_to_ising(inst)
     cfg = default_solver(inst.num_vertices, args.steps, mode=args.mode,
                          num_replicas=args.replicas)
-    resilient = (args.run_dir is not None
+    colored = args.flip_mode == "colored"
+    if colored:
+        cfg = dataclasses.replace(cfg, flip_mode="colored")
+    resilient = (colored
+                 or args.run_dir is not None
                  or args.deadline_seconds is not None
                  or args.target_energy is not None
                  or args.max_steps is not None)
     t0 = time.perf_counter()
     if resilient:
-        backend = "fused" if args.engine == "fused" else "reference"
+        backend = ("colored" if colored
+                   else "fused" if args.engine == "fused" else "reference")
         rr = run_resilient(
             problem, args.seed, cfg, run_dir=args.run_dir, backend=backend,
             budget=BudgetConfig(deadline_seconds=args.deadline_seconds,
@@ -117,6 +128,17 @@ def main():
         print(f"stop_reason={rr.stop_reason} steps_done={rr.steps_done}/"
               f"{args.steps} chunks={rr.chunks_done}/{rr.total_chunks}"
               f"{resumed}{downgraded}")
+    if colored:
+        from repro.graphs.coloring import greedy_coloring
+        col = greedy_coloring(problem.coupling_source)
+        steps_done = rr.steps_done if resilient else args.steps
+        flips = float(np.sum(np.asarray(result.num_flips)))
+        per_step = flips / max(steps_done, 1)
+        print(f"flip_mode=colored color_classes={col.num_classes} "
+              f"max_class={col.max_class_size} "
+              f"mean_class={col.num_spins / col.num_classes:.1f} "
+              f"flips/step={per_step:.1f} (ensemble, {args.replicas} "
+              f"replicas)")
     print(f"best cut = {cuts.max():.0f}  (per-replica: {np.sort(cuts)[::-1][:8]})")
     if args.tts_threshold:
         r = tts.estimate(-cuts, threshold=-args.tts_threshold,

@@ -101,7 +101,10 @@ class BatchPlan:
 
 def _group_key(req) -> tuple:
     # Stack-compatibility: same problem content + same config modulo the
-    # replica-axis width (which stacking itself determines).
+    # replica-axis width (which stacking itself determines). Every other
+    # config field splits the group — in particular ``flip_mode``: a colored
+    # request and a single-flip request run different kernels and must never
+    # share a launch's replica axis.
     return (req.problem_key,
             dataclasses.replace(req.config, num_replicas=1))
 

@@ -41,7 +41,8 @@ REPLICAS = 4
 #: Every execution path this repo ships. A new backend must register (the
 #: parametrized parity tests below pick it up from backend_names()); a
 #: removed one must be deliberately deleted here.
-EXPECTED = ("distributed", "fused", "reference", "sharded", "tempering")
+EXPECTED = ("colored", "distributed", "fused", "reference", "sharded",
+            "tempering")
 
 
 def _problem():
@@ -75,6 +76,8 @@ def _setup(name):
     elif name == "distributed":
         from repro.distributed.solver_dist import DistSolverConfig
         cfg = DistSolverConfig(base=_scfg(), exchange_every=2)
+    elif name == "colored":
+        cfg = dataclasses.replace(_scfg(), flip_mode="colored")
     else:
         cfg = _scfg()
     caps = get_backend(name).capabilities
@@ -137,6 +140,9 @@ class TestRoster:
         assert not caps["reference"].edge_list
         assert caps["fused"].edge_list and caps["fused"].tier_fallback
         assert caps["fused"].supports_store
+        assert caps["colored"].edge_list and caps["colored"].tier_fallback
+        assert not caps["colored"].supports_store  # plan replaces the store
+        assert not caps["colored"].needs_mesh
         assert caps["sharded"].needs_mesh
         assert caps["sharded"].fixed_fmt == "bitplane_sharded"
         assert caps["distributed"].needs_mesh
@@ -146,6 +152,9 @@ class TestRoster:
 
     def test_auto_resolves_from_config_type(self):
         assert resolve_backend(_scfg()) == "fused"
+        # flip_mode splits SolverConfig resolution unambiguously.
+        assert resolve_backend(
+            dataclasses.replace(_scfg(), flip_mode="colored")) == "colored"
         assert resolve_backend(_setup("tempering")[0]) == "tempering"
         dcfg, dmesh = _setup("distributed")
         assert resolve_backend(dcfg, mesh=dmesh) == "distributed"

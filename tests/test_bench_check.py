@@ -265,6 +265,62 @@ def test_check_flags_broken_row_traffic_points():
                for e in check_bench_history(broken))
 
 
+def test_committed_history_has_colored_point():
+    """The graph-colored throughput anchor: the N=16384 colored cell must
+    exist, colored flips/sec must land strictly above the single-flip
+    engine's recorded in the same run, and the per-step ensemble flip count
+    must respect the largest color class."""
+    payload = _load()
+    results = payload["results"]
+    assert "N16384_colored" in results, sorted(results)
+    cell = results["N16384_colored"]["rsa"]
+    assert cell["num_color_classes"] >= 2
+    assert cell["colored_flips_per_sec"] > cell["single_flips_per_sec"]
+    per_step = cell["colored_flips"] / (cell["colored_steps"]
+                                        * cell["num_replicas"])
+    assert 1.0 < per_step <= cell["max_class_size"]
+    assert cell["colored_us_per_flip"] < cell["single_us_per_flip"]
+    assert cell["steps_to_target_colored"] <= cell["colored_steps"]
+
+
+def test_check_flags_broken_colored_points():
+    """--check knows the colored schema: colored throughput at/under the
+    single-flip engine's, a per-step flip count above the largest class, a
+    degenerate one-class coloring, and missing columns all fail the gate."""
+    from benchmarks.run import check_colored_points
+
+    good = {
+        "N16384_colored": {"rsa": {
+            "num_replicas": 4, "num_color_classes": 11,
+            "max_class_size": 2932, "single_steps": 48, "colored_steps": 44,
+            "single_flips": 90, "colored_flips": 88000,
+            "single_flips_per_sec": 700.0, "colored_flips_per_sec": 30000.0,
+            "single_us_per_flip": 1400.0, "colored_us_per_flip": 33.0}},
+    }
+    assert check_colored_points(good) == []
+    slow = copy.deepcopy(good)
+    slow["N16384_colored"]["rsa"]["colored_flips_per_sec"] = 600.0
+    assert any("multiply flip throughput" in e
+               for e in check_colored_points(slow))
+    oversize = copy.deepcopy(good)
+    oversize["N16384_colored"]["rsa"]["colored_flips"] = 4 * 44 * 3000
+    assert any("outside the scheduled class" in e
+               for e in check_colored_points(oversize))
+    degenerate = copy.deepcopy(good)
+    degenerate["N16384_colored"]["rsa"]["num_color_classes"] = 1
+    assert any("proves nothing" in e for e in check_colored_points(degenerate))
+    incomplete = {"N16384_colored": {"rsa": {"num_replicas": 4}}}
+    assert any("needs positive numeric" in e
+               for e in check_colored_points(incomplete))
+    # ...and the full checker routes through the same validation.
+    payload = _load()
+    broken = copy.deepcopy(payload)
+    broken["history"][-1]["results"].update(copy.deepcopy(slow))
+    broken["results"] = broken["history"][-1]["results"]
+    assert any("multiply flip throughput" in e
+               for e in check_bench_history(broken))
+
+
 def test_check_flags_diverged_top_level_results():
     payload = _load()
     broken = copy.deepcopy(payload)

@@ -1,0 +1,224 @@
+"""Colored-sweep parity: the graph-colored Pallas kernel is trajectory-exact
+against its jnp oracle (``kernels.ref.colored_sweep``) on every coupling tier,
+and the colored driver's results are independent of the single-flip selection
+knobs (mode/uniformized) — class membership replaces spin selection, so those
+knobs must not enter colored semantics at all. This is the exactness anchor
+of DESIGN.md §Graph-colored parallel flips: colored trajectories deliberately
+diverge from the single-flip oracle, so correctness is kernel-vs-colored-
+oracle parity here plus the Boltzmann-law check in
+``test_statistical_correctness.py`` (-m slow)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import ising
+from repro.core.coupling import CouplingStore
+from repro.core.pwl import pwl_table
+from repro.core.schedules import geometric, linear
+from repro.core.solver import SolverConfig, solve
+from repro.graphs import sparse_bipolar_edges, torus_grid_edges
+from repro.graphs.coloring import greedy_coloring
+from repro.kernels import ops, ref
+from repro.kernels.sweep import colored_sweep as colored_kernel
+
+NAMES = ("fields", "spins", "energy", "best_energy", "best_spins",
+         "num_flips", "rows_fetched")
+
+
+def _plan_and_state(edges, r, t, seed, fmt):
+    """Permuted plan + a consistent (u0, s0, e0) ensemble + chunk operands."""
+    n = edges.num_spins
+    h = np.round(np.linspace(-2, 2, n)).astype(np.float32)
+    prob = ising.IsingProblem.create_sparse(edges, h=h)
+    plan = ops.ColoredPlan(greedy_coloring(edges), prob, fmt)
+    g = np.random.default_rng(seed)
+    J = np.asarray(plan.problem.edges.to_dense())
+    s0 = np.where(g.random((r, n)) < 0.5, 1.0, -1.0).astype(np.float32)
+    hp = np.asarray(plan.problem.fields)
+    u0 = (s0 @ J.T + hp[None, :]).astype(np.float32)
+    e0 = (-0.5 * np.einsum("ri,ri->r", s0, s0 @ J.T)
+          - s0 @ hp).astype(np.float32)
+    unif = g.random((t, r, plan.window)).astype(np.float32)
+    temps = np.broadcast_to(
+        np.geomspace(2.5, 0.05, t).astype(np.float32)[:, None], (t, r)).copy()
+    sched = np.asarray(ops.colored_class_schedule(
+        plan.wstarts, plan.offsets, plan.sizes, jnp.arange(t)))
+    return plan, tuple(map(jnp.asarray, (u0, s0, e0, unif, temps, sched)))
+
+
+EDGE_SETS = {
+    # Bipartite torus: χ=2, lane-aligned class offsets (the fast path).
+    "torus": lambda: torus_grid_edges(8, 8, seed=5),
+    # Non-bipartite ER: greedy χ>2 with ragged, non-lane-aligned offsets —
+    # exercises the window clamp and the validity mask.
+    "er": lambda: sparse_bipolar_edges(96, 400, seed=11),
+}
+
+
+@pytest.mark.parametrize("coupling", ["dense", "bitplane", "bitplane_hbm"])
+@pytest.mark.parametrize("graph", sorted(EDGE_SETS))
+@pytest.mark.parametrize("use_pwl", [False, True])
+def test_colored_kernel_matches_oracle_exactly(coupling, graph, use_pwl):
+    edges = EDGE_SETS[graph]()
+    fmt = "bitplane" if coupling == "dense" else coupling
+    plan, (u0, s0, e0, unif, temps, sched) = _plan_and_state(
+        edges, r=8, t=24, seed=3, fmt=fmt)
+    tbl = pwl_table() if use_pwl else None
+    if coupling == "dense":
+        operand = jnp.asarray(plan.problem.edges.to_dense())
+        oracle_operand = operand
+    else:
+        operand = CouplingStore.build(plan.problem.edges,
+                                      coupling).kernel_operand
+        oracle_operand = operand
+    got = colored_kernel(operand, u0, s0, e0, unif, temps, sched, tbl,
+                         coupling=coupling, block_r=4, interpret=True)
+    want = ref.colored_sweep(oracle_operand, u0, s0, e0, unif, temps, sched,
+                             tbl, block_r=4)
+    for name, a, b in zip(NAMES, got, want):
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            err_msg=f"{coupling}/{graph}/pwl={use_pwl}:{name}")
+    # Flips per step are bounded by the scheduled class's size, and the
+    # coalesced row count never exceeds total flips (one fetch serves all
+    # replicas accepting a member).
+    nf, rf = np.asarray(got[5]), np.asarray(got[6])
+    assert (rf <= nf).all() or nf.sum() == 0
+    assert nf.max() <= int(np.asarray(sched)[:, 2].sum())
+
+
+def test_colored_kernel_zero_temperature_is_monotone():
+    """T=0 colored steps are greedy (flip iff ΔE < 0 … with the flat-move
+    coin): chain energy must never increase, and kernel == oracle."""
+    edges = EDGE_SETS["torus"]()
+    plan, (u0, s0, e0, unif, temps, sched) = _plan_and_state(
+        edges, r=4, t=16, seed=9, fmt="bitplane")
+    temps = jnp.zeros_like(temps)
+    operand = CouplingStore.build(plan.problem.edges,
+                                  "bitplane").kernel_operand
+    got = colored_kernel(operand, u0, s0, e0, unif, temps, sched,
+                         coupling="bitplane", block_r=4, interpret=True)
+    want = ref.colored_sweep(operand, u0, s0, e0, unif, temps, sched,
+                             block_r=4)
+    for name, a, b in zip(NAMES, got, want):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32), err_msg=name)
+    assert (np.asarray(got[2]) <= np.asarray(e0) + 1e-4).all()
+
+
+def test_colored_kernel_warm_start_parity():
+    """State threaded through consecutive chunks (the driver's scan shape)
+    stays trajectory-exact — including the carried best-so-far."""
+    edges = EDGE_SETS["er"]()
+    plan, (u0, s0, e0, unif, temps, sched) = _plan_and_state(
+        edges, r=8, t=12, seed=1, fmt="bitplane_hbm")
+    operand = plan.store.kernel_operand
+    ks, os_ = (u0, s0, e0), (u0, s0, e0)
+    for c in range(3):
+        un = jnp.asarray(
+            np.random.default_rng(50 + c).random(unif.shape), jnp.float32)
+        got = colored_kernel(operand, *ks, un, temps, sched,
+                             coupling="bitplane_hbm", block_r=4,
+                             interpret=True)
+        want = ref.colored_sweep(operand, *os_, un, temps, sched, block_r=4)
+        ks, os_ = got[:3], want[:3]
+    for name, a, b in zip(NAMES, got, want):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32), err_msg=name)
+
+
+@pytest.mark.parametrize("mode,uniformized", [
+    ("rsa", False), ("rwa", False), ("rwa", True)])
+def test_colored_driver_is_mode_independent(mode, uniformized):
+    """Acceptance criterion: colored results are bit-identical across
+    rsa/rwa/uniformized — the selection knobs don't enter colored semantics
+    (the kernel takes no mode argument), so any knob combination must yield
+    the same trajectory as the rwa baseline."""
+    edges = torus_grid_edges(6, 8, seed=2)
+    prob = ising.IsingProblem.create_sparse(edges)
+    base = SolverConfig(240, linear(3.0, 0.1, 240), mode="rwa",
+                        num_replicas=4, trace_every=40, flip_mode="colored")
+    cfg = dataclasses.replace(base, mode=mode, uniformized=uniformized)
+    want = solve(prob, 11, base, backend="colored")
+    got = solve(prob, 11, cfg, backend="colored")
+    for name in ("best_energy", "best_spins", "final_energy", "num_flips",
+                 "trace_energy"):
+        np.testing.assert_array_equal(np.asarray(getattr(want, name)),
+                                      np.asarray(getattr(got, name)),
+                                      err_msg=f"{mode}/{uniformized}:{name}")
+
+
+def test_colored_driver_bookkeeping_and_tiers():
+    """End-to-end colored_anneal: reported best energies match the spins
+    they claim (on the ORIGINAL problem — the color permutation must
+    round-trip), the trace is monotone, and the VMEM/HBM plane tiers agree
+    bit-identically (the store is a layout choice, never a chain change)."""
+    edges = sparse_bipolar_edges(128, 512, seed=7)
+    prob = ising.IsingProblem.create_sparse(edges, offset=2.5)
+    cfg = SolverConfig(600, geometric(4.0, 0.05, 600), num_replicas=4,
+                       trace_every=100, flip_mode="colored",
+                       coupling_format="bitplane")
+    res = ops.colored_anneal(prob, 3, cfg)
+    recomputed = np.asarray(ising.energy(
+        ising.IsingProblem.create(jnp.asarray(edges.to_dense())),
+        res.best_spins)) + 2.5  # ising.energy excludes the constant offset
+    np.testing.assert_allclose(np.asarray(res.best_energy), recomputed,
+                               atol=1e-2)
+    trace = np.asarray(res.trace_energy)
+    assert trace.shape == (6, 4) and np.isfinite(trace).all()
+    assert (np.diff(trace, axis=0) <= 1e-6).all()
+    assert (np.asarray(res.num_flips) > 0).all()
+    assert (np.asarray(res.rows_fetched) >= 0).all()
+    hbm = ops.colored_anneal(prob, 3, dataclasses.replace(
+        cfg, coupling_format="bitplane_hbm"))
+    for name in ("best_energy", "best_spins", "final_energy", "num_flips",
+                 "trace_energy", "rows_fetched"):
+        np.testing.assert_array_equal(np.asarray(getattr(res, name)),
+                                      np.asarray(getattr(hbm, name)),
+                                      err_msg=name)
+
+
+def test_colored_routing_guards():
+    """Colored configs reaching single-flip paths fail loudly, and vice
+    versa — no silent mode mismatch anywhere in the dispatch surface."""
+    from repro.core.tempering import TemperingConfig, solve_tempering
+
+    edges = torus_grid_edges(4, 4, seed=0)
+    prob = ising.IsingProblem.create_sparse(edges)
+    dense_prob = ising.IsingProblem.create(jnp.asarray(edges.to_dense()))
+    colored = SolverConfig(16, linear(1.0, 0.1, 16), num_replicas=2,
+                           flip_mode="colored")
+    single = dataclasses.replace(colored, flip_mode="single")
+    with pytest.raises(ValueError, match="colored"):
+        ops.fused_anneal(prob, 0, colored)
+    with pytest.raises(ValueError, match="colored"):
+        solve(dense_prob, 0, colored, backend="reference")
+    with pytest.raises(ValueError, match="flip_mode"):
+        ops.colored_anneal(prob, 0, single)
+    with pytest.raises(ValueError, match="colored"):
+        solve(prob, 0, single, backend="colored")
+    with pytest.raises(ValueError, match="single-flip"):
+        solve_tempering(dense_prob, 0, TemperingConfig(
+            num_steps=16, t_min=0.1, t_max=1.0, num_replicas=2,
+            flip_mode="colored"))
+    # A prebuilt store is original-order; the colored backend must refuse it.
+    store = CouplingStore.build(edges, "bitplane")
+    with pytest.raises(ValueError, match="color-sorted"):
+        solve(prob, 0, colored, backend="colored", store=store)
+
+
+def test_colored_plan_reuse_matches_fresh_build():
+    edges = torus_grid_edges(6, 6, seed=4)
+    prob = ising.IsingProblem.create_sparse(edges)
+    cfg = SolverConfig(120, linear(2.0, 0.1, 120), num_replicas=2,
+                       flip_mode="colored")
+    plan = ops.colored_plan(prob, "bitplane")
+    a = ops.colored_anneal(prob, 5, cfg, plan=plan)
+    b = ops.colored_anneal(prob, 5, cfg, coupling="bitplane")
+    for name in ("best_energy", "best_spins", "num_flips"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, name)),
+                                      np.asarray(getattr(b, name)),
+                                      err_msg=name)

@@ -1,0 +1,149 @@
+"""Conflict-graph coloring invariants (``graphs.coloring``) — the exactness
+preconditions of the colored execution mode.
+
+The load-bearing property is *properness*: no edge may join two same-color
+vertices, because the colored sweep flips a whole class at once and that is
+exact block Gibbs only when class members share no coupling. The rest pins
+the contract the solver plumbing relies on: determinism under edge
+permutation (via ``EdgeList.create``'s canonical ordering), χ = 2 on
+bipartite instances (torus/grid — the BFS pass, not greedy luck), graceful
+collapse to singleton classes on dense cliques, and the perm/offsets layout
+the kernel schedule is built from.
+"""
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro.core.ising import EdgeList
+from repro.graphs import torus_grid_edges
+from repro.graphs.coloring import Coloring, greedy_coloring
+
+
+def _er_edges(n: int, m: int, seed: int) -> EdgeList:
+    rng = np.random.default_rng(seed)
+    i = rng.integers(0, n, size=m)
+    j = rng.integers(0, n, size=m)
+    keep = i != j
+    w = rng.choice([-2, -1, 1, 2], size=m)
+    return EdgeList.create(i[keep], j[keep], w[keep], n)
+
+
+def _assert_layout(col: Coloring):
+    """perm/offsets/class_sizes are one consistent color-sorted layout."""
+    n = col.num_spins
+    assert sorted(col.perm.tolist()) == list(range(n))
+    assert col.inverse_perm[col.perm].tolist() == list(range(n))
+    assert col.offsets[0] == 0 and col.offsets[-1] == n
+    assert (col.class_sizes > 0).all(), "every class is non-empty"
+    assert col.max_class_size == col.class_sizes.max()
+    for c in range(col.num_classes):
+        members = col.perm[col.offsets[c]:col.offsets[c + 1]]
+        assert (col.colors[members] == c).all()
+
+
+@given(st.integers(min_value=2, max_value=40),
+       st.integers(min_value=0, max_value=160),
+       st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_no_edge_joins_same_color_endpoints(n, m, seed):
+    edges = _er_edges(n, m, seed)
+    col = greedy_coloring(edges)
+    col.validate_against(edges)  # raises on any monochromatic edge
+    assert (col.colors[edges.rows] != col.colors[edges.cols]).all()
+    _assert_layout(col)
+
+
+@given(st.integers(min_value=3, max_value=30),
+       st.integers(min_value=1, max_value=120),
+       st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_deterministic_under_edge_permutation(n, m, seed):
+    """Feeding the same edge set in any order yields the identical coloring:
+    ``EdgeList.create`` canonicalizes the COO order, and the pass consumes
+    only the (permutation-invariant) adjacency structure."""
+    edges = _er_edges(n, m, seed)
+    rng = np.random.default_rng(seed + 1)
+    p = rng.permutation(edges.rows.size)
+    # Shuffle and also swap endpoint orientation on half the edges.
+    flip = rng.random(edges.rows.size) < 0.5
+    i = np.where(flip, edges.cols, edges.rows)[p]
+    j = np.where(flip, edges.rows, edges.cols)[p]
+    shuffled = EdgeList.create(i, j, edges.weights[p], n)
+    assert shuffled == edges
+    a, b = greedy_coloring(edges), greedy_coloring(shuffled)
+    assert a == b  # content-hash identity
+    np.testing.assert_array_equal(a.colors, b.colors)
+    np.testing.assert_array_equal(a.perm, b.perm)
+    np.testing.assert_array_equal(a.offsets, b.offsets)
+
+
+@given(st.integers(min_value=2, max_value=8),
+       st.integers(min_value=2, max_value=8))
+@settings(max_examples=20, deadline=None)
+def test_even_torus_is_two_colored(half_rows, half_cols):
+    """Even×even tori are bipartite; the BFS pass must find exactly the
+    χ = 2 checkerboard (a greedy vertex order would not always)."""
+    rows, cols = 2 * half_rows, 2 * half_cols
+    edges = torus_grid_edges(rows, cols, seed=rows * 100 + cols)
+    col = greedy_coloring(edges)
+    assert col.num_classes == 2
+    # The checkerboard split is exactly half/half.
+    assert col.class_sizes.tolist() == [rows * cols // 2, rows * cols // 2]
+    col.validate_against(edges)
+    _assert_layout(col)
+
+
+@given(st.integers(min_value=2, max_value=14))
+@settings(max_examples=12, deadline=None)
+def test_clique_degenerates_to_singletons(n):
+    """A dense clique has χ = N: colored mode collapses gracefully to one
+    flip of work per step (each class a single vertex)."""
+    iu = np.triu_indices(n, 1)
+    edges = EdgeList.create(iu[0], iu[1], np.ones(iu[0].size, np.int64), n)
+    col = greedy_coloring(edges)
+    assert col.num_classes == n
+    assert col.class_sizes.tolist() == [1] * n
+    assert col.max_class_size == 1
+    _assert_layout(col)
+
+
+def test_dense_source_matches_edge_list_source():
+    edges = _er_edges(24, 60, seed=9)
+    from_dense = greedy_coloring(np.asarray(edges.to_dense()))
+    from_edges = greedy_coloring(edges)
+    assert from_dense == from_edges
+
+
+def test_memoized_per_edge_list_digest():
+    edges = _er_edges(16, 30, seed=4)
+    same_content = EdgeList.create(edges.rows, edges.cols, edges.weights, 16)
+    assert greedy_coloring(edges) is greedy_coloring(same_content)
+
+
+def test_odd_cycle_is_not_two_colored():
+    n = 5  # C5: chromatic number 3
+    i = np.arange(n)
+    edges = EdgeList.create(i, (i + 1) % n, np.ones(n, np.int64), n)
+    col = greedy_coloring(edges)
+    assert col.num_classes == 3
+    col.validate_against(edges)
+
+
+def test_isolated_vertices_take_color_zero():
+    edges = EdgeList.create([0], [1], [1], 5)
+    col = greedy_coloring(edges)
+    assert col.num_classes == 2
+    assert (col.colors[2:] == 0).all()
+    _assert_layout(col)
+
+
+def test_num_spins_mismatch_raises():
+    edges = _er_edges(8, 10, seed=0)
+    with pytest.raises(ValueError, match="num_spins"):
+        greedy_coloring(edges, num_spins=9)
+
+
+def test_non_square_dense_source_raises():
+    with pytest.raises(ValueError, match="square"):
+        greedy_coloring(np.zeros((3, 4)))

@@ -143,6 +143,21 @@ class TestPlanBatches:
         plans = plan_batches(reqs)
         assert sorted(p.kind for p in plans) == ["single", "single"]
 
+    def test_flip_mode_mismatch_never_stacks(self):
+        """A colored request and a single-flip request run different kernels
+        (different backends, different per-step semantics); the planner must
+        keep them in separate launches even on the same instance + schedule."""
+        reqs = [self.Req("p1", _cfg()), self.Req("p1", _cfg()),
+                self.Req("p1", _cfg(flip_mode="colored")),
+                self.Req("p1", _cfg(flip_mode="colored"))]
+        plans = plan_batches(reqs)
+        assert sorted(p.kind for p in plans) == ["stack", "stack"]
+        modes = sorted({p.config.flip_mode for p in plans})
+        assert modes == ["colored", "single"]
+        for p in plans:
+            assert {r.config.flip_mode for r in p.requests} == \
+                {p.config.flip_mode}
+
     def test_stack_cap_splits_launches(self):
         cfg = _cfg(num_replicas=100)
         reqs = [self.Req("p1", cfg) for _ in range(3)]

@@ -185,6 +185,109 @@ def test_zero_temperature_descent_is_monotone(mode, uniformized):
         "zero-T fused chain increased energy"
 
 
+def _tiny_sparse_problem(seed=13, n=7, m=10):
+    """Small random sparse instance (edge-list) with integer weights/fields —
+    sparse so the coloring is non-trivial (χ ≥ 2 classes of several spins),
+    tiny so the Boltzmann law is exactly enumerable."""
+    g = np.random.default_rng(seed)
+    i = g.integers(0, n, size=m)
+    j = g.integers(0, n, size=m)
+    keep = i != j
+    w = g.choice([-2, -1, 1, 2], size=m)
+    edges = ising.EdgeList.create(i[keep], j[keep], w[keep], n)
+    h = np.rint(g.normal(size=n)).astype(np.float32)
+    return ising.IsingProblem.create_sparse(edges, h=h)
+
+
+def _colored_chain_energies_and_samples(problem, temp, *, r, chunk,
+                                        num_chunks, burn_chunks, seed=3):
+    """Colored counterpart of :func:`_chain_energies_and_samples`: fixed-T
+    chain driven through the production colored chunk machinery (plan store,
+    ``Salt.SWEEP`` streams, absolute-step class schedule). Returns samples in
+    the plan's color-sorted order together with the matching permuted dense
+    problem, so callers enumerate the Boltzmann law in the same basis."""
+    plan = ops.colored_plan(problem, "bitplane")
+    pdense = ising.IsingProblem.create(
+        jnp.asarray(plan.problem.edges.to_dense()), h=plan.problem.fields)
+    base = jax.random.fold_in(jax.random.key(0), jnp.uint32(seed))
+    state = ops.fused_init_state(plan.problem, base, r, interpret=True,
+                                 planes=plan.store.planes)
+    temps = jnp.full((chunk, r), temp, jnp.float32)
+    samples, energies = [], []
+    for c in range(num_chunks):
+        sched = ops.colored_class_schedule(
+            plan.wstarts, plan.offsets, plan.sizes,
+            jnp.arange(chunk) + c * chunk)
+        state = ops.colored_sweep_chunk(
+            plan.store.kernel_operand, state,
+            rng.stream(base, rng.Salt.SWEEP, c), chunk, temps, sched,
+            window=plan.window, coupling=plan.store.fmt, block_r=r,
+            interpret=True)
+        energies.append(np.asarray(state[2]))
+        if c >= burn_chunks:
+            samples.append(_state_index(state[1]))
+    pooled = (np.concatenate(samples) if samples
+              else np.zeros((0,), np.int64))
+    return np.stack(energies), pooled, pdense
+
+
+@pytest.mark.slow
+def test_colored_chain_samples_boltzmann():
+    """Colored block updates are exact Gibbs — same-color spins share no
+    coupling, so flipping a whole class from heat-bath coins is a valid
+    blocked Gibbs sweep and the fixed-T chain must be Boltzmann-stationary.
+    Same gates and wrong-temperature power controls as the single-flip tier:
+    a conflict in the coloring (two coupled spins updated from stale fields)
+    biases the law and fails TV/χ² by a wide margin."""
+    problem = _tiny_sparse_problem()
+    temp = 2.5
+    n = problem.num_spins
+    _, idx, pdense = _colored_chain_energies_and_samples(
+        problem, temp, r=16, chunk=48, num_chunks=520, burn_chunks=40)
+    p_exact = _enumerate_boltzmann(pdense, temp)
+    counts = np.bincount(idx, minlength=2 ** n).astype(np.float64)
+
+    x2, df = _chi2_statistic(counts, p_exact)
+    assert x2 < 2.0 * _chi2_critical(df), (x2, df)
+
+    tv = _tv_distance(counts, p_exact)
+    assert tv < 0.05, tv
+    for wrong_temp in (temp * 2.0, temp * 0.5):
+        tv_wrong = _tv_distance(counts, _enumerate_boltzmann(pdense, wrong_temp))
+        assert tv_wrong > 3.0 * tv, (tv, tv_wrong, wrong_temp)
+
+
+@pytest.mark.slow
+def test_colored_chain_matches_rsa_distribution():
+    """Cross-engine check: the colored block-Gibbs chain and the single-flip
+    RSA chain target the same measure, so their empirical laws on the same
+    instance must agree within the cross-mode TV gate used for rsa/rwa."""
+    problem = _tiny_sparse_problem()
+    temp = 2.5
+    n = problem.num_spins
+    _, idx_c, pdense = _colored_chain_energies_and_samples(
+        problem, temp, r=16, chunk=48, num_chunks=520, burn_chunks=40)
+    _, idx_s = _chain_energies_and_samples(
+        pdense, temp, mode="rsa", uniformized=False, r=16,
+        chunk=48, num_chunks=520, burn_chunks=40)
+    emp_c = np.bincount(idx_c, minlength=2 ** n).astype(np.float64)
+    emp_s = np.bincount(idx_s, minlength=2 ** n).astype(np.float64)
+    tv_cross = 0.5 * np.abs(emp_c / emp_c.sum() - emp_s / emp_s.sum()).sum()
+    assert tv_cross < 0.07, tv_cross
+
+
+def test_colored_zero_temperature_descent_is_monotone():
+    """Default-tier colored smoke: at T=0 every class member flips iff it
+    lowers energy off live fields — the chunk-boundary energy trajectory is
+    monotone non-increasing."""
+    problem = _tiny_sparse_problem(seed=2, n=10, m=18)
+    energies, _, _ = _colored_chain_energies_and_samples(
+        problem, 0.0, r=8, chunk=16, num_chunks=12, burn_chunks=12)
+    assert np.isfinite(energies).all()
+    assert (np.diff(energies, axis=0) <= 1e-6).all(), \
+        "zero-T colored chain increased energy"
+
+
 def test_zero_temperature_energy_bookkeeping_consistent():
     problem = _tiny_problem(seed=5, n=10)
     base = jax.random.fold_in(jax.random.key(0), jnp.uint32(3))
