@@ -30,6 +30,11 @@ SHARDED_STEPS = 48
 SHARDED_REPLICAS = 4
 SHARDED_DEVICES = 2
 
+#: 2-D mesh cell: the same instance on 4 devices laid out 1-D (4 row
+#: shards) vs 2x2 (2 replica groups x 2 row shards) within one subprocess.
+SHARDED_2D_GROUPS = 2
+SHARDED_2D_ROWS = 2
+
 _SUBPROCESS_CODE = """
 import json, time
 import jax, numpy as np
@@ -74,6 +79,63 @@ print("RESULT " + json.dumps({{
 """
 
 
+_SUBPROCESS_2D_CODE = """
+import json, time
+import jax, numpy as np
+from jax.sharding import Mesh
+from repro.configs.snowball import default_solver
+from repro.core.coupling import CouplingStore
+from repro.distributed.solver_sharded import solve_sharded
+from repro.graphs import complete_bipolar
+from repro.graphs.maxcut import maxcut_to_ising
+
+n, steps, reps = {n}, {steps}, {reps}
+groups, rows = {groups}, {rows}
+devices = groups * rows
+assert jax.device_count() == devices, jax.device_count()
+inst = complete_bipolar(n, seed=n)
+prob = maxcut_to_ising(inst)
+store = CouplingStore.build(prob.couplings, "bitplane_sharded")
+mesh_1d = Mesh(np.array(jax.devices()), ("spins",))
+mesh_2d = Mesh(np.array(jax.devices()).reshape(groups, rows),
+               ("groups", "rows"))
+cfg = default_solver(n, steps, mode="rsa", num_replicas=reps)
+
+def timed(mesh):
+    secs = float("inf")
+    for _ in range(2):
+        t0 = time.perf_counter()
+        res = solve_sharded(prob, 0, cfg, mesh, coupling=store.planes)
+        jax.block_until_ready(res)
+        secs = min(secs, time.perf_counter() - t0)
+    return secs, np.asarray(res.best_energy).tolist()
+
+secs_1d, best_1d = timed(mesh_1d)
+secs_2d, best_2d = timed(mesh_2d)
+planes = store.planes
+print("RESULT " + json.dumps({{
+    "n": n,
+    "mode": "rsa",
+    "num_devices": devices,
+    "num_groups": groups,
+    "rows_per_group": rows,
+    "num_replicas": reps,
+    "num_steps": steps,
+    "num_planes": int(planes.num_planes),
+    "plane_bytes_total": int(planes.nbytes),
+    "plane_bytes_per_device_1d": int(store.plane_bytes_per_shard(devices)),
+    "plane_bytes_per_device_2d":
+        int(store.plane_bytes_per_device((groups, rows))),
+    "us_per_step_1d": secs_1d / steps * 1e6,
+    "us_per_step_2d": secs_2d / steps * 1e6,
+    "replica_steps_per_sec_1d": reps * steps / secs_1d,
+    "replica_steps_per_sec_2d": reps * steps / secs_2d,
+    "best_energy_1d": best_1d,
+    "best_energy_2d": best_2d,
+}}))
+"""
+
+
 def run_sharded_point(emit: CsvEmitter) -> dict:
     """Time the N=16384 sharded solve on a forced 2-device mesh and return
     the history cell (per-device plane-byte accounting + µs/step anchor)."""
@@ -104,12 +166,50 @@ def run_sharded_point(emit: CsvEmitter) -> dict:
     return point
 
 
+def run_sharded_2d_point(emit: CsvEmitter) -> dict:
+    """Time the N=16384 solve on 4 forced devices, 1-D (4 row shards) vs
+    2x2 (2 groups x 2 rows) in one subprocess, and return the history cell.
+
+    The within-run pair is the tentpole's trade made measurable: the 2-D
+    layout holds half the planes per device (capacity: total / rows, not
+    total / devices) while running both groups' replica blocks
+    concurrently (throughput), and the recorded best-energy vectors must be
+    byte-identical between the layouts — the mesh shape is a placement
+    choice, never a trajectory change."""
+    devices = SHARDED_2D_GROUPS * SHARDED_2D_ROWS
+    code = _SUBPROCESS_2D_CODE.format(n=SHARDED_N, steps=SHARDED_STEPS,
+                                      reps=SHARDED_REPLICAS,
+                                      groups=SHARDED_2D_GROUPS,
+                                      rows=SHARDED_2D_ROWS)
+    proc = run_forced_device_subprocess(code, n_devices=devices,
+                                        timeout=3600, cwd=REPO)
+    if proc.returncode != 0:
+        raise RuntimeError(f"sharded 2-D bench subprocess failed:\n"
+                           f"{proc.stderr[-4000:]}")
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    point = json.loads(line[len("RESULT "):])
+    point["comms"] = ("per step: psum/all_gather scoped to each group's "
+                      "rows sub-axis only — no cross-group collective on "
+                      "the hot path")
+    emit.add(
+        f"solver/N{point['n']}/rsa/sharded_g{point['num_groups']}"
+        f"r{point['rows_per_group']}",
+        point["us_per_step_2d"],
+        f"us_per_step_1d={point['us_per_step_1d']:.1f};"
+        f"plane_bytes_per_device_2d={point['plane_bytes_per_device_2d']};"
+        f"plane_bytes_per_device_1d={point['plane_bytes_per_device_1d']};"
+        f"replica_steps_per_sec_2d={point['replica_steps_per_sec_2d']:.1f}")
+    return point
+
+
 def main(run_id: str | None = None):
     emit = CsvEmitter()
     point = run_sharded_point(emit)
-    merge_bench_results({f"N{SHARDED_N}_sharded": {"rsa": point}},
+    point_2d = run_sharded_2d_point(emit)
+    merge_bench_results({f"N{SHARDED_N}_sharded": {"rsa": point},
+                         f"N{SHARDED_N}_sharded_2d": {"rsa": point_2d}},
                         run_id=run_id)
-    return point
+    return point, point_2d
 
 
 if __name__ == "__main__":

@@ -132,6 +132,7 @@ def check_bench_history(payload: dict,
                     f"{fused / base:.2f}x the baseline's {base:.1f} — over "
                     f"the {max_ratio}x regression gate")
     errors.extend(check_sharded_points(latest))
+    errors.extend(check_sharded_2d_points(latest))
     errors.extend(check_ingestion_points(latest))
     errors.extend(check_serve_points(latest))
     errors.extend(check_row_traffic_points(latest))
@@ -383,6 +384,85 @@ def check_sharded_points(latest: dict) -> list[str]:
                     f"{per_dev * devices} B but the single-device streamed "
                     f"store is {hbm_bytes} B — the shards must be the same "
                     f"planes divided {devices} ways")
+    return errors
+
+
+def check_sharded_2d_points(latest: dict) -> list[str]:
+    """Schema + layout gates for 2-D mesh cells (``N*_sharded_2d`` keys,
+    written by the ``solver_sharded`` suite): on the (groups, rows) mesh the
+    planes are replicated across groups and row-sharded within one, so
+    per-device bytes must equal total/rows exactly (and land strictly under
+    the unsharded total — capacity still scales, with the rows axis); the
+    1-D column recorded in the same run must divide total/devices; and the
+    best-energy vectors of the two layouts must be byte-identical — the mesh
+    shape is a placement choice, never a trajectory change. Cross-refs the
+    plain ``N*_sharded`` cell at the same N: one store, two accountings."""
+    errors = []
+    for n_key, modes in sorted(latest.items()):
+        if not n_key.endswith("_sharded_2d") or not isinstance(modes, dict):
+            continue
+        for mode, cell in sorted(modes.items()):
+            if not isinstance(cell, dict):
+                continue
+            ints = ("num_devices", "num_groups", "rows_per_group",
+                    "plane_bytes_total", "plane_bytes_per_device_1d",
+                    "plane_bytes_per_device_2d")
+            if not all(isinstance(cell.get(k), int) for k in ints):
+                errors.append(f"{n_key}/{mode}: sharded-2d point needs "
+                              f"integer {ints}")
+                continue
+            groups, rows = cell["num_groups"], cell["rows_per_group"]
+            total = cell["plane_bytes_total"]
+            per_1d = cell["plane_bytes_per_device_1d"]
+            per_2d = cell["plane_bytes_per_device_2d"]
+            if groups < 2 or rows < 2:
+                errors.append(
+                    f"{n_key}/{mode}: mesh ({groups} groups x {rows} rows) "
+                    "degenerates to 1-D — a 2-D point needs >= 2 on both "
+                    "axes")
+            if cell["num_devices"] != groups * rows:
+                errors.append(
+                    f"{n_key}/{mode}: num_devices {cell['num_devices']} != "
+                    f"groups x rows ({groups * rows})")
+            if per_2d * rows != total:
+                errors.append(
+                    f"{n_key}/{mode}: 2-D per-device bytes {per_2d} x "
+                    f"{rows} row shards != plane_bytes_total {total} — "
+                    "within a group the rows axis must divide the store "
+                    "evenly (groups replicate it)")
+            if per_2d >= total:
+                errors.append(
+                    f"{n_key}/{mode}: 2-D per-device bytes {per_2d} not "
+                    f"under the unsharded store's {total} — the rows axis "
+                    "bought no capacity")
+            if per_1d * cell["num_devices"] != total:
+                errors.append(
+                    f"{n_key}/{mode}: 1-D per-device bytes {per_1d} x "
+                    f"{cell['num_devices']} devices != plane_bytes_total "
+                    f"{total}")
+            for k in ("us_per_step_1d", "us_per_step_2d",
+                      "replica_steps_per_sec_1d", "replica_steps_per_sec_2d"):
+                if not (isinstance(cell.get(k), (int, float))
+                        and cell[k] > 0):
+                    errors.append(f"{n_key}/{mode}: missing positive {k}")
+            b1, b2 = cell.get("best_energy_1d"), cell.get("best_energy_2d")
+            if not (isinstance(b1, list) and isinstance(b2, list) and b1):
+                errors.append(f"{n_key}/{mode}: best_energy_1d/_2d must be "
+                              "non-empty per-replica lists")
+            elif b1 != b2:
+                errors.append(
+                    f"{n_key}/{mode}: best_energy_1d != best_energy_2d — "
+                    "the 1-D and 2x2 layouts must produce byte-identical "
+                    "energies (mesh shape is placement, not a trajectory "
+                    "change)")
+            plain = latest.get(n_key[:-len("_2d")])
+            plain_cell = plain.get(mode) if isinstance(plain, dict) else None
+            plain_total = (plain_cell or {}).get("plane_bytes_total")
+            if isinstance(plain_total, int) and plain_total != total:
+                errors.append(
+                    f"{n_key}/{mode}: plane_bytes_total {total} disagrees "
+                    f"with the {n_key[:-len('_2d')]} cell's {plain_total} — "
+                    "both points must account the same packed store")
     return errors
 
 

@@ -306,7 +306,8 @@ def _colored_chunk(state, seed, c, plan, *, config: SolverConfig, clen: int,
     base = jax.random.fold_in(jax.random.key(0), seed)
     return _ops.colored_chunk_step(plan, state, base, c, clen=clen,
                                    chunk_len=chunk_len, config=config,
-                                   block_r=8, interpret=interpret)
+                                   block_r=8, interpret=interpret,
+                                   with_rows_fetched=True)
 
 
 class ColoredRunner:
@@ -332,6 +333,7 @@ class ColoredRunner:
         self.total_units = self.num_chunks + (1 if self.rem_steps else 0)
         self.collect_trace = bool(config.trace_every)
         self.num_replicas = config.num_replicas
+        self._rows_fetched = None
 
     def unit_len(self, k: int) -> int:
         if self.rem_steps and k == self.num_chunks:
@@ -343,10 +345,16 @@ class ColoredRunner:
                              self.interpret)
 
     def run_chunk(self, state, k: int):
-        return _colored_chunk(state, self.seed, jnp.int32(k), self.plan,
-                              config=self.config, clen=self.unit_len(k),
-                              chunk_len=self.chunk_len,
-                              interpret=self.interpret)
+        # Like ShardedRunner, the row-fetch counter rides on the runner:
+        # the 6-tuple snapshot contract stays fixed and the counter covers
+        # the chunks this process ran (telemetry only).
+        state, rf = _colored_chunk(state, self.seed, jnp.int32(k), self.plan,
+                                   config=self.config, clen=self.unit_len(k),
+                                   chunk_len=self.chunk_len,
+                                   interpret=self.interpret)
+        self._rows_fetched = (rf if self._rows_fetched is None
+                              else self._rows_fetched + rf)
+        return state
 
     def best_energy(self, state) -> float:
         return float(jnp.min(state[3])) + float(self.problem.offset)
@@ -366,7 +374,8 @@ class ColoredRunner:
         return SolveResult(
             best_energy=be + off,
             best_spins=_ops.unpermute_spins(self.plan, bs.astype(jnp.int8)),
-            final_energy=e + off, num_flips=nf, trace_energy=trace)
+            final_energy=e + off, num_flips=nf, trace_energy=trace,
+            rows_fetched=self._rows_fetched)
 
 
 @partial(jax.jit, static_argnames=("config",))
@@ -546,15 +555,18 @@ class ShardedRunner:
     """``solve_sharded``, chunk at a time: init via ``sharded_init_fn``, the
     per-chunk sweep via ``sharded_sweep_fn``, the best merge identical to the
     in-scan one. State leaves keep their spin-axis shardings across the
-    checkpoint round-trip (restore device_puts to the template shardings)."""
-
-    backend = "sharded"
-    fmt = "bitplane_sharded"
+    checkpoint round-trip (restore device_puts to the template shardings).
+    Serves 1-D and multi-axis (replica groups × rows) meshes alike — the
+    chunk inputs are always the full-R replicated tensors; the shard_map
+    slices each group's block (``solver_sharded.sharded_sweep_fn``)."""
 
     def __init__(self, problem, seed, config: SolverConfig, mesh,
-                 chunk_steps: int):
+                 chunk_steps: int, backend: str = "sharded"):
         from ..distributed import solver_sharded as _ss
         from ..kernels import ops as _ops
+        self.backend = backend
+        self.fmt = ("bitplane_sharded_2d" if len(mesh.axis_names) > 1
+                    else "bitplane_sharded")
         self.problem = problem
         self.config = config
         self.mesh = mesh
@@ -568,6 +580,7 @@ class ShardedRunner:
         self.total_units = self.num_chunks + (1 if self.rem_steps else 0)
         self.collect_trace = bool(config.trace_every)
         self.num_replicas = config.num_replicas
+        self._rows_fetched = None
 
     def unit_len(self, k: int) -> int:
         if self.rem_steps and k == self.num_chunks:
@@ -578,11 +591,13 @@ class ShardedRunner:
         from jax.sharding import NamedSharding, PartitionSpec
         seed_arr = jnp.asarray([self.seed], jnp.uint32)
         u0, s0, e0 = self._init_fn(self.planes, self.problem.fields, seed_arr)
-        # num_flips replicated over the mesh like e0 — a default-device zeros
-        # would commit the resume template's leaf to one device and clash
-        # with the mesh-committed state in the merge.
+        # num_flips laid out over the mesh like e0 (replica axis over the
+        # group axes on a 2-D mesh, replicated on 1-D) — a default-device
+        # zeros would commit the resume template's leaf to one device and
+        # clash with the mesh-committed state in the merge.
+        grp = tuple(self.mesh.axis_names[:-1]) or None
         nf = jax.device_put(np.zeros((self.num_replicas,), np.int32),
-                            NamedSharding(self.mesh, PartitionSpec()))
+                            NamedSharding(self.mesh, PartitionSpec(grp)))
         return (u0, s0, e0, e0, s0, nf)
 
     def run_chunk(self, state, k: int):
@@ -590,11 +605,14 @@ class ShardedRunner:
         uniforms, temps = _sharded_chunk_inputs(
             self.seed, jnp.int32(k), config=self.config,
             clen=self.unit_len(k), chunk_len=self.chunk_len)
-        # The row-broadcast counter is dropped: runner state is the 6-tuple
-        # snapshot contract, and a resumed run could not reconstruct the
-        # pre-crash traffic anyway. Trajectories are unaffected.
-        u, s, e, ce, cs, cf, _rf = self._sweep_fn(self.planes, u, s, e,
-                                                  uniforms, temps)
+        # The row-broadcast counter rides on the runner, not the state: the
+        # 6-tuple snapshot contract stays fixed, and a resumed run could not
+        # reconstruct the pre-crash traffic anyway — the counter covers the
+        # chunks this process ran (telemetry only; trajectories unaffected).
+        u, s, e, ce, cs, cf, rf = self._sweep_fn(self.planes, u, s, e,
+                                                 uniforms, temps)
+        self._rows_fetched = (rf if self._rows_fetched is None
+                              else self._rows_fetched + rf)
         be, bs, nf = _best_merge(be, bs, nf, ce, cs, cf)
         return (u, s, e, be, bs, nf)
 
@@ -614,7 +632,8 @@ class ShardedRunner:
             trace = jnp.zeros((0, r), jnp.float32)
         return SolveResult(best_energy=be + off, best_spins=bs.astype(jnp.int8),
                            final_energy=e + off, num_flips=nf,
-                           trace_energy=trace)
+                           trace_energy=trace,
+                           rows_fetched=self._rows_fetched)
 
 
 class DistRunner:
@@ -670,7 +689,7 @@ class DistRunner:
 
 
 # --------------------------------------------------------------------------
-# The five registered execution paths.
+# The registered execution paths.
 
 class ReferenceBackend(Backend):
     name = "reference"
@@ -754,12 +773,13 @@ class FusedBackend(Backend):
     def runner(self, problem, seed, config, *, mesh=None, chunk_steps=256,
                fmt=None, store=None):
         _require_single_flip(config, self.name)
-        if fmt == "bitplane_sharded":
+        if fmt in ("bitplane_sharded", "bitplane_sharded_2d"):
             # The last rung of the tier ladder switches a fused solve onto
             # the spin-sharded driver — trajectory-identical by contract.
             if mesh is None:
-                raise ValueError("the bitplane_sharded tier needs a mesh")
-            return get_backend("sharded").runner(
+                raise ValueError(f"the {fmt} tier needs a mesh")
+            target = "sharded_2d" if fmt == "bitplane_sharded_2d" else "sharded"
+            return get_backend(target).runner(
                 problem, seed, config, mesh=mesh, chunk_steps=chunk_steps)
         store = self.prepare(problem, config, fmt=fmt, store=store)
         return FusedRunner(problem, seed, config, store, chunk_steps)
@@ -811,7 +831,7 @@ class ColoredBackend(Backend):
 
     def runner(self, problem, seed, config, *, mesh=None, chunk_steps=256,
                fmt=None, store=None):
-        if fmt == "bitplane_sharded":
+        if fmt in ("bitplane_sharded", "bitplane_sharded_2d"):
             raise ValueError(
                 "the colored path has no spin-sharded tier — the tier "
                 "ladder ends at bitplane_hbm for backend='colored'")
@@ -885,7 +905,54 @@ class ShardedBackend(Backend):
         _require_single_flip(config, self.name)
         if mesh is None:
             raise ValueError("the bitplane_sharded tier needs a mesh")
-        return ShardedRunner(problem, seed, config, mesh, chunk_steps)
+        return ShardedRunner(problem, seed, config, mesh, chunk_steps,
+                             backend=self.name)
+
+
+class Sharded2DBackend(ShardedBackend):
+    """The 2-D (replica groups × spin rows) instantiation of the sharded
+    path: same driver, but the mesh must carry at least two axes — the last
+    row-shards the planes within each group, the leading axes replicate
+    planes across independent replica groups. Not auto-resolved (a plain
+    ``SolverConfig`` + mesh resolves to ``"sharded"``, whose driver already
+    serves multi-axis meshes natively); name it explicitly, or let the tier
+    ladder escalate to it when the mesh is 2-D."""
+
+    name = "sharded_2d"
+    capabilities = Capabilities(
+        edge_list=True, needs_mesh=True, supports_store=False,
+        supports_resume=True, tier_fallback=False,
+        fixed_fmt="bitplane_sharded_2d", auto=False,
+        summary="(groups, rows) mesh: planes row-sharded within each "
+                "replica group, replicated across groups — J capacity and "
+                "replica throughput scale together")
+
+    @staticmethod
+    def _check_mesh(mesh) -> None:
+        if mesh is None:
+            raise ValueError("backend='sharded_2d' needs a (groups, rows) "
+                             "mesh")
+        if len(mesh.axis_names) < 2:
+            raise ValueError(
+                f"backend='sharded_2d' needs a mesh with >= 2 axes (leading "
+                f"= replica groups, last = spin rows); got the 1-axis mesh "
+                f"{tuple(mesh.axis_names)} — use backend='sharded' for 1-D "
+                f"row sharding")
+
+    def prepare(self, problem, config, *, mesh=None, fmt=None, store=None):
+        self._check_mesh(mesh)
+        return super().prepare(problem, config, mesh=mesh, fmt=fmt,
+                               store=store)
+
+    def run(self, problem, seed, config, *, mesh=None, store=None):
+        self._check_mesh(mesh)
+        return super().run(problem, seed, config, mesh=mesh, store=store)
+
+    def runner(self, problem, seed, config, *, mesh=None, chunk_steps=256,
+               fmt=None, store=None):
+        self._check_mesh(mesh)
+        return super().runner(problem, seed, config, mesh=mesh,
+                              chunk_steps=chunk_steps, fmt=fmt, store=store)
 
 
 class DistributedBackend(Backend):
@@ -923,4 +990,5 @@ register(FusedBackend())
 register(ColoredBackend())
 register(TemperingBackend())
 register(ShardedBackend())
+register(Sharded2DBackend())
 register(DistributedBackend())

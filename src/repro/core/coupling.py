@@ -21,6 +21,16 @@ design axis):
                          spin-parallel driver
                          ``repro.distributed.solver_sharded.solve_sharded``;
                          the other three tiers are single-device kernel modes.
+* ``bitplane_sharded_2d`` — the sharded planes on a **(groups…, rows)**
+                         mesh: the last axis row-shards exactly as above
+                         *within* each replica group, the leading axes
+                         replicate the planes across groups that each run an
+                         independent block of R/G replicas at global indices.
+                         Per-device J bytes = total / rows_per_group; replica
+                         throughput scales with the group count; all hot-path
+                         collectives stay inside the group's rows sub-axis.
+                         Served by the same spin-parallel driver (a 1-D mesh
+                         is its degenerate single-group case).
 
 Before this module existed the resolve→encode→(planes, fmt) plumbing was
 hand-rolled in every driver (``solve``, ``solve_tempering``,
@@ -102,6 +112,10 @@ FORMATS: dict[str, CouplingFormatSpec] = {spec.name: spec for spec in (
     CouplingFormatSpec("bitplane_sharded", True, STREAM_ALIGN_WORDS, False,
                        True,
                        "planes row-sharded across the mesh (spin-parallel)"),
+    CouplingFormatSpec("bitplane_sharded_2d", True, STREAM_ALIGN_WORDS, False,
+                       True,
+                       "planes row-sharded within each replica group of a "
+                       "(groups, rows) mesh, replicated across groups"),
 )}
 
 #: Valid values of the ``coupling_format`` knob on ``SolverConfig`` /
@@ -310,6 +324,14 @@ class CouplingStore:
                              f"over {num_shards} devices")
         return self.planes.nbytes // num_shards
 
+    def plane_bytes_per_device(self, mesh_shape: Sequence[int]) -> int:
+        """Per-device plane bytes on a ``(groups..., rows)`` mesh shape: the
+        planes row-shard over the **last** axis only and replicate across the
+        leading replica-group axes, so only ``rows`` divides the footprint —
+        the capacity half of the 2-D capacity × throughput trade."""
+        rows = int(tuple(mesh_shape)[-1])
+        return self.plane_bytes_per_shard(rows)
+
     def require_num_spins(self, n: int, driver: str) -> "CouplingStore":
         """Prebuilt-store contract check: a memoized store must match the
         problem it is reused against."""
@@ -325,7 +347,8 @@ class CouplingStore:
         if self.fmt not in tuple(supported):
             hint = (" — the spin-sharded store is served by the spin-parallel "
                     "driver repro.distributed.solver_sharded.solve_sharded"
-                    if self.fmt == "bitplane_sharded" else "")
+                    if self.fmt in ("bitplane_sharded", "bitplane_sharded_2d")
+                    else "")
             raise ValueError(
                 f"coupling_format={self.fmt!r} is not supported by {driver} "
                 f"(supported: {tuple(supported)}){hint}")

@@ -36,8 +36,10 @@ distributed) in one chunk-granular supervisor, :func:`run_resilient`:
 * **Tier fallback.** With ``coupling_format="auto"``, an allocation failure
   (RESOURCE_EXHAUSTED / OOM) while building the coupling store or running a
   chunk retries at the next coupling tier — dense → bitplane →
-  bitplane_hbm → bitplane_sharded (the last only when a mesh is supplied
-  and the shard alignment holds) — restoring from the last snapshot, so
+  bitplane_hbm → bitplane_sharded / bitplane_sharded_2d (the last rung only
+  when a mesh is supplied and the shard alignment holds on its last axis;
+  the 2-D tier when the mesh carries replica-group axes) — restoring from
+  the last snapshot, so
   completed work survives the downgrade. Because the tiers are
   trajectory-identical by contract, a downgraded run still produces
   bit-identical results. Downgrades are recorded on the result and in every
@@ -150,7 +152,9 @@ def is_allocation_failure(exc: BaseException) -> bool:
 def next_tier(fmt: str, problem: ising.IsingProblem, mesh) -> Optional[str]:
     """The coupling tier to retry at after ``fmt`` hit an allocation
     failure, or None when the ladder ends: dense → bitplane (integral J
-    only) → bitplane_hbm → bitplane_sharded (mesh present, shard-aligned)."""
+    only) → bitplane_hbm → bitplane_sharded / bitplane_sharded_2d (mesh
+    present, shard-aligned; the 2-D tier when the mesh has replica-group
+    axes — the planes row-shard over the **last** mesh axis only)."""
     if fmt == "dense":
         if problem.couplings is not None:
             J = np.asarray(jax.device_get(problem.couplings))
@@ -163,13 +167,12 @@ def next_tier(fmt: str, problem: ising.IsingProblem, mesh) -> Optional[str]:
         if mesh is None:
             return None
         from ..kernels import common
-        num_shards = 1
-        for a in mesh.axis_names:
-            num_shards *= mesh.shape[a]
+        num_rows = int(mesh.shape[mesh.axis_names[-1]])
         n = problem.num_spins
-        if n % num_shards or (n // num_shards) % common.default_lane(n):
+        if n % num_rows or (n // num_rows) % common.default_lane(n):
             return None             # unshardable problem: ladder ends
-        return "bitplane_sharded"
+        return ("bitplane_sharded_2d" if len(mesh.axis_names) > 1
+                else "bitplane_sharded")
     return None
 
 

@@ -39,9 +39,24 @@ store nor any (N, N) f32 exists on any single host or device at any point.
 RNG, chunk cadence (``kernels.ops.anneal_chunk_plan``), and the best-so-far
 merge are shared with ``kernels.ops.fused_anneal`` statement for statement,
 so ``solve_sharded`` returns **bit-identical** ``SolveResult``s to the fused
-driver on every coupling tier (the four-way parity test in
+driver on every coupling tier (the parity test in
 ``tests/test_solver_sharded.py`` asserts ``assert_array_equal`` across
-dense / bitplane / bitplane_hbm / bitplane_sharded).
+dense / bitplane / bitplane_hbm / bitplane_sharded / sharded_2d).
+
+**2-D meshes — rows × replica groups** (the ``bitplane_sharded_2d`` tier):
+on a multi-axis mesh the **last** axis row-shards the planes exactly as
+above, while the leading axes form replica *groups*: planes are replicated
+across groups, and each group runs an independent contiguous block of
+``R / G`` replicas with **global** replica indices. All hot-path collectives
+(the row-tile psums, the block-sum all_gathers, the masked psum gathers)
+are scoped to the group's rows sub-axis only — no cross-group traffic per
+step — so per-device J bytes are ``total / rows_per_group`` while replica
+throughput scales with the group count. Every replica's RNG (``Salt.REPLICA``
+keys, per-chunk ``Salt.SWEEP`` uniforms drawn at the full (T, R, 4) shape
+and sliced to the group's block) is computed at its global index, so the
+concatenation of the group blocks reproduces the full-R fused trajectory
+bit for bit — the 1-D tier is the degenerate single-group case of the same
+code path.
 """
 from __future__ import annotations
 
@@ -78,6 +93,73 @@ def _flat_shard_index(mesh: Mesh, axes):
     for a in axes:
         idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
     return idx
+
+
+def _mesh_axes_split(mesh: Mesh):
+    """Split a sharded-tier mesh into ``(group_axes, row_axes)``.
+
+    The **last** mesh axis always row-shards the plane store (J capacity);
+    any leading axes are replica-group axes — planes replicated across them,
+    each group running an independent contiguous block of replicas
+    (throughput). A 1-D mesh is the degenerate no-group case
+    (``group_axes == ()``), so the 1-D tier is exactly this path."""
+    axes = tuple(mesh.axis_names)
+    return axes[:-1], axes[-1:]
+
+
+def _mesh_desc(mesh: Mesh) -> str:
+    return "(" + ", ".join(f"{a}={mesh.shape[a]}" for a in mesh.axis_names) + ")"
+
+
+def nearest_row_shard_counts(n: int, near: int, limit: int = 3):
+    """The row-shard counts d closest to ``near`` that split N evenly into
+    lane-aligned shards (``N % d == 0 and (N // d) % default_lane(N) == 0``)
+    — the actionable half of the sharded tier's divisibility errors."""
+    lane = common.default_lane(n)
+    valid = [d for d in range(1, max(n // lane, 1) + 1)
+             if n % d == 0 and (n // d) % lane == 0]
+    return tuple(sorted(valid, key=lambda d: (abs(d - near), d))[:limit])
+
+
+def _check_row_shardable(n: int, mesh: Mesh) -> int:
+    """Validate that N rows split evenly (and lane-aligned) over the mesh's
+    row axis; returns the row-shard count. The error names N, the mesh
+    shape, and the nearest valid row-shard counts — both the 1-D and 2-D
+    paths route through here, so neither can silently mis-shard."""
+    grp_axes, row_axes = _mesh_axes_split(mesh)
+    num_rows = _mesh_size(mesh, row_axes)
+    lane = common.default_lane(n)
+    where = (f"row axis {row_axes[0]!r}" if grp_axes else "mesh")
+    if n % num_rows:
+        raise ValueError(
+            f"N={n} spin rows cannot shard evenly over the {num_rows} "
+            f"shard(s) of the {where} of mesh {_mesh_desc(mesh)} "
+            f"(N % {num_rows} == {n % num_rows}); nearest valid row-shard "
+            f"counts for N={n}: {nearest_row_shard_counts(n, num_rows)}")
+    if (n // num_rows) % lane:
+        raise ValueError(
+            f"per-shard spin count {n // num_rows} is not a multiple of the "
+            f"roulette lane {lane} (N={n} over the {num_rows} shard(s) of "
+            f"the {where} of mesh {_mesh_desc(mesh)}): shard boundaries "
+            f"must align with selection blocks; nearest valid row-shard "
+            f"counts for N={n}: {nearest_row_shard_counts(n, num_rows)}")
+    return num_rows
+
+
+def _check_group_replicas(config: SolverConfig, mesh: Mesh) -> int:
+    """Validate that the replica count splits evenly over the mesh's replica
+    groups; returns the group count (1 on a 1-D mesh)."""
+    grp_axes, _ = _mesh_axes_split(mesh)
+    num_groups = _mesh_size(mesh, grp_axes)
+    r = config.num_replicas
+    if r % num_groups:
+        valid = tuple(g for g in range(1, r + 1) if r % g == 0)
+        raise ValueError(
+            f"num_replicas={r} cannot split evenly over the {num_groups} "
+            f"replica group(s) of mesh {_mesh_desc(mesh)} (group axes "
+            f"{grp_axes}); use a replica count divisible by {num_groups} "
+            f"or a group count in {valid}")
+    return num_groups
 
 
 def _psum_gather(x, j, lo, axes):
@@ -272,7 +354,7 @@ def _sharded_sweep(planes_loc: BitPlanes, fields0, spins0, energy0, uniforms,
 
 
 def _sharded_init(planes_loc: BitPlanes, fields, base, *, r: int, n: int,
-                  n_loc: int, lo, axes):
+                  n_loc: int, lo, axes, r0=0):
     """Plane-native per-device replica init — ``ops.fused_init_state`` with
     every full-width touch replaced by its sharded counterpart, so neither
     the full (B, N, W) planes nor any dense J is ever needed on one device.
@@ -286,9 +368,14 @@ def _sharded_init(planes_loc: BitPlanes, fields, base, *, r: int, n: int,
     u^(J) — the identical einsum the fused init runs on identical values, so
     sharded replicas start from bit-equal (u₀, s₀, e₀) for any h. Returns
     the local slices ``(u0_loc, s0_loc, e0)``.
+
+    ``r0`` is the **global** index of this device's first replica (a replica
+    group on a 2-D mesh inits its own contiguous block): key derivation is
+    per-replica (``Salt.REPLICA`` folds the global index), so computing the
+    block alone is bitwise the block slice of the full-R computation.
     """
     replica_keys = jax.vmap(
-        lambda i: rng.stream(base, rng.Salt.REPLICA, i))(jnp.arange(r))
+        lambda i: rng.stream(base, rng.Salt.REPLICA, i))(r0 + jnp.arange(r))
     spins0 = jax.vmap(lambda k: ising.random_spins(
         rng.stream(k, rng.Salt.INIT), (n,)))(replica_keys)
     spins0 = spins0.astype(jnp.float32)                  # (R, N) replicated
@@ -299,6 +386,31 @@ def _sharded_init(planes_loc: BitPlanes, fields, base, *, r: int, n: int,
     e0 = ising.energy_from_fields(u_j, spins0, fields)
     s0 = jax.lax.dynamic_slice_in_dim(spins0, lo, n_loc, axis=1)
     return u0, s0, e0
+
+
+def _group_layout(config: SolverConfig, mesh: Mesh, n: int):
+    """The static (groups × rows) decomposition one (config, mesh, N) fixes:
+    ``(grp_axes, row_axes, num_groups, r_loc, n_loc)`` with ``r_loc`` the
+    per-group replica-block size and ``n_loc`` the per-row spin slice."""
+    grp_axes, row_axes = _mesh_axes_split(mesh)
+    num_groups = _mesh_size(mesh, grp_axes)
+    num_rows = _mesh_size(mesh, row_axes)
+    return grp_axes, row_axes, num_groups, config.num_replicas // num_groups, \
+        n // num_rows
+
+
+def _group_specs(grp_axes, row_axes):
+    """PartitionSpecs of the 2-D layout — degenerate to the 1-D tier's specs
+    when ``grp_axes`` is empty: replica-state arrays (R, N) shard replicas
+    over the groups and spins over the rows, per-replica scalars (R,) shard
+    over the groups alone, and the (chunks, R) trace shards its replica
+    axis over the groups."""
+    grp = tuple(grp_axes) if grp_axes else None
+    rows = tuple(row_axes)
+    state = P(grp, rows)
+    rep = P(grp)
+    trace = P(None, grp)
+    return state, rep, trace
 
 
 @functools.lru_cache(maxsize=32)
@@ -319,41 +431,51 @@ def sharded_anneal_fn(config: SolverConfig, mesh: Mesh, n: int, *,
     jit). The per-step jaxpr pin (collectives present, no ``dot_general``)
     lives on :func:`sharded_sweep_fn` — the one-time init here legitimately
     contains O(R·N) contractions (the e₀ einsum and the popcount weighting).
+
+    On a multi-axis mesh the leading axes are replica groups: each group's
+    devices run the block of ``R / G`` replicas at global indices
+    ``[g·R/G, (g+1)·R/G)``, with per-chunk uniforms drawn at the full
+    (clen, R, 4) shape and ``dynamic_slice``d to the block — so every
+    replica consumes exactly the bits the 1-D and fused paths would hand
+    it, and the gathered (R, ·) outputs are bit-identical to theirs.
     """
-    axes = tuple(mesh.axis_names)
-    num_shards = _mesh_size(mesh, axes)
-    r = config.num_replicas
+    grp_axes, row_axes, num_groups, r_loc, n_loc = _group_layout(
+        config, mesh, n)
+    r_total = config.num_replicas
     lane = common.default_lane(n)
-    n_loc = n // num_shards
     g_loc = n_loc // lane
     chunk_len, num_chunks, rem_steps = _ops.anneal_chunk_plan(
         config, chunk_steps)
     tbl = _ops.solver_pwl_table(config)
 
     def local_anneal(planes_loc, fields, seed_arr):
-        idx = _flat_shard_index(mesh, axes)
-        lo = idx * n_loc
-        g0 = idx * g_loc
+        row_idx = _flat_shard_index(mesh, row_axes)
+        lo = row_idx * n_loc
+        g0 = row_idx * g_loc
+        r0 = _flat_shard_index(mesh, grp_axes) * r_loc
         base = jax.random.fold_in(jax.random.key(0), seed_arr[0])
-        u0, s0, e0 = _sharded_init(planes_loc, fields, base, r=r, n=n,
-                                   n_loc=n_loc, lo=lo, axes=axes)
-        state = (u0, s0, e0, e0, s0, jnp.zeros((r,), jnp.int32))
-        rows0 = jnp.zeros((r,), jnp.int32)
+        u0, s0, e0 = _sharded_init(planes_loc, fields, base, r=r_loc, n=n,
+                                   n_loc=n_loc, lo=lo, axes=row_axes, r0=r0)
+        state = (u0, s0, e0, e0, s0, jnp.zeros((r_loc,), jnp.int32))
+        rows0 = jnp.zeros((r_loc,), jnp.int32)
 
         def chunk(carry, c, clen):
             # Same per-chunk Salt.SWEEP stream, temps tensor, and
             # best-so-far merge as ops.fused_sweep_chunk — replicated
-            # computation, identical on every device.
+            # computation, identical on every device; the group consumes
+            # its contiguous replica block of the full-R draw.
             steps = c * chunk_len + jnp.arange(clen)
             temps = jax.vmap(config.schedule)(steps).astype(jnp.float32)
-            temps = jnp.broadcast_to(temps[:, None], (clen, r))
+            temps = jnp.broadcast_to(temps[:, None], (clen, r_loc))
             uniforms = rng.uniform01(
-                rng.stream(base, rng.Salt.SWEEP, c), (clen, r, 4))
+                rng.stream(base, rng.Salt.SWEEP, c), (clen, r_total, 4))
+            uniforms = jax.lax.dynamic_slice_in_dim(uniforms, r0, r_loc,
+                                                    axis=1)
             (u, s, e, be, bs, nf), rows = carry
             u, s, e, ce, cs, cf, rf = _sharded_sweep(
                 planes_loc, u, s, e, uniforms, temps, tbl,
                 mode=config.mode, uniformized=config.uniformized, n=n,
-                lane=lane, axes=axes, lo=lo, g0=g0, coalesce=coalesce)
+                lane=lane, axes=row_axes, lo=lo, g0=g0, coalesce=coalesce)
             better = ce < be
             state = (u, s, e, jnp.where(better, ce, be),
                      jnp.where(better[:, None], cs, bs), nf + cf)
@@ -368,11 +490,12 @@ def sharded_anneal_fn(config: SolverConfig, mesh: Mesh, n: int, *,
         u, s, e, be, bs, nf = state
         return u, s, e, be, bs, nf, rows, trace
 
-    shard = P(None, axes)        # (R, N) / (B, N, W) spin-axis sharding
+    state_s, rep_s, trace_s = _group_specs(grp_axes, row_axes)
     return jax.jit(shard_map_compat(
         local_anneal, mesh=mesh,
-        in_specs=(P(None, axes, None), P(), P()),
-        out_specs=(shard, shard, P(), P(), shard, P(), P(), P())))
+        in_specs=(P(None, tuple(row_axes), None), P(), P()),
+        out_specs=(state_s, state_s, rep_s, rep_s, state_s, rep_s, rep_s,
+                   trace_s)))
 
 
 @functools.lru_cache(maxsize=32)
@@ -384,23 +507,23 @@ def sharded_init_fn(config: SolverConfig, mesh: Mesh, n: int):
     planes/u/s sharded over the spin axis and e₀ replicated — exactly the
     state ``sharded_anneal_fn``'s ``local_anneal`` starts from, so a chunked
     drive of :func:`sharded_sweep_fn` from this init replays the monolithic
-    trajectory bit for bit."""
-    axes = tuple(mesh.axis_names)
-    num_shards = _mesh_size(mesh, axes)
-    r = config.num_replicas
-    n_loc = n // num_shards
+    trajectory bit for bit (2-D meshes included: each replica group inits
+    its own global-index replica block)."""
+    grp_axes, row_axes, _, r_loc, n_loc = _group_layout(config, mesh, n)
 
     def local_init(planes_loc, fields, seed_arr):
-        idx = _flat_shard_index(mesh, axes)
+        row_idx = _flat_shard_index(mesh, row_axes)
+        r0 = _flat_shard_index(mesh, grp_axes) * r_loc
         base = jax.random.fold_in(jax.random.key(0), seed_arr[0])
-        return _sharded_init(planes_loc, fields, base, r=r, n=n,
-                             n_loc=n_loc, lo=idx * n_loc, axes=axes)
+        return _sharded_init(planes_loc, fields, base, r=r_loc, n=n,
+                             n_loc=n_loc, lo=row_idx * n_loc, axes=row_axes,
+                             r0=r0)
 
-    shard = P(None, axes)
+    state_s, rep_s, _ = _group_specs(grp_axes, row_axes)
     return jax.jit(shard_map_compat(
         local_init, mesh=mesh,
-        in_specs=(P(None, axes, None), P(), P()),
-        out_specs=(shard, shard, P())))
+        in_specs=(P(None, tuple(row_axes), None), P(), P()),
+        out_specs=(state_s, state_s, rep_s)))
 
 
 def sharded_sweep_fn(config: SolverConfig, mesh: Mesh, n: int, *,
@@ -412,29 +535,38 @@ def sharded_sweep_fn(config: SolverConfig, mesh: Mesh, n: int, *,
     contraction (``dot_general``) — the O(N)/step incremental-update
     contract extended across the mesh. Signature:
     ``fn(planes, u0_loc, s0_loc, e0, uniforms, temps)`` with planes/u/s
-    sharded over the spin axis; the seventh output is the (R,) replicated
-    row-broadcast counter. ``coalesce=False`` restores the one-psum-per-
-    replica fetch — the uncoalesced oracle the parity tests diff against.
+    sharded over the spin axis; the seventh output is the (R,) row-broadcast
+    counter. ``coalesce=False`` restores the one-psum-per-replica fetch —
+    the uncoalesced oracle the parity tests diff against.
+
+    The uniforms/temps inputs are always the **full-R** (T, R, 4) / (T, R)
+    tensors, replicated; on a 2-D mesh each replica group ``dynamic_slice``s
+    its contiguous block — so the chunked driver feeds identical host-side
+    tensors to every mesh shape, and the jaxpr pin can assert that the only
+    collectives in the step are scoped to the rows sub-axis (no cross-group
+    traffic on the hot path).
     """
-    axes = tuple(mesh.axis_names)
-    num_shards = _mesh_size(mesh, axes)
+    grp_axes, row_axes, _, r_loc, n_loc = _group_layout(config, mesh, n)
     lane = common.default_lane(n)
-    n_loc = n // num_shards
     g_loc = n_loc // lane
     tbl = _ops.solver_pwl_table(config)
 
     def local_sweep(planes_loc, u0, s0, e0, uniforms, temps):
-        idx = _flat_shard_index(mesh, axes)
+        row_idx = _flat_shard_index(mesh, row_axes)
+        r0 = _flat_shard_index(mesh, grp_axes) * r_loc
+        uniforms = jax.lax.dynamic_slice_in_dim(uniforms, r0, r_loc, axis=1)
+        temps = jax.lax.dynamic_slice_in_dim(temps, r0, r_loc, axis=1)
         return _sharded_sweep(
             planes_loc, u0, s0, e0, uniforms, temps, tbl, mode=config.mode,
-            uniformized=config.uniformized, n=n, lane=lane, axes=axes,
-            lo=idx * n_loc, g0=idx * g_loc, coalesce=coalesce)
+            uniformized=config.uniformized, n=n, lane=lane, axes=row_axes,
+            lo=row_idx * n_loc, g0=row_idx * g_loc, coalesce=coalesce)
 
-    shard = P(None, axes)
+    state_s, rep_s, _ = _group_specs(grp_axes, row_axes)
     return jax.jit(shard_map_compat(
         local_sweep, mesh=mesh,
-        in_specs=(P(None, axes, None), shard, shard, P(), P(), P()),
-        out_specs=(shard, shard, P(), P(), shard, P(), P())))
+        in_specs=(P(None, tuple(row_axes), None), state_s, state_s, rep_s,
+                  P(), P()),
+        out_specs=(state_s, state_s, rep_s, rep_s, state_s, rep_s, rep_s)))
 
 
 def shard_planes_from_edges(edges: ising.EdgeList, mesh: Mesh,
@@ -446,19 +578,21 @@ def shard_planes_from_edges(edges: ising.EdgeList, mesh: Mesh,
     alone the (N, N) f32 J — never exists on any single host or device. This
     is the ingestion path that moves the init wall: setup cost becomes
     O(nnz + plane-slab bytes) per device instead of O(N²) on one host.
+
+    On a 2-D mesh the slabs shard over the **rows** (last) axis only and
+    replicate across the replica-group axes; the slab cache below encodes
+    each distinct row range exactly once per host, so the G group copies
+    of one slab cost one encode, not G.
     """
-    axes = tuple(mesh.axis_names)
-    num_shards = _mesh_size(mesh, axes)
+    _, row_axes = _mesh_axes_split(mesh)
     n = edges.num_spins
-    if n % num_shards:
-        raise ValueError(f"N={n} plane rows cannot shard evenly over the "
-                         f"{num_shards}-device mesh")
+    _check_row_shardable(n, mesh)
     if num_planes is None:
         num_planes = max(1, edges.max_abs_weight.bit_length())
     align = coupling_store.FORMATS["bitplane_sharded"].align_words
     w_min = -(-n // WORD_BITS)
     num_words = -(-w_min // align) * align
-    sharding = NamedSharding(mesh, P(None, axes, None))
+    sharding = NamedSharding(mesh, P(None, tuple(row_axes), None))
     shape = (num_planes, n, num_words)
     slabs = {}
 
@@ -486,33 +620,34 @@ def resolve_sharded_planes(problem, config: SolverConfig, mesh: Mesh, *,
     ``solve_sharded`` and the resilient supervisor. Pre-packed ``coupling``
     planes skip the re-encode; edge-list problems encode per-device slabs
     straight from the O(nnz) edges; a dense J routes through
-    ``CouplingStore.build``. Raises the driver's routing/alignment errors."""
+    ``CouplingStore.build``. Raises the driver's routing/alignment errors.
+    On a multi-axis mesh the resolved format is ``bitplane_sharded_2d``
+    (row-sharded within each replica group, replicated across groups)."""
     n = problem.num_spins
-    axes = tuple(mesh.axis_names)
-    num_shards = _mesh_size(mesh, axes)
-    if config.coupling_format not in ("auto", "bitplane_sharded"):
+    grp_axes, _ = _mesh_axes_split(mesh)
+    fmt = "bitplane_sharded_2d" if grp_axes else "bitplane_sharded"
+    if config.coupling_format not in ("auto", "bitplane_sharded",
+                                      "bitplane_sharded_2d"):
         raise ValueError(
-            f"solve_sharded serves coupling_format='bitplane_sharded' "
-            f"(or 'auto'), got {config.coupling_format!r} — use "
-            f"solve(backend='fused') for the single-device tiers")
-    if n % num_shards:
-        raise ValueError(f"N={n} spin rows cannot shard evenly over the "
-                         f"{num_shards}-device mesh")
-    lane = common.default_lane(n)
-    n_loc = n // num_shards
-    if n_loc % lane:
+            f"solve_sharded serves coupling_format='bitplane_sharded' / "
+            f"'bitplane_sharded_2d' (or 'auto'), got "
+            f"{config.coupling_format!r} — use solve(backend='fused') for "
+            f"the single-device tiers")
+    if config.coupling_format == "bitplane_sharded_2d" and not grp_axes:
         raise ValueError(
-            f"per-shard spin count {n_loc} is not a multiple of the roulette "
-            f"lane {lane}: shard boundaries must align with selection blocks")
+            f"coupling_format='bitplane_sharded_2d' needs a (groups..., "
+            f"rows) mesh with at least 2 axes; mesh {_mesh_desc(mesh)} has "
+            f"one — use 'bitplane_sharded' (or 'auto') for 1-D meshes")
+    _check_row_shardable(n, mesh)
+    _check_group_replicas(config, mesh)
     if coupling is not None:
-        store = coupling_store.CouplingStore.from_planes(
-            coupling, "bitplane_sharded")
+        store = coupling_store.CouplingStore.from_planes(coupling, fmt)
         coupling_store.validate_planes_cover(coupling, n)
         return store.planes
     if problem.couplings is None:
         return shard_planes_from_edges(problem.edges, mesh, num_planes)
     store = coupling_store.CouplingStore.build(
-        problem.couplings, "bitplane_sharded", num_planes=num_planes)
+        problem.couplings, fmt, num_planes=num_planes)
     return store.planes
 
 
@@ -535,10 +670,19 @@ def solve_sharded(problem, seed, config: SolverConfig, mesh: Mesh, *,
     the O(nnz) edges (:func:`shard_planes_from_edges`), so no host ever
     materializes the full store or any dense J at any point of the solve.
 
+    On a multi-axis mesh the last axis row-shards the planes within each
+    replica group and the leading axes replicate the planes across
+    independent replica groups (the ``bitplane_sharded_2d`` tier): per-device
+    J bytes are ``store.nbytes / rows_per_group`` while replica throughput
+    scales with the group count, and the (R, ·) results are still
+    bit-identical to the fused and 1-D paths.
+
     Requires an integral J (the sharded store is plane-backed; there is no
-    sharded dense tier), N divisible by the mesh size, and the per-shard
-    spin count divisible by the roulette lane (block-aligned sharding).
-    ``config.coupling_format`` must be "auto" or "bitplane_sharded".
+    sharded dense tier), N divisible by the row-shard count with per-shard
+    spin counts divisible by the roulette lane (block-aligned sharding), and
+    ``config.num_replicas`` divisible by the group count.
+    ``config.coupling_format`` must be "auto", "bitplane_sharded", or (2-D
+    meshes) "bitplane_sharded_2d".
     ``coupling`` takes pre-packed tile-aligned planes to skip the re-encode
     (the benchmark path); ``num_planes`` forces the precision B.
     ``coalesce`` (default on) broadcasts each step's unique rows once

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import math
 import time
 
 import numpy as np
@@ -49,6 +50,32 @@ def build_instance(args):
         "sw1000, torus32 — or pass a Gset-format file via --gset instead")
 
 
+def build_mesh(spec: str | None):
+    """Device mesh for ``--engine sharded``: ``"4"`` → 1-D row sharding over
+    4 devices; ``"2x2"`` → the 2-D (groups, rows) layout. ``None`` takes
+    every visible device as a 1-D mesh."""
+    import jax
+    from jax.sharding import Mesh
+
+    devices = jax.devices()
+    if spec is None:
+        shape = (len(devices),)
+    else:
+        try:
+            shape = tuple(int(s) for s in spec.lower().split("x"))
+        except ValueError:
+            raise SystemExit(
+                f"--mesh-shape {spec!r}: expected e.g. '4' or '2x2'")
+    ndev = math.prod(shape)
+    if ndev > len(devices):
+        raise SystemExit(
+            f"--mesh-shape {spec} needs {ndev} devices but only "
+            f"{len(devices)} are visible (force host devices with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={ndev})")
+    names = ("spins",) if len(shape) == 1 else ("groups", "rows")
+    return Mesh(np.array(devices[:ndev]).reshape(shape), names)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--instance", default="k200",
@@ -57,7 +84,14 @@ def main():
     ap.add_argument("--mode", choices=("rsa", "rwa"), default="rwa")
     ap.add_argument("--steps", type=int, default=5000)
     ap.add_argument("--replicas", type=int, default=8)
-    ap.add_argument("--engine", choices=("scan", "fused"), default="scan")
+    ap.add_argument("--engine", choices=("scan", "fused", "sharded"),
+                    default="scan",
+                    help="sharded = spin-row-sharded planes over a device "
+                    "mesh (see --mesh-shape); always supervised")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="device mesh for --engine sharded: '4' shards spin "
+                    "rows over 4 devices; '2x2' runs 2 replica groups × 2 "
+                    "row shards (the bitplane_sharded_2d tier)")
     ap.add_argument("--flip-mode", choices=("single", "colored"),
                     default="single",
                     help="colored = one conflict-graph color class per step "
@@ -90,9 +124,15 @@ def main():
     cfg = default_solver(inst.num_vertices, args.steps, mode=args.mode,
                          num_replicas=args.replicas)
     colored = args.flip_mode == "colored"
+    sharded = args.engine == "sharded"
+    if colored and sharded:
+        raise SystemExit("--engine sharded is single-flip only; drop "
+                         "--flip-mode colored")
     if colored:
         cfg = dataclasses.replace(cfg, flip_mode="colored")
+    mesh = build_mesh(args.mesh_shape) if sharded else None
     resilient = (colored
+                 or sharded
                  or args.run_dir is not None
                  or args.deadline_seconds is not None
                  or args.target_energy is not None
@@ -100,9 +140,12 @@ def main():
     t0 = time.perf_counter()
     if resilient:
         backend = ("colored" if colored
+                   else ("sharded_2d" if len(mesh.axis_names) > 1
+                         else "sharded") if sharded
                    else "fused" if args.engine == "fused" else "reference")
         rr = run_resilient(
             problem, args.seed, cfg, run_dir=args.run_dir, backend=backend,
+            mesh=mesh,
             budget=BudgetConfig(deadline_seconds=args.deadline_seconds,
                                 max_steps=args.max_steps,
                                 target_energy=args.target_energy),
@@ -128,10 +171,10 @@ def main():
         print(f"stop_reason={rr.stop_reason} steps_done={rr.steps_done}/"
               f"{args.steps} chunks={rr.chunks_done}/{rr.total_chunks}"
               f"{resumed}{downgraded}")
+    steps_done = rr.steps_done if resilient else args.steps
     if colored:
         from repro.graphs.coloring import greedy_coloring
         col = greedy_coloring(problem.coupling_source)
-        steps_done = rr.steps_done if resilient else args.steps
         flips = float(np.sum(np.asarray(result.num_flips)))
         per_step = flips / max(steps_done, 1)
         print(f"flip_mode=colored color_classes={col.num_classes} "
@@ -139,6 +182,24 @@ def main():
               f"mean_class={col.num_spins / col.num_classes:.1f} "
               f"flips/step={per_step:.1f} (ensemble, {args.replicas} "
               f"replicas)")
+    if sharded:
+        shape = ", ".join(f"{a}={mesh.shape[a]}" for a in mesh.axis_names)
+        print(f"engine=sharded backend={backend} mesh=({shape})")
+    if sharded or colored:
+        # Perf telemetry for the coalescing / mesh-sharding tiers:
+        # µs/step (wall clock, compile included) plus the kernel's
+        # unique-rows-fetched counter where the tier reports one — the
+        # coalescing win is rows/step below replicas/step.
+        us = wall / max(steps_done, 1) * 1e6
+        line = f"us/step={us:.1f} (wall incl. compile)"
+        if result.rows_fetched is not None:
+            rf = float(np.sum(np.asarray(result.rows_fetched)))
+            baseline = (f"vs {args.replicas}/step uncoalesced" if sharded
+                        else f"of N={problem.num_spins} dense")
+            line += (f" rows_fetched={rf:.0f} "
+                     f"({rf / max(steps_done, 1):.2f} rows/step "
+                     f"{baseline})")
+        print(line)
     print(f"best cut = {cuts.max():.0f}  (per-replica: {np.sort(cuts)[::-1][:8]})")
     if args.tts_threshold:
         r = tts.estimate(-cuts, threshold=-args.tts_threshold,

@@ -1,3 +1,6 @@
+import math
+import textwrap
+
 import numpy as np
 import pytest
 
@@ -11,16 +14,50 @@ from benchmarks.subproc import run_forced_device_subprocess
 # benchmarks/subproc.py).
 
 
+def device_mesh_code(mesh_shape, axis_names=None) -> str:
+    """Source preamble that binds ``mesh`` over every forced host device.
+
+    ``mesh_shape`` is the device-grid shape: a 1-tuple builds the classic
+    1-D row-sharding mesh (axis ``"spins"``); longer shapes build the 2-D
+    sharded tier's (groups…, rows) layout — leading replica-group axes,
+    trailing ``"rows"`` axis — e.g. ``(2, 2)`` → 4 devices as 2×2. Pass
+    ``axis_names`` to override the defaults."""
+    shape = tuple(int(s) for s in mesh_shape)
+    if axis_names is None:
+        if len(shape) == 1:
+            axis_names = ("spins",)
+        else:
+            lead = (("groups",) if len(shape) == 2 else
+                    tuple(f"groups{i}" for i in range(len(shape) - 1)))
+            axis_names = lead + ("rows",)
+    axis_names = tuple(axis_names)
+    assert len(axis_names) == len(shape)
+    return (
+        "import jax as _jax, numpy as _np\n"
+        "from jax.sharding import Mesh as _Mesh\n"
+        f"assert _jax.device_count() == {math.prod(shape)}\n"
+        f"mesh = _Mesh(_np.array(_jax.devices()).reshape({shape!r}), "
+        f"{axis_names!r})\n")
+
+
 def run_with_forced_devices(code: str, n_devices: int = 8,
-                            timeout: int = 420) -> str:
+                            timeout: int = 420, *, mesh_shape=None,
+                            axis_names=None) -> str:
     """Run ``code`` in a subprocess with a forced multi-device CPU platform
     (``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
 
     The shared harness behind every multi-device tier-1 test — including the
-    spin-sharded coupling tier's exact-parity test, which needs a real
-    D ≥ 2 mesh rather than a pod. Asserts the subprocess exits cleanly and
-    returns its stdout.
+    spin-sharded coupling tier's exact-parity tests, which need a real
+    D ≥ 2 mesh rather than a pod. ``mesh_shape`` (e.g. ``(4,)`` or
+    ``(2, 2)``) overrides ``n_devices`` with the shape's device count and
+    prepends :func:`device_mesh_code`, so the test body starts with ``mesh``
+    already bound — the 1-D and 2-D sharded cases drive one harness.
+    Asserts the subprocess exits cleanly and returns its stdout.
     """
+    if mesh_shape is not None:
+        n_devices = math.prod(tuple(int(s) for s in mesh_shape))
+        code = (device_mesh_code(mesh_shape, axis_names)
+                + textwrap.dedent(code))
     proc = run_forced_device_subprocess(code, n_devices=n_devices,
                                         timeout=timeout)
     assert proc.returncode == 0, f"subprocess failed:\n{proc.stderr[-4000:]}"
@@ -30,7 +67,8 @@ def run_with_forced_devices(code: str, n_devices: int = 8,
 @pytest.fixture(scope="session")
 def forced_device_mesh():
     """Fixture handle on :func:`run_with_forced_devices` — request it to run
-    a test body on a forced multi-device CPU mesh."""
+    a test body on a forced multi-device CPU mesh (optionally with a
+    pre-built 1-D or 2-D ``mesh`` via ``mesh_shape=``)."""
     return run_with_forced_devices
 
 

@@ -120,7 +120,8 @@ def resilient_subprocess_code(*, run_dir: str, seed: int = 5, n: int = 256,
                               num_replicas: int = 4,
                               kill_after_chunk: int | None = None,
                               expect_resumed_from: int | None = None,
-                              n_devices: int = 2) -> str:
+                              n_devices: int = 2,
+                              mesh_shape: tuple | None = None) -> str:
     """Source for a forced-``n_devices`` subprocess that drives the
     spin-sharded tier through ``run_resilient`` on a deterministic problem.
 
@@ -130,7 +131,23 @@ def resilient_subprocess_code(*, run_dir: str, seed: int = 5, n: int = 256,
     ``RESULT <json>`` holding the solve digest (best energies / spin sums /
     trace) plus ``resumed_from`` — the parent compares digests between an
     uninterrupted run and a killed-then-resumed pair for bit-identity.
+
+    ``mesh_shape`` switches the mesh layout: None keeps the classic 1-D
+    ``("spins",)`` mesh over ``n_devices``; a multi-element shape (e.g.
+    ``(2, 2)``) builds the 2-D (groups, rows) mesh and drives the
+    ``bitplane_sharded_2d`` tier — the caller must force
+    ``prod(mesh_shape)`` devices.
     """
+    if mesh_shape is not None and len(mesh_shape) > 1:
+        n_devices = 1
+        for s in mesh_shape:
+            n_devices *= int(s)
+        mesh_line = (f"mesh = Mesh(np.array(jax.devices())"
+                     f".reshape({tuple(mesh_shape)!r}), ('groups', 'rows'))")
+        fmt = "bitplane_sharded_2d"
+    else:
+        mesh_line = 'mesh = Mesh(np.array(jax.devices()), ("spins",))'
+        fmt = "bitplane_sharded"
     kill = ("\n"
             f"def _ev(kind, info):\n"
             f"    if kind == 'snapshot' and info['chunk'] == {kill_after_chunk}:\n"
@@ -154,11 +171,11 @@ J = np.clip(np.rint(g.normal(size=(n, n)) * 1.5), -3, 3)
 J = np.triu(J, 1); J = J + J.T
 h = g.normal(size=(n,)).astype(np.float32)
 problem = ising.IsingProblem.create(J, h, offset=0.5)
-mesh = Mesh(np.array(jax.devices()), ("spins",))
+{mesh_line}
 cfg = SolverConfig(num_steps={num_steps},
                    schedule=schedules.linear(3.0, 0.1, {num_steps}),
                    num_replicas={num_replicas}, trace_every={trace_every},
-                   coupling_format="bitplane_sharded")
+                   coupling_format="{fmt}")
 {kill}
 res = run_resilient(problem, {seed}, cfg, run_dir={run_dir!r}, mesh=mesh,
                     on_event=_ev)

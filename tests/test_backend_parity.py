@@ -454,7 +454,8 @@ def test_coupling_store_build_is_the_single_dispatch_point():
 
     J = _sym(8, 64, integer=True, scale=2.0)
     assert cs.COUPLING_FORMATS == ("auto", "dense", "bitplane",
-                                   "bitplane_hbm", "bitplane_sharded")
+                                   "bitplane_hbm", "bitplane_sharded",
+                                   "bitplane_sharded_2d")
     assert cs.KERNEL_COUPLING_MODES == ("dense", "bitplane", "bitplane_hbm")
     dense = cs.CouplingStore.build(jnp.asarray(J), "dense")
     assert dense.fmt == "dense" and dense.planes is None

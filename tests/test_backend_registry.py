@@ -42,7 +42,7 @@ REPLICAS = 4
 #: parametrized parity tests below pick it up from backend_names()); a
 #: removed one must be deliberately deleted here.
 EXPECTED = ("colored", "distributed", "fused", "reference", "sharded",
-            "tempering")
+            "sharded_2d", "tempering")
 
 
 def _problem():
@@ -82,7 +82,12 @@ def _setup(name):
         cfg = _scfg()
     caps = get_backend(name).capabilities
     mesh = None
-    if caps.needs_mesh:
+    if name == "sharded_2d":
+        # A degenerate (1, 1) groups×rows mesh still runs the full 2-D code
+        # path (group-scoped specs, replica-block slicing) on one device.
+        mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                    ("groups", "rows"))
+    elif caps.needs_mesh:
         axis = "spins" if name == "sharded" else "data"
         mesh = Mesh(np.array(jax.devices()[:1]), (axis,))
     return cfg, mesh
@@ -145,6 +150,9 @@ class TestRoster:
         assert not caps["colored"].needs_mesh
         assert caps["sharded"].needs_mesh
         assert caps["sharded"].fixed_fmt == "bitplane_sharded"
+        assert caps["sharded_2d"].needs_mesh
+        assert caps["sharded_2d"].fixed_fmt == "bitplane_sharded_2d"
+        assert not caps["sharded_2d"].auto  # explicit-only: 1-D wins "auto"
         assert caps["distributed"].needs_mesh
         assert caps["tempering"].tier_fallback
         for c in caps.values():
@@ -160,6 +168,10 @@ class TestRoster:
         assert resolve_backend(dcfg, mesh=dmesh) == "distributed"
         cfg, mesh = _setup("sharded")
         assert resolve_backend(cfg, mesh=mesh) == "sharded"
+        # A 2-D mesh still auto-resolves to "sharded" (its driver serves
+        # multi-axis meshes natively); "sharded_2d" is the explicit name.
+        cfg2, mesh2 = _setup("sharded_2d")
+        assert resolve_backend(cfg2, mesh=mesh2) == "sharded"
         with pytest.raises(TypeError, match="unrecognized config"):
             resolve_backend(object())
 

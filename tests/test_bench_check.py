@@ -144,6 +144,79 @@ def test_check_flags_broken_sharded_points():
                for e in check_bench_history(broken))
 
 
+def test_committed_history_has_sharded_2d_point():
+    """The 2-D mesh tier is anchored too: the N=16384 2x2 cell must exist
+    with byte-identical 1-D/2-D best energies, per-device plane bytes equal
+    to total/rows (capacity scales with the rows axis, groups replicate),
+    and both layouts' throughput recorded in the same run."""
+    payload = _load()
+    results = payload["results"]
+    assert "N16384_sharded_2d" in results, sorted(results)
+    cell = results["N16384_sharded_2d"]["rsa"]
+    assert cell["num_groups"] >= 2 and cell["rows_per_group"] >= 2
+    assert cell["num_devices"] == cell["num_groups"] * cell["rows_per_group"]
+    assert (cell["plane_bytes_per_device_2d"] * cell["rows_per_group"]
+            == cell["plane_bytes_total"])
+    assert (cell["plane_bytes_per_device_1d"] * cell["num_devices"]
+            == cell["plane_bytes_total"])
+    assert cell["plane_bytes_per_device_2d"] < cell["plane_bytes_total"]
+    assert cell["best_energy_1d"] == cell["best_energy_2d"]
+    assert cell["us_per_step_1d"] > 0 and cell["us_per_step_2d"] > 0
+    assert cell["replica_steps_per_sec_2d"] > 0
+    # One packed store, two accountings: the plain sharded cell at the same
+    # N must record the identical total.
+    assert (cell["plane_bytes_total"]
+            == results["N16384_sharded"]["rsa"]["plane_bytes_total"])
+
+
+def test_check_flags_broken_sharded_2d_points():
+    """--check knows the 2-D schema: a rows split that does not divide the
+    store, energies that diverge between layouts, a degenerate 1-axis
+    'mesh', a total disagreeing with the plain sharded cell, and missing
+    columns all fail the gate."""
+    from benchmarks.run import check_sharded_2d_points
+
+    good = {
+        "N16384_sharded": {"rsa": {"plane_bytes_total": 1000}},
+        "N16384_sharded_2d": {"rsa": {
+            "num_devices": 4, "num_groups": 2, "rows_per_group": 2,
+            "plane_bytes_total": 1000, "plane_bytes_per_device_1d": 250,
+            "plane_bytes_per_device_2d": 500,
+            "us_per_step_1d": 4.0, "us_per_step_2d": 3.0,
+            "replica_steps_per_sec_1d": 10.0,
+            "replica_steps_per_sec_2d": 19.0,
+            "best_energy_1d": [-5.0, -4.0], "best_energy_2d": [-5.0, -4.0]}},
+    }
+    assert check_sharded_2d_points(good) == []
+    uneven = copy.deepcopy(good)
+    uneven["N16384_sharded_2d"]["rsa"]["plane_bytes_per_device_2d"] = 400
+    assert any("rows axis must divide the store" in e
+               for e in check_sharded_2d_points(uneven))
+    diverged = copy.deepcopy(good)
+    diverged["N16384_sharded_2d"]["rsa"]["best_energy_2d"] = [-5.0, -3.0]
+    assert any("byte-identical" in e
+               for e in check_sharded_2d_points(diverged))
+    degenerate = copy.deepcopy(good)
+    degenerate["N16384_sharded_2d"]["rsa"].update(
+        num_groups=1, num_devices=2, plane_bytes_per_device_1d=500)
+    assert any("degenerates to 1-D" in e
+               for e in check_sharded_2d_points(degenerate))
+    mismatched = copy.deepcopy(good)
+    mismatched["N16384_sharded"]["rsa"]["plane_bytes_total"] = 800
+    assert any("same packed store" in e
+               for e in check_sharded_2d_points(mismatched))
+    incomplete = {"N16384_sharded_2d": {"rsa": {"num_devices": 4}}}
+    assert any("needs integer" in e
+               for e in check_sharded_2d_points(incomplete))
+    # ...and the full checker routes through the same validation.
+    payload = _load()
+    broken = copy.deepcopy(payload)
+    broken["history"][-1]["results"].update(copy.deepcopy(uneven))
+    broken["results"] = broken["history"][-1]["results"]
+    assert any("rows axis must divide the store" in e
+               for e in check_bench_history(broken))
+
+
 def test_committed_history_has_sparse_ingest_point():
     """The dense-J-free ingestion anchor: the N=16384 sparse-ingest cell must
     exist, its sparse setup must undercut the recorded dense detour, and its

@@ -1,0 +1,136 @@
+"""Property tests for ``ops.anneal_chunk_plan`` and the per-chunk RNG
+stream — the two invariants every chunked driver leans on:
+
+* **coverage** — the (chunk_len, num_chunks, rem_steps) plan accounts for
+  exactly ``num_steps`` untraced, and exactly ``num_chunks·trace_every``
+  traced (the documented trace cadence, shared with the reference scan);
+* **stream purity** — the chunk key ``stream(base(seed), Salt.SWEEP, c)``
+  is a pure function of (seed, chunk index): distinct across chunks,
+  reproducible from scratch, independent of evaluation order.
+
+Resume parity (a freshly built runner continuing mid-run) and the 2-D
+sharded path (every group re-deriving its replica block from the full-R
+stream) are both downstream of these — see DESIGN.md §Resilient solves.
+
+Randomized sweeps over a seeded generator rather than hypothesis (not in
+the environment): the case set is deterministic, wide, and printed on
+failure.
+"""
+import numpy as np
+
+import jax
+
+from repro.core import rng, schedules
+from repro.core.solver import SolverConfig
+from repro.kernels import ops
+
+
+def _cfg(num_steps: int, trace_every: int) -> SolverConfig:
+    return SolverConfig(num_steps=num_steps,
+                        schedule=schedules.linear(3.0, 0.1, num_steps),
+                        num_replicas=2, trace_every=trace_every)
+
+
+def _cases(seed, n, *, traced):
+    g = np.random.default_rng(seed)
+    for _ in range(n):
+        num_steps = int(g.integers(1, 5000))
+        chunk_steps = int(g.integers(1, 700))
+        trace_every = int(g.integers(1, 400)) if traced else 0
+        yield num_steps, chunk_steps, trace_every
+
+
+def test_untraced_chunks_exactly_cover_num_steps():
+    """Untraced plans partition num_steps exactly: full chunks plus one
+    remainder sweep strictly shorter than a chunk."""
+    for num_steps, chunk_steps, _ in _cases(0, 300, traced=False):
+        cl, nc, rem = ops.anneal_chunk_plan(_cfg(num_steps, 0), chunk_steps)
+        case = f"num_steps={num_steps} chunk_steps={chunk_steps} -> {cl, nc, rem}"
+        assert cl * nc + rem == num_steps, case
+        assert 1 <= cl <= max(min(chunk_steps, num_steps), 1), case
+        assert nc >= 1 and 0 <= rem < cl, case
+
+
+def test_traced_chunks_follow_trace_cadence():
+    """Traced plans pin chunk_len to trace_every with no remainder — the
+    trace records at every chunk end, identically to the reference scan
+    (total steps = num_chunks·trace_every by that shared contract)."""
+    for num_steps, chunk_steps, trace_every in _cases(1, 300, traced=True):
+        cfg = _cfg(num_steps, trace_every)
+        cl, nc, rem = ops.anneal_chunk_plan(cfg, chunk_steps)
+        case = (f"num_steps={num_steps} chunk_steps={chunk_steps} "
+                f"trace_every={trace_every} -> {cl, nc, rem}")
+        assert cl == trace_every and rem == 0, case
+        assert nc == max(num_steps // trace_every, 1), case
+        # chunk_steps is a perf knob for untraced runs only.
+        assert ops.anneal_chunk_plan(cfg, chunk_steps * 2 + 1) == (cl, nc, rem)
+
+
+def test_plan_is_deterministic_and_total_units_consistent():
+    """Same config -> same plan, and the runner-facing unit count
+    (num_chunks + remainder unit) covers every step exactly once."""
+    for num_steps, chunk_steps, trace_every in _cases(2, 200, traced=False):
+        cfg = _cfg(num_steps, trace_every)
+        plan = ops.anneal_chunk_plan(cfg, chunk_steps)
+        assert plan == ops.anneal_chunk_plan(cfg, chunk_steps)
+        cl, nc, rem = plan
+        unit_lens = [cl] * nc + ([rem] if rem else [])
+        assert sum(unit_lens) == num_steps
+
+
+def _chunk_key(seed: int, c: int) -> np.ndarray:
+    """The exact per-chunk key derivation every chunked driver uses
+    (``_fused_chunk`` / ``_colored_chunk`` / ``_sharded_chunk_inputs``):
+    base = fold_in(key(0), seed); chunk key = stream(base, SWEEP, c)."""
+    base = jax.random.fold_in(jax.random.key(0), np.uint32(seed))
+    return np.asarray(jax.random.key_data(
+        rng.stream(base, rng.Salt.SWEEP, c)))
+
+
+def test_chunk_keys_distinct_across_chunks_and_seeds():
+    """No two (seed, chunk) pairs share a SWEEP key across a wide sweep —
+    chunk uniforms never repeat within or across runs."""
+    keys = np.stack([_chunk_key(seed, c)
+                     for seed in (0, 1, 5, 2**31, 2**32 - 1)
+                     for c in range(64)])
+    assert len(np.unique(keys, axis=0)) == len(keys)
+
+
+def test_chunk_keys_are_pure_functions_of_seed_and_index():
+    """Key(seed, c) recomputed from scratch is bit-identical, and never
+    depends on which other chunks were derived first — the property that
+    lets a resumed run (or a 2-D group slicing its replica block) rebuild
+    chunk c's uniforms without replaying chunks 0..c-1."""
+    g = np.random.default_rng(3)
+    for _ in range(50):
+        seed = int(g.integers(0, 2**32))
+        c = int(g.integers(0, 10_000))
+        first = _chunk_key(seed, c)
+        np.testing.assert_array_equal(first, _chunk_key(seed, c))
+        # Deriving unrelated chunks in between must not perturb it.
+        _chunk_key(seed, c + 1), _chunk_key(seed + 1, c)
+        np.testing.assert_array_equal(first, _chunk_key(seed, c))
+
+
+def test_chunk_uniforms_match_contiguous_stream_slices():
+    """Drawing chunk c's uniforms in isolation reproduces exactly what a
+    monolithic run drew for those steps: the fused scan, the resilient
+    runner, and every sharded group (full-R draw, block slice) all read
+    the same numbers for chunk c regardless of who computes them."""
+    r = 4
+    for seed in (0, 11):
+        per_chunk = [
+            np.asarray(rng.uniform01(
+                jax.random.wrap_key_data(jax.numpy.asarray(
+                    _chunk_key(seed, c))), (8, r, 4)))
+            for c in range(5)]
+        again = [
+            np.asarray(rng.uniform01(
+                jax.random.wrap_key_data(jax.numpy.asarray(
+                    _chunk_key(seed, c))), (8, r, 4)))
+            for c in range(5)]
+        for a, b in zip(per_chunk, again):
+            np.testing.assert_array_equal(a, b)
+        # Distinct chunks draw distinct tensors (same shape, same seed).
+        flat = np.stack([u.ravel() for u in per_chunk])
+        assert len(np.unique(flat, axis=0)) == len(flat)

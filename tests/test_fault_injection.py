@@ -15,8 +15,8 @@ from fault_injection import (KILL_EXIT_CODE, corrupt_snapshot, parse_result,
 pytestmark = pytest.mark.fault
 
 
-def _run(code):
-    proc = run_forced_device_subprocess(code, n_devices=2)
+def _run(code, n_devices=2):
+    proc = run_forced_device_subprocess(code, n_devices=n_devices)
     return proc
 
 
@@ -45,6 +45,27 @@ def test_kill_and_resume_sharded_smoke(tmp_path):
 
     resumed = _digest(_run(resilient_subprocess_code(
         run_dir=killed_dir, expect_resumed_from=2)))
+    assert resumed == clean
+
+
+def test_kill_and_resume_sharded_2d_smoke(tmp_path):
+    """Same kill-at-chunk-boundary drill on the 2-D (groups=2, rows=2)
+    mesh: the bitplane_sharded_2d tier must also resume bit-identically
+    after a hard mid-run death."""
+    clean = _digest(_run(resilient_subprocess_code(
+        run_dir=str(tmp_path / "clean"), mesh_shape=(2, 2)), n_devices=4))
+
+    killed_dir = str(tmp_path / "killed")
+    proc = _run(resilient_subprocess_code(run_dir=killed_dir,
+                                          kill_after_chunk=2,
+                                          mesh_shape=(2, 2)), n_devices=4)
+    assert proc.returncode == KILL_EXIT_CODE, (
+        f"expected injected kill rc={KILL_EXIT_CODE}, got "
+        f"{proc.returncode}\nstdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
+
+    resumed = _digest(_run(resilient_subprocess_code(
+        run_dir=killed_dir, expect_resumed_from=2, mesh_shape=(2, 2)),
+        n_devices=4))
     assert resumed == clean
 
 

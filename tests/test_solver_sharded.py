@@ -1,12 +1,17 @@
-"""Spin-sharded coupling tier (`bitplane_sharded`): four-way exact parity.
+"""Spin-sharded coupling tiers (`bitplane_sharded` / `_2d`): six-way parity.
 
 The row-sharded plane store is a memory-*placement* choice, never a chain
 change: `solve_sharded` on a D-device mesh must return bit-identical
 `SolveResult`s to `solve(backend="fused")` under every single-device coupling
 tier — dense, VMEM bit-planes, and HBM-streamed planes — on the same
-seed/config. The D=2 cases run in a forced-device-count subprocess (via the
-shared conftest harness) so the parity tier runs in tier-1 on this CPU box
-rather than only on real pods; the D=1 mesh cases run in-process.
+seed/config; and the 2-D (replica groups × rows) mesh must match them all
+again (dense == bitplane == bitplane_hbm == bitplane_sharded ==
+sharded-from-edges == sharded_2d), including a chunked+checkpointed
+`run_resilient` drive of the 2-D path. The multi-device cases run in a
+forced-device-count subprocess (via the shared conftest harness, which also
+pre-builds 2-D meshes from a `mesh_shape`) so the parity tier runs in tier-1
+on this CPU box rather than only on real pods; the D=1 mesh cases run
+in-process.
 """
 import dataclasses
 
@@ -31,21 +36,29 @@ def _int_problem(seed, n, amax=3):
     return ising.IsingProblem.create(J=J + J.T)
 
 
-def test_four_way_coupling_parity_on_two_device_mesh(forced_device_mesh):
-    """dense == bitplane == bitplane_hbm == bitplane_sharded (D=2), exactly,
-    across RWA / uniformized-RWA / RSA — the acceptance gate of the sharded
-    tier. Runs every config in one subprocess to amortize the jax start."""
+def test_six_way_coupling_parity_on_2x2_mesh(forced_device_mesh):
+    """dense == bitplane == bitplane_hbm == bitplane_sharded (1-D, D=4) ==
+    sharded-from-edges == sharded_2d (2×2 groups×rows), exactly, across
+    RWA / uniformized-RWA / RSA — the acceptance gate of both sharded
+    tiers. The 2-D cell also replays chunked + checkpointed through
+    ``run_resilient(backend="sharded_2d")`` bit-identically. Runs every
+    config in one subprocess to amortize the jax start; the conftest
+    harness pre-builds the 2×2 ``mesh``."""
     out = forced_device_mesh("""
-        import dataclasses
+        import dataclasses, tempfile
         import jax, numpy as np, jax.numpy as jnp
         from jax.sharding import Mesh
         from repro.core import ising
         from repro.core.ising import EdgeList
         from repro.core.schedules import geometric
         from repro.core.solver import SolverConfig, solve
+        from repro.core.resilience import run_resilient
         from repro.distributed.solver_sharded import solve_sharded
 
-        assert jax.device_count() == 2
+        assert jax.device_count() == 4
+        mesh_2d = mesh                      # (groups=2, rows=2) from conftest
+        assert tuple(mesh_2d.axis_names) == ("groups", "rows")
+        mesh_1d = Mesh(np.array(jax.devices()), ("spins",))
         n = 512
         g = np.random.default_rng(11)
         J = np.clip(np.rint(g.normal(size=(n, n)) * 1.5), -3, 3)
@@ -57,7 +70,6 @@ def test_four_way_coupling_parity_on_two_device_mesh(forced_device_mesh):
         # u0/e0 plane-natively on the shard — trajectories must STILL be
         # bit-identical to every dense-ingested tier.
         prob_edges = ising.IsingProblem.create_sparse(EdgeList.from_dense(J))
-        mesh = Mesh(np.array(jax.devices()), ("spins",))
         fields = ("best_energy", "best_spins", "final_energy", "num_flips",
                   "trace_energy")
         for mode, uniformized in (("rwa", False), ("rwa", True), ("rsa", False)):
@@ -68,22 +80,37 @@ def test_four_way_coupling_parity_on_two_device_mesh(forced_device_mesh):
                                   dataclasses.replace(cfg, coupling_format=fmt),
                                   backend="fused")
                        for fmt in ("dense", "bitplane", "bitplane_hbm")}
-            results["bitplane_sharded"] = solve_sharded(prob, 5, cfg, mesh)
+            results["bitplane_sharded"] = solve_sharded(prob, 5, cfg, mesh_1d)
             results["bitplane_sharded_edges"] = solve_sharded(
-                prob_edges, 5, cfg, mesh)
+                prob_edges, 5, cfg, mesh_1d)
+            results["bitplane_sharded_2d"] = solve_sharded(prob, 5, cfg,
+                                                           mesh_2d)
             base = results["dense"]
             for fmt in ("bitplane", "bitplane_hbm", "bitplane_sharded",
-                        "bitplane_sharded_edges"):
+                        "bitplane_sharded_edges", "bitplane_sharded_2d"):
                 for name in fields:
                     np.testing.assert_array_equal(
                         np.asarray(getattr(base, name)),
                         np.asarray(getattr(results[fmt], name)),
                         err_msg=f"{mode}/u{uniformized}/{fmt}:{name}")
             print("PARITY", mode, uniformized,
-                  float(jnp.min(results["bitplane_sharded"].best_energy)))
-        print("FOUR-WAY OK")
-    """, n_devices=2)
-    assert "FOUR-WAY OK" in out
+                  float(jnp.min(results["bitplane_sharded_2d"].best_energy)))
+        # Chunked + checkpointed resilient drive of the 2-D path: the same
+        # trajectory, bit for bit, through run_resilient's snapshot loop.
+        cfg = SolverConfig(num_steps=96, schedule=geometric(4.0, 0.05, 96),
+                           mode="rwa", num_replicas=4, trace_every=24)
+        with tempfile.TemporaryDirectory() as run_dir:
+            res = run_resilient(prob, 5, cfg, run_dir, backend="sharded_2d",
+                                mesh=mesh_2d, chunk_steps=24)
+        mono = solve_sharded(prob, 5, cfg, mesh_2d)
+        for name in fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(mono, name)),
+                np.asarray(getattr(res.result, name)),
+                err_msg=f"resilient:{name}")
+        print("SIX-WAY OK")
+    """, mesh_shape=(2, 2))
+    assert "SIX-WAY OK" in out
 
 
 def test_sharded_step_emits_collectives_but_no_dot_general(forced_device_mesh):
@@ -130,6 +157,57 @@ def test_sharded_step_emits_collectives_but_no_dot_general(forced_device_mesh):
         print("JAXPR PIN OK")
     """, n_devices=2)
     assert "JAXPR PIN OK" in out
+
+
+def test_sharded_2d_step_collectives_are_group_scoped(forced_device_mesh):
+    """The 2-D jaxpr pin: on a (groups, rows) mesh every hot-path collective
+    in the *step* (``sharded_sweep_fn``) must be scoped to the group's rows
+    sub-axis — ``psum`` / ``all_gather`` name ``'rows'`` and never
+    ``'groups'`` (no cross-group traffic per step; groups touch the grid
+    only at init and result gather) — and no ``dot_general`` may appear on
+    either mesh axis."""
+    out = forced_device_mesh("""
+        import re
+        import jax, numpy as np, jax.numpy as jnp
+        from repro.core.coupling import CouplingStore
+        from repro.core.schedules import geometric
+        from repro.core.solver import SolverConfig
+        from repro.distributed.solver_sharded import (sharded_anneal_fn,
+                                                      sharded_sweep_fn)
+
+        n, r, steps = 512, 4, 6
+        g = np.random.default_rng(3)
+        J = np.clip(np.rint(g.normal(size=(n, n)) * 1.5), -3, 3)
+        J = np.triu(J, 1)
+        store = CouplingStore.build(J + J.T, "bitplane_sharded_2d")
+        cfg = SolverConfig(num_steps=48, schedule=geometric(4.0, 0.05, 48),
+                           mode="rwa", num_replicas=r, trace_every=24)
+        step = sharded_sweep_fn(cfg, mesh, n)
+        txt = str(jax.make_jaxpr(step)(
+            store.planes, jnp.zeros((r, n), jnp.float32),
+            jnp.ones((r, n), jnp.float32), jnp.zeros((r,), jnp.float32),
+            jnp.zeros((steps, r, 4), jnp.float32),
+            jnp.ones((steps, r), jnp.float32)))
+        # Match the quoted axis names inside each collective's params —
+        # 'groups' the axis, not the axis_index_groups=None param name.
+        colls = re.findall(r"(?:psum|all_gather)\\[[^\\]]*\\]", txt)
+        assert colls, "the 2-D step must move data with collectives"
+        for c in colls:
+            assert "'rows'" in c, f"collective not rows-scoped: {c}"
+            assert "'groups'" not in c, f"cross-group collective on hot path: {c}"
+        assert "dot_general" not in txt, "no quadratic contraction in the step"
+        # The full 2-D anneal (init inside) is group-scoped on the hot
+        # path too — its only 'groups' use is the axis_index that places
+        # each group's replica block, never a collective.
+        fn = sharded_anneal_fn(cfg, mesh, n)
+        txt = str(jax.make_jaxpr(fn)(
+            store.planes, jnp.zeros((n,), jnp.float32),
+            jnp.zeros((1,), jnp.uint32)))
+        colls = re.findall(r"(?:psum|all_gather)\\[[^\\]]*\\]", txt)
+        assert colls and all("'groups'" not in c for c in colls)
+        print("JAXPR 2D PIN OK")
+    """, mesh_shape=(2, 2))
+    assert "JAXPR 2D PIN OK" in out
 
 
 def test_sharded_matches_fused_on_single_device_mesh():
@@ -211,3 +289,74 @@ def test_sharded_driver_validates_inputs():
     frac = ising.IsingProblem.create(J=J + J.T)
     with pytest.raises(ValueError, match="integer"):
         solve_sharded(frac, 0, cfg, mesh)
+    # The 2-D format name demands a mesh that actually has group axes.
+    with pytest.raises(ValueError, match="bitplane_sharded_2d"):
+        solve_sharded(
+            prob, 0,
+            dataclasses.replace(cfg, coupling_format="bitplane_sharded_2d"),
+            mesh)
+
+
+def test_sharded_divisibility_errors_are_actionable(forced_device_mesh):
+    """Satellite bugfix: an N that does not split over the row axis used to
+    be a silent assumption; now both the 1-D and 2-D paths (dense and
+    edge-ingested alike) raise an error naming N, the mesh shape, and the
+    nearest valid row-shard counts, and a replica count that does not split
+    over the groups names the valid group counts."""
+    out = forced_device_mesh("""
+        import dataclasses
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.core import ising
+        from repro.core.ising import EdgeList
+        from repro.core.schedules import geometric
+        from repro.core.solver import SolverConfig
+        from repro.distributed.solver_sharded import (
+            nearest_row_shard_counts, shard_planes_from_edges, solve_sharded)
+
+        mesh_2d = mesh                     # (groups=2, rows=2) from conftest
+        mesh_1d = Mesh(np.array(jax.devices()), ("spins",))
+        cfg = SolverConfig(num_steps=8, schedule=geometric(1.0, 0.1, 8),
+                           num_replicas=4)
+
+        def expect(fn, *needles):
+            try:
+                fn()
+            except ValueError as e:
+                for needle in needles:
+                    assert needle in str(e), (needle, str(e))
+            else:
+                raise AssertionError("no ValueError raised")
+
+        def prob_of(n):
+            g = np.random.default_rng(0)
+            J = np.clip(np.rint(g.normal(size=(n, n))), -3, 3)
+            J = np.triu(J, 1)
+            return ising.IsingProblem.create(J=J + J.T)
+
+        # 1-D: N=513 does not split over the 4 row shards; the error names
+        # N, the mesh shape, and the nearest valid shard counts.
+        p = prob_of(513)
+        expect(lambda: solve_sharded(p, 0, cfg, mesh_1d),
+               "N=513", "(spins=4)", "nearest valid row-shard counts",
+               "(3, 1, 9)")
+        # 2-D: the rows (last) axis is what must divide.
+        expect(lambda: solve_sharded(p, 0, cfg, mesh_2d),
+               "N=513", "(groups=2, rows=2)", "'rows'",
+               "nearest valid row-shard counts")
+        # Divides, but breaks the selection-block (lane) alignment: N=192
+        # over 4 row shards is 48 per shard vs lane 96.
+        expect(lambda: solve_sharded(prob_of(192), 0, cfg, mesh_1d),
+               "roulette", "lane 96", "(2, 1)")
+        # The edge-ingestion (dense-J-free) path raises the same error.
+        edges = EdgeList.from_dense(np.asarray(jax.device_get(p.couplings)))
+        expect(lambda: shard_planes_from_edges(edges, mesh_1d),
+               "N=513", "(spins=4)", "nearest valid")
+        # Replica blocks must split over the groups too.
+        cfg3 = dataclasses.replace(cfg, num_replicas=3)
+        expect(lambda: solve_sharded(prob_of(512), 0, cfg3, mesh_2d),
+               "num_replicas=3", "(groups=2, rows=2)", "divisible by 2")
+        assert nearest_row_shard_counts(513, 4) == (3, 1, 9)
+        print("DIVISIBILITY OK")
+    """, mesh_shape=(2, 2))
+    assert "DIVISIBILITY OK" in out
